@@ -1,0 +1,86 @@
+"""Shared micro-scale training harness for the paper-table benchmarks.
+
+The paper's Tables 3-5 compare algorithm variants by downstream accuracy
+after full training runs; the CPU-container analog trains the reduced
+ViT-B/32-family CLIP on synthetic class-structured data and reports
+retrieval accuracy on held-out pairs + per-step wall time.  Relative
+orderings (cosine gamma > constant, v3 strong, AdamW best) are the claims
+under test; see EXPERIMENTS.md §Claims.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import fastclip as FC
+from repro.core import train_step as TS
+from repro.core.schedules import lr_warmup_cosine
+from repro.data import ContrastiveDataset, ShardedLoader
+from repro.optim import get_optimizer
+
+N_SAMPLES = 1024
+GLOBAL_BATCH = 128
+N_CLASSES = 256
+EVAL_BATCH = 256
+
+
+def build(version="v3", optimizer="adamw", lr=2e-3, gamma=0.6,
+          gamma_min=0.2, steps=120, seed=0, rho=6.5, n=N_SAMPLES,
+          wd=0.1, gamma_schedule="auto"):
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    ds = ContrastiveDataset(n=n, image_size=cfg.clip.image_size,
+                            context_length=cfg.clip.context_length,
+                            vocab_size=cfg.vocab_size, n_classes=N_CLASSES,
+                            noise=0.5, seed=seed)
+    loader = ShardedLoader(ds, global_batch=GLOBAL_BATCH, seed=seed)
+    fc = FC.FastCLIPConfig(
+        version=version, n_samples=n, rho=rho, gamma=gamma,
+        gamma_min=gamma_min, gamma_schedule=gamma_schedule,
+        tau_init=0.07 if version == "v3" else 0.03,
+        lr_tau=2e-4 if version == "v3" else 1e-2,
+        steps_per_epoch=loader.steps_per_epoch,
+        gamma_decay_epochs=max(1, steps // (2 * loader.steps_per_epoch)))
+    tc = TS.TrainStepConfig(
+        arch=cfg, fc=fc, optimizer=get_optimizer(optimizer),
+        lr_fn=lr_warmup_cosine(lr, 8, steps), wd=wd)
+    return cfg, ds, loader, tc
+
+
+def train_and_eval(version="v3", optimizer="adamw", steps=120, seed=0,
+                   **kw):
+    cfg, ds, loader, tc = build(version=version, optimizer=optimizer,
+                                steps=steps, seed=seed, **kw)
+    state = TS.init_train_state(jax.random.PRNGKey(seed), tc)
+    step_fn = jax.jit(TS.make_train_step(tc))
+    eval_idx = np.arange(EVAL_BATCH)
+    eval_batch = {k: jnp.asarray(v) for k, v in ds.batch(eval_idx).items()}
+
+    def evaluate(st):
+        return float(TS.retrieval_accuracy(st["params"], cfg, eval_batch,
+                                           classes=ds.classes[eval_idx]))
+
+    t_total, n_timed = 0.0, 0
+    every = max(steps // 10, 1)
+    curve = []
+    for epoch, step, idx, batch in loader.steps(steps):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        state, m = step_fn(state, batch, jnp.asarray(idx))
+        jax.block_until_ready(m["loss"])
+        if step > 2:                      # skip compile steps
+            t_total += time.perf_counter() - t0
+            n_timed += 1
+        if (step + 1) % every == 0:       # accuracy curve (paper Fig. 1)
+            curve.append(evaluate(state))
+    return {
+        "acc": curve[-1],
+        "auc": float(np.mean(curve)),     # convergence-speed summary
+        "curve": [round(c, 4) for c in curve],
+        "loss": float(m["loss"]),
+        "tau": float(m["tau"]),
+        "us_per_step": 1e6 * t_total / max(n_timed, 1),
+    }

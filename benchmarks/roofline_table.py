@@ -1,0 +1,42 @@
+"""Deliverable (g): the roofline table from the dry-run JSONs
+(experiments/dryrun/*.json).  One row per (arch x shape), single-pod."""
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def model_flops(d, shape_kind):
+    """6*N*D (dense) / 6*N_active*D (MoE) per device, for the ratio column."""
+    n = d["active_params"]
+    chips = d["chips"]
+    if shape_kind == "train":
+        tokens = 256 * 4096
+        return 6 * n * tokens / chips
+    if shape_kind == "prefill":
+        return 2 * n * 32 * 32768 / chips
+    # decode: one token
+    bsz = 128 if "decode_32k" in d["shape"] else 1
+    return 2 * n * bsz / chips
+
+
+def run(steps=None, seed=None):
+    rows = []
+    for fp in sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
+                                            "*16x16.json"))):
+        d = json.load(open(fp))
+        if d["mesh"] != "16x16":
+            continue
+        kind = ("train" if "train" in d["shape"]
+                else "prefill" if "prefill" in d["shape"] else "decode")
+        mf = model_flops(d, kind)
+        ratio = mf / max(d["flops_per_device"], 1)
+        r = d["roofline"]
+        rows.append((
+            f"roofline/{d['arch']}/{d['shape']}", 0.0,
+            f"bottleneck={r['bottleneck']};compute_s={r['compute_s']:.4f};"
+            f"memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};"
+            f"useful_flops_ratio={ratio:.3f}"))
+    return rows

@@ -1,0 +1,57 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every row maps to a paper table/figure.
+
+    table3_inner_lr   -> Table 3 (gamma schedule)
+    table4_temperature-> Table 4 (tau update rules v0-v3)
+    table5_optimizer  -> Table 5 (AdamW/LAMB/Lion/SGDM)
+    fig3_comm         -> Fig. 3 (communication bytes of the reductions)
+    scaling_model     -> Fig. 4 / Tables 15-16 (scaling time model)
+    kernel_bench      -> loss-layer micro-bench
+    roofline_table    -> deliverable (g) table from the dry-run sweep
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
+"""
+import argparse
+import re
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer train steps per table")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    steps = 40 if args.quick else 120
+
+    from benchmarks import (fig3_comm, kernel_bench, roofline_table,
+                            scaling_model, table3_inner_lr,
+                            table4_temperature, table5_optimizer)
+    benches = [
+        ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
+        ("table4_temperature", lambda: table4_temperature.run(steps=steps)),
+        ("table5_optimizer", lambda: table5_optimizer.run(steps=steps)),
+        ("fig3_comm", fig3_comm.run),
+        ("scaling_model", scaling_model.run),
+        ("kernel_bench", kernel_bench.run),
+        ("roofline_table", roofline_table.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and not re.search(args.only, name):
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness robust
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            continue
+        for rname, us, derived in rows:
+            print(f"{rname},{us:.1f},{derived}")
+        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

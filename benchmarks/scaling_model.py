@@ -1,0 +1,40 @@
+"""Paper Fig. 3/4 + Tables 15-16 analog: per-iteration time model across
+node counts, from measured HLO collective bytes + the roofline constants.
+
+t_iter(K) = max(compute_term, memory_term) + collective_term(K)
+
+compute/memory are per-device and K-independent (fixed per-GPU batch, as
+in the paper); the collective term scales with the gathered global batch
+K*b*d.  Reports the modeled FastCLIP-vs-OpenCLIP gap vs K — the dry-run
+analog of the paper's observation that FastCLIP wins at 4-8 nodes.
+"""
+from repro.roofline.analysis import ICI_BW
+
+# measured per-loss-call collective bytes at K workers (from fig3_comm at
+# K=8, b=128, d=512, f32): forward gathers 2*K*b*d*4 bytes; OpenCLIP adds
+# the backward feature-grad reduce-scatter of the same size; FastCLIP adds
+# only O(K*b) scalars.
+B_LOCAL = 128
+DIM = 512
+
+
+def loss_comm_bytes(K, reduction):
+    feat = 2 * K * B_LOCAL * DIM * 4 * (K - 1) / K      # fwd all-gathers
+    if reduction == "fastclip":
+        scal = 5 * K * B_LOCAL * 4 * (K - 1) / K        # s_ii, w1, w2, taus
+        return feat + scal
+    return 2 * feat                                      # + bwd RS
+
+
+def run(steps=None, seed=None):
+    rows = []
+    # per-device compute time of the towers is K-independent; use the
+    # medium-setting estimate: ViT-B/32 fwd+bwd ~ 3*2*88e6*(49+77 tokens)
+    tower_s = 3 * 2 * 88e6 * 126 * B_LOCAL / 197e12
+    for K in (4, 8, 16, 32):
+        t_fc = tower_s + loss_comm_bytes(K, "fastclip") / ICI_BW
+        t_oc = tower_s + loss_comm_bytes(K, "allgather_ad") / ICI_BW
+        rows.append((f"scaling/K={K}", t_fc * 1e6,
+                     f"fastclip_s={t_fc:.5f};openclip_s={t_oc:.5f};"
+                     f"speedup={t_oc / t_fc:.3f}x"))
+    return rows

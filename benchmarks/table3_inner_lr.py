@@ -1,0 +1,27 @@
+"""Paper Table 3: constant vs cosine inner-LR (gamma) schedule.
+
+Three pairs, each differing ONLY in the gamma schedule:
+    SogCLR        vs FastCLIP-v1
+    iSogCLR       vs FastCLIP-v2
+    v3 (Const.)   vs FastCLIP-v3
+Claim under test: cosine gamma beats constant gamma on each pair.
+"""
+from benchmarks.common import train_and_eval
+
+PAIRS = [("sogclr", "v1"), ("isogclr", "v2"), ("v3", "v3")]
+
+
+def run(steps=120, seed=0):
+    rows = []
+    for const_v, cos_v in PAIRS:
+        r_const = train_and_eval(const_v, steps=steps, seed=seed, gamma=0.6,
+                                 gamma_schedule="constant")
+        r_cos = train_and_eval(cos_v, steps=steps, seed=seed, gamma_min=0.2,
+                               gamma_schedule="cosine")
+        tag = "v3(Const)" if const_v == cos_v else const_v
+        rows.append((f"table3/{tag}", r_const["us_per_step"],
+                     f"acc={r_const['acc']:.4f}"))
+        rows.append((f"table3/{cos_v}(cosine)", r_cos["us_per_step"],
+                     f"acc={r_cos['acc']:.4f};improvement="
+                     f"{r_cos['acc'] - r_const['acc']:+.4f}"))
+    return rows

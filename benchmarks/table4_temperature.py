@@ -1,0 +1,13 @@
+"""Paper Table 4: the four temperature-update rules (FastCLIP-v0..v3).
+Claim under test: v3 (RGCL-g, global learnable tau) is the strongest
+overall; all four are close at small scale."""
+from benchmarks.common import train_and_eval
+
+
+def run(steps=120, seed=0):
+    rows = []
+    for v in ("v0", "v1", "v2", "v3"):
+        r = train_and_eval(v, steps=steps, seed=seed)
+        rows.append((f"table4/fastclip-{v}", r["us_per_step"],
+                     f"acc={r['acc']:.4f};tau={r['tau']:.4f}"))
+    return rows

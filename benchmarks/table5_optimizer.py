@@ -1,0 +1,21 @@
+"""Paper Table 5: optimizer comparison on FastCLIP-v3 (AdamW / LAMB /
+Lion / SGDM).  Claim under test: AdamW best on most metrics.
+Learning rates follow the paper's tuned ratios (App. B Table 10)."""
+from benchmarks.common import train_and_eval
+
+# paper-tuned lr/wd ratios, scaled to the micro setting
+SETTINGS = {
+    "adamw": dict(lr=2e-3, wd=0.1),
+    "lamb": dict(lr=4e-3, wd=0.1),
+    "lion": dict(lr=4e-4, wd=0.3),
+    "sgdm": dict(lr=2.0, wd=3e-6),
+}
+
+
+def run(steps=120, seed=0):
+    rows = []
+    for opt, kw in SETTINGS.items():
+        r = train_and_eval("v3", optimizer=opt, steps=steps, seed=seed, **kw)
+        rows.append((f"table5/{opt}", r["us_per_step"],
+                     f"acc={r['acc']:.4f};loss={r['loss']:.4f}"))
+    return rows

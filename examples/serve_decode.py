@@ -1,0 +1,23 @@
+"""Serving example (deliverable b): batched autoregressive decode with the
+KV-cache / SSM-state serve path, on two different architecture families.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("qwen3-1.7b", "zamba2-1.2b"):
+        print(f"=== {arch} (reduced) ===")
+        serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "12", "--gen", "24"])
+
+
+if __name__ == "__main__":
+    main()

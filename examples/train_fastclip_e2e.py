@@ -1,0 +1,60 @@
+"""End-to-end training driver (deliverable b): trains a CLIP model for a
+few hundred steps with checkpointing + resume + eval, via the production
+launcher.  Default is a ~15M-param tower pair sized for CPU; pass
+--hundred-m for the ~100M-param ViT-B/32-class run (slow on CPU).
+
+    PYTHONPATH=src python examples/train_fastclip_e2e.py [--hundred-m]
+        [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import dataclasses
+
+from repro.configs import get_arch
+from repro.configs.base import CLIPConfig
+from repro.launch import train as TR
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hundred-m", action="store_true",
+                    help="full ViT-B/32 towers (~150M params)")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/fastclip_e2e")
+    args = ap.parse_args()
+
+    if args.hundred_m:
+        arch = "clip-vitb32-cc12m"
+        argv = ["--arch", arch, "--steps", str(args.steps),
+                "--global-batch", "32", "--n-samples", "1024",
+                "--version", "v3", "--lr", "4e-4",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100"]
+    else:
+        # register a mid-size variant: ViT-S/16-ish towers, ~15M params
+        from repro.configs.base import register
+        base = get_arch("clip-vitb32-cc12m")
+        mid = base.replace(
+            name="clip-mid",
+            n_layers=4, d_model=256, n_heads=4, n_kv_heads=4, d_ff=1024,
+            vocab_size=2048,
+            clip=dataclasses.replace(base.clip, image_size=64, patch_size=8,
+                                     vision_layers=4, vision_width=256,
+                                     vision_heads=4, embed_dim=256,
+                                     context_length=32))
+        register(mid)
+        argv = ["--arch", "clip-mid", "--steps", str(args.steps),
+                "--global-batch", "64", "--n-samples", "2048",
+                "--version", "v3", "--lr", "1e-3",
+                "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100"]
+    TR.main(argv)
+    print(f"checkpoints in {args.ckpt_dir}; resume with --resume via "
+          f"repro.launch.train")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Paper-claims validation runs (Tables 3/4/5 analogs), 3 seeds each.
+Writes experiments/claims.json.  ~30-45 min on CPU."""
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from benchmarks.common import train_and_eval  # noqa: E402
+
+STEPS = 150
+SEEDS = [0, 1]
+
+RUNS = {
+    # Table 3: constant vs cosine gamma, three pairs
+    "t3/sogclr": dict(version="sogclr", gamma=0.6, gamma_schedule="constant"),
+    "t3/v1": dict(version="v1", gamma_min=0.2, gamma_schedule="cosine"),
+    "t3/isogclr": dict(version="isogclr", gamma=0.6,
+                       gamma_schedule="constant"),
+    "t3/v2": dict(version="v2", gamma_min=0.2, gamma_schedule="cosine"),
+    "t3/v3const": dict(version="v3", gamma=0.6, gamma_schedule="constant"),
+    "t3/v3": dict(version="v3", gamma_min=0.2, gamma_schedule="cosine"),
+    # Table 4: temperature rules (v1/v2/v3 shared with t3 but rerun for
+    # uniform settings)
+    "t4/v0": dict(version="v0"),
+    "t4/v1": dict(version="v1"),
+    "t4/v2": dict(version="v2"),
+    "t4/v3": dict(version="v3"),
+    # Table 5: optimizers on v3
+    "t5/adamw": dict(version="v3", optimizer="adamw", lr=2e-3, wd=0.1),
+    "t5/lamb": dict(version="v3", optimizer="lamb", lr=4e-3, wd=0.1),
+    "t5/lion": dict(version="v3", optimizer="lion", lr=4e-4, wd=0.3),
+    "t5/sgdm": dict(version="v3", optimizer="sgdm", lr=2.0, wd=3e-6),
+    # scaling comparison: FastCLIP-v3 vs OpenCLIP at equal steps
+    "scale/openclip": dict(version="openclip"),
+    "scale/v3": dict(version="v3"),
+}
+
+
+def main():
+    out_path = os.path.join(ROOT, "experiments", "claims.json")
+    results = {}
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    for name, kw in RUNS.items():
+        for seed in SEEDS:
+            key = f"{name}/seed{seed}"
+            if key in results:
+                continue
+            t0 = time.time()
+            r = train_and_eval(steps=STEPS, seed=seed, **kw)
+            r["wall_s"] = round(time.time() - t0, 1)
+            results[key] = r
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+            print(f"{key:24s} acc={r['acc']:.4f} auc={r['auc']:.4f} "
+                  f"({r['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

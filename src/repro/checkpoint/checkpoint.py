@@ -1,0 +1,77 @@
+"""Checkpointing: full TrainState pytrees to .npz + structure json.
+
+No orbax in the container; this is a self-contained, deterministic format:
+leaves are flattened with their key paths, saved in one compressed npz,
+structure (paths + a user metadata dict) in a sidecar json.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(directory: str, tree: Any, step: int,
+         metadata: Optional[Dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    order = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        arrays[key] = np.asarray(leaf)
+        order.append(key)
+    path_npz = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    np.savez_compressed(path_npz, **arrays)
+    meta = {"step": step, "order": order, "metadata": metadata or {}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(directory, "latest"), "w") as f:
+        f.write(str(step))
+    return path_npz
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "latest")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(directory: str, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
+        meta = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = data[key]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree_like), leaves)
+    return tree, step, meta["metadata"]

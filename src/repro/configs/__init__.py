@@ -1,0 +1,4 @@
+from repro.configs.base import (  # noqa: F401
+    ArchConfig, CLIPConfig, InputShape, INPUT_SHAPES, ASSIGNED_ARCHS,
+    get_arch, list_archs,
+)

@@ -1,0 +1,225 @@
+"""Architecture / run configuration system.
+
+Every assigned architecture gets one module in this package defining an
+``ArchConfig`` with the exact published numbers (source cited in
+``source``) and registering it under its public id.  ``reduced()`` returns
+the CPU-smoke variant of the same family (<=2 layers, d_model<=512,
+<=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff: int = 0                  # per-expert hidden size
+    every: int = 1                 # MoE layer every `every` layers
+    shared_expert: bool = False    # additional always-on expert
+    capacity_factor: float = 1.25
+    router_z_coef: float = 1e-3    # router z-loss (load-balance aux built in)
+    aux_coef: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 0            # N (per-channel state)
+    head_dim: int = 64             # P
+    expand: int = 2                # d_inner = expand * d_model
+    chunk: int = 256               # chunkwise SSD chunk length
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class CLIPConfig:
+    """Two-tower CLIP settings (paper Table 2)."""
+    vision_arch: str = "vit"       # "vit" | "resnet"
+    image_size: int = 224
+    patch_size: int = 32           # vit only
+    vision_layers: int = 12
+    vision_width: int = 768
+    vision_heads: int = 12
+    embed_dim: int = 512           # joint embedding dim
+    context_length: int = 77       # text tower context
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio | clip
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # sliding-window attention (used for long-context decode of dense archs)
+    sliding_window: int = 0        # 0 = full attention
+    # MoE / SSM / hybrid extras
+    moe: MoEConfig = MoEConfig()
+    ssm: SSMConfig = SSMConfig()
+    # xlstm: pattern of block kinds, cycled over layers ("m" = mLSTM, "s" = sLSTM)
+    xlstm_pattern: str = ""
+    # zamba2: shared attention block applied every `hybrid_attn_every` layers
+    hybrid_attn_every: int = 0
+    # vlm: cross-attention layer inserted every `cross_attn_every` layers
+    cross_attn_every: int = 0
+    n_image_tokens: int = 0
+    vision_dim: int = 0
+    # audio (encoder-decoder)
+    enc_layers: int = 0            # >0 => encoder-decoder model
+    audio_subsample: int = 4       # encoder frames = seq_len // subsample
+    # CLIP two-tower (family == "clip"): the paper's own settings
+    clip: Optional["CLIPConfig"] = None
+    # citation
+    source: str = ""
+    notes: str = ""
+
+    # ----- derived -----
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.enc_layers > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, 256)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (approximate; matches init exactly)."""
+        from repro.models.backbones import count_params_analytic
+        return count_params_analytic(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.backbones import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant of the same family."""
+        kw = dict(
+            n_layers=2,
+            d_model=min(self.d_model, 256),
+            n_heads=min(self.n_heads, 4),
+            n_kv_heads=min(self.n_kv_heads, 2),
+            head_dim=64 if self.head_dim else 0,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+        )
+        if self.moe.n_experts:
+            kw["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                d_ff=min(self.moe.d_ff, 128))
+        if self.ssm.state_size:
+            kw["ssm"] = dataclasses.replace(
+                self.ssm, state_size=min(self.ssm.state_size, 16),
+                head_dim=32, chunk=16)
+        if self.enc_layers:
+            kw["enc_layers"] = 1
+            kw["n_layers"] = 2  # 1 enc + 1 dec
+        if self.cross_attn_every:
+            kw["cross_attn_every"] = 2
+            kw["n_image_tokens"] = 16
+            kw["vision_dim"] = min(self.vision_dim, 64)
+        if self.hybrid_attn_every:
+            kw["hybrid_attn_every"] = 2
+            kw["n_layers"] = 2
+        if self.xlstm_pattern:
+            kw["n_layers"] = 2
+        if self.clip is not None:
+            kw["clip"] = dataclasses.replace(
+                self.clip, image_size=32, patch_size=8, vision_layers=2,
+                vision_width=128, vision_heads=4, embed_dim=64,
+                context_length=16)
+        return self.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ArchConfig] = {}
+
+_ARCH_MODULES = [
+    "qwen3_1p7b", "xlstm_125m", "granite_3_8b", "yi_6b",
+    "seamless_m4t_large_v2", "llama4_scout_17b_a16e", "llama_3_2_vision_11b",
+    "zamba2_1p2b", "qwen3_moe_30b_a3b", "qwen1p5_32b",
+    "clip_rn50_cc3m", "clip_vitb32_cc12m", "clip_vitb16_laion",
+]
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def load_all() -> None:
+    for mod in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_arch(name: str) -> ArchConfig:
+    if not _REGISTRY:
+        load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    if not _REGISTRY:
+        load_all()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED_ARCHS = [
+    "qwen3-1.7b", "xlstm-125m", "granite-3-8b", "yi-6b",
+    "seamless-m4t-large-v2", "llama4-scout-17b-a16e", "llama-3.2-vision-11b",
+    "zamba2-1.2b", "qwen3-moe-30b-a3b", "qwen1.5-32b",
+]

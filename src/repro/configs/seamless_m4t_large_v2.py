@@ -1,0 +1,25 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, multimodal.  [arXiv:2308.11596]
+
+Backbone carve-out: the transformer only.  The conformer speech frontend
+(mel-spectrogram + conv subsampling) is a stub — ``input_specs`` provides
+precomputed frame embeddings of shape (batch, seq//subsample, d_model).
+The assigned "24L" is split 12 encoder + 12 decoder (symmetric text-to-text
+backbone split; see DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ArchConfig, register
+
+SEAMLESS_M4T_LARGE_V2 = register(ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=12,                 # decoder layers
+    enc_layers=12,               # encoder layers (total 24 per assignment)
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256_206,
+    audio_subsample=4,
+    source="[arXiv:2308.11596]",
+    notes="Encoder consumes stub frame embeddings; decoder is a standard "
+          "transformer decoder with cross-attention to encoder output.",
+))

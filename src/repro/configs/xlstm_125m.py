@@ -1,0 +1,20 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks.  [arXiv:2405.04517]"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+XLSTM_125M = register(ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,                       # xLSTM blocks carry their own up/down proj
+    vocab_size=50_304,
+    # xLSTM[7:1] style pattern cycled over the 12 layers: mostly mLSTM with
+    # interspersed sLSTM blocks (arXiv:2405.04517 Table 9).
+    xlstm_pattern="mmmsmmmsmmms",
+    ssm=SSMConfig(state_size=0, head_dim=192, expand=2, chunk=64),
+    source="[arXiv:2405.04517]",
+    notes="mLSTM = matrix-memory linear attention (chunkwise); sLSTM = "
+          "sequential scalar-memory recurrence with exponential gating.",
+))

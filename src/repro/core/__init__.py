@@ -1,0 +1,5 @@
+from repro.core.fastclip import (  # noqa: F401
+    VERSIONS, FastCLIPConfig, batch_taus, init_state, objective,
+    tau_gradient, tau_update, scatter_u,
+)
+from repro.core import losses, distributed, schedules  # noqa: F401

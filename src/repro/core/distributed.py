@@ -1,0 +1,218 @@
+"""Distributed FastCLIP: the paper's communication-efficient gradient
+reduction (Section 4 / Appendix A), expressed as a ``jax.custom_vjp`` used
+inside ``shard_map`` over the data axis.
+
+Two reductions are implemented for the same objective:
+
+``reduction="fastclip"``
+    Forward ALL_GATHERs the normalized features (unavoidable: the loss
+    contrasts against the global batch, same cost as OpenCLIP's forward)
+    plus O(K|B|) *scalars* (s_ii, the FCCO weights w = tau/(eps+u), taus).
+    The backward computes the gradient w.r.t. the *local* features in
+    closed form from the saved gathered tensors — it emits **no collective
+    on feature gradients**.  This is the paper's replacement of OpenCLIP's
+    O(K|B|d) REDUCE_SCATTER with an O(K|B|) scalar ALL_GATHER.
+
+``reduction="allgather_ad"``
+    The same surrogate differentiated straight through ``all_gather``.
+    XLA's transpose of all_gather is a psum-scatter of the full
+    (B_global, d) feature-gradient — exactly the OpenCLIP/DDP communication
+    pattern the paper improves on.  Kept as the measurable baseline
+    (benchmarks/comm_cost.py counts collective bytes of both HLOs).
+
+Gradient math (Appendix A, both sides, per-row taus):
+    L = (1/B) sum_i [w1_i g1_i + w2_i g2_i]
+    A1[i,j] = w1_i h1[i,j] / tau1_i (0 on diag);  A2 likewise
+    dL/de1_p = 1/(B(B-1)) [ sum_j A1[p,j](e2_j - e2_p)
+                            + sum_i A2[i,p] e2_i - (sum_j A2[p,j]) e2_p ]
+    dL/de2_p = 1/(B(B-1)) [ sum_j A2[p,j](e1_j - e1_p)
+                            + sum_i A1[i,p] e1_i - (sum_j A1[p,j]) e1_p ]
+Every term for local p needs only local rows of h, the gathered features
+(forward residuals) and gathered scalars.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as LS
+
+sg = jax.lax.stop_gradient
+
+
+def _gather(x, axes):
+    for ax in axes:
+        x = jax.lax.all_gather(x, ax, tiled=True)
+    return x
+
+
+def _psum(x, axes):
+    return jax.lax.psum(x, axes)
+
+
+def _global_index(axes):
+    """Flattened shard index over possibly-multiple mesh axes."""
+    idx = 0
+    for ax in axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def _axis_prod(axes):
+    out = 1
+    for ax in axes:
+        out *= jax.lax.axis_size(ax)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The communication-efficient op
+# ---------------------------------------------------------------------------
+
+def make_fastclip_pair_loss(axes: Sequence[str]):
+    """Returns f(e1n, e2n, w1, w2, t1, t2) -> (loss, (g1, g2, dg1, dg2))
+    for use *inside* shard_map.  e1n/e2n: (b, d) normalized local features;
+    w1/w2: (b,) stop-grad FCCO weights; t1/t2: (b,) taus.  loss is the
+    global surrogate (replicated).  The row stats are returned for the u
+    and tau updates (stop-grad)."""
+    axes = tuple(axes)
+
+    @jax.custom_vjp
+    def pair_loss(e1, e2, w1, w2, t1, t2):
+        loss, stats, _ = _fwd_compute(e1, e2, w1, w2, t1, t2)
+        return loss, tuple(stats)
+
+    def _fwd_compute(e1, e2, w1, w2, t1, t2):
+        b = e1.shape[0]
+        K = _axis_prod(axes)
+        B = b * K
+        off = _global_index(axes) * b
+        e1a = _gather(e1, axes)                 # (B, d)  feature gather
+        e2a = _gather(e2, axes)
+        sd = jnp.sum(e1 * e2, axis=-1)          # (b,) local s_ii
+        stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
+        local = jnp.sum(w1 * stats.g1 + w2 * stats.g2)
+        loss = _psum(local, axes) / B
+        res = (e1, e2, e1a, e2a, sd, w1, w2, t1, t2, off)
+        return loss, stats, res
+
+    def fwd(e1, e2, w1, w2, t1, t2):
+        loss, stats, res = _fwd_compute(e1, e2, w1, w2, t1, t2)
+        # gather the scalars for the backward (the O(K|B|) communication)
+        e1_, e2_, e1a, e2a, sd, w1_, w2_, t1_, t2_, off = res
+        sda = _gather(sd, axes)
+        w1a = _gather(w1, axes)
+        w2a = _gather(w2, axes)
+        t1a = _gather(t1 * jnp.ones_like(sd), axes)
+        t2a = _gather(t2 * jnp.ones_like(sd), axes)
+        return (loss, tuple(stats)), \
+            (e1_, e2_, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off)
+
+    def bwd(res, cts):
+        ct, _ = cts   # stats are stop-grad outputs; ignore their cotangents
+        e1, e2, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off = res
+        b, d = e1.shape
+        B = e1a.shape[0]
+        rows = off + jnp.arange(b)
+        cols = jnp.arange(B)
+        offdiag = (cols[None, :] != rows[:, None]).astype(jnp.float32)
+        w1 = jax.lax.dynamic_slice_in_dim(w1a, off, b)
+        w2 = jax.lax.dynamic_slice_in_dim(w2a, off, b)
+        t1 = jax.lax.dynamic_slice_in_dim(t1a, off, b)
+        t2 = jax.lax.dynamic_slice_in_dim(t2a, off, b)
+        kappa = ct / (B * (B - 1.0))
+
+        # local rows of A1, A2: (b, B)
+        s1 = jnp.einsum("bd,Bd->bB", e1, e2a,
+                        preferred_element_type=jnp.float32)
+        s2 = jnp.einsum("bd,Bd->bB", e2, e1a,
+                        preferred_element_type=jnp.float32)
+        A1r = (w1 / t1)[:, None] * jnp.exp((s1 - sd[:, None]) / t1[:, None]) \
+            * offdiag
+        A2r = (w2 / t2)[:, None] * jnp.exp((s2 - sd[:, None]) / t2[:, None]) \
+            * offdiag
+        # local columns: M1[p, i] = A1[i, p] (anchors i global, col p local)
+        # A1[i, p] = w1_i/t1_i exp((e1_i.e2_p - sd_i)/t1_i)
+        c1 = jnp.einsum("bd,Bd->bB", e2, e1a,
+                        preferred_element_type=jnp.float32)   # e1_i . e2_p
+        c2 = jnp.einsum("bd,Bd->bB", e1, e2a,
+                        preferred_element_type=jnp.float32)   # e2_i . e1_p
+        M1 = (w1a / t1a)[None, :] * jnp.exp((c1 - sda[None, :]) / t1a[None, :]) \
+            * offdiag
+        M2 = (w2a / t2a)[None, :] * jnp.exp((c2 - sda[None, :]) / t2a[None, :]) \
+            * offdiag
+
+        de1 = (jnp.einsum("bB,Bd->bd", A1r, e2a)
+               - jnp.sum(A1r, axis=1, keepdims=True) * e2
+               + jnp.einsum("bB,Bd->bd", M2, e2a)
+               - jnp.sum(A2r, axis=1, keepdims=True) * e2)
+        de2 = (jnp.einsum("bB,Bd->bd", A2r, e1a)
+               - jnp.sum(A2r, axis=1, keepdims=True) * e1
+               + jnp.einsum("bB,Bd->bd", M1, e1a)
+               - jnp.sum(A1r, axis=1, keepdims=True) * e1)
+        de1 = (kappa * de1).astype(e1.dtype)
+        de2 = (kappa * de2).astype(e2.dtype)
+        z = jnp.zeros_like(sd)
+        return de1, de2, z, z, z, z
+
+    pair_loss.defvjp(fwd, bwd)
+
+    def with_stats(e1, e2, w1, w2, t1, t2):
+        # make every arg axis-varying (w derives from the sharded u state;
+        # broadcast taus against it) so the custom-vjp in/out types match.
+        ones = jnp.ones_like(w1)
+        loss, stats = pair_loss(e1, e2, w1, w2, t1 * ones, t2 * ones)
+        return loss, LS.RowStats(*jax.tree.map(sg, stats))
+
+    return with_stats
+
+
+# ---------------------------------------------------------------------------
+# OpenCLIP-style baseline reduction: autodiff through all_gather
+# ---------------------------------------------------------------------------
+
+def make_allgather_ad_pair_loss(axes: Sequence[str]):
+    axes = tuple(axes)
+
+    def with_stats(e1, e2, w1, w2, t1, t2):
+        b = e1.shape[0]
+        B = b * _axis_prod(axes)
+        off = _global_index(axes) * b
+        e1a = _gather(e1, axes)     # differentiated: bwd = psum-scatter
+        e2a = _gather(e2, axes)     # of (B, d) feature grads (DDP-style)
+        stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
+        local = jnp.sum(sg(w1) * stats.g1 + sg(w2) * stats.g2)
+        loss = _psum(local, axes) / B
+        return loss, jax.tree.map(sg, stats)
+
+    return with_stats
+
+
+def make_mbcl_loss(axes: Sequence[str]):
+    """OpenCLIP objective (MBCL), gathered features, autodiff comms."""
+    axes = tuple(axes)
+
+    def loss_fn(e1, e2, tau):
+        b = e1.shape[0]
+        off = _global_index(axes) * b
+        e1a = _gather(e1, axes)
+        e2a = _gather(e2, axes)
+        B = e1a.shape[0]
+        # image->text: local image rows vs all texts
+        s1 = jnp.einsum("bd,Bd->bB", e1, e2a,
+                        preferred_element_type=jnp.float32) / tau
+        # text->image: local text rows vs all images
+        s2 = jnp.einsum("bd,Bd->bB", e2, e1a,
+                        preferred_element_type=jnp.float32) / tau
+        labels = off + jnp.arange(b)
+        def ce(s):
+            logz = jax.nn.logsumexp(s, axis=1)
+            gold = jnp.take_along_axis(s, labels[:, None], axis=1)[:, 0]
+            return jnp.sum(logz - gold)
+        local = 0.5 * (ce(s1) + ce(s2))
+        return _psum(local, axes) / B
+
+    return loss_fn

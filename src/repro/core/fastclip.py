@@ -1,0 +1,220 @@
+"""The FastCLIP algorithm family (paper Table 1):
+
+  version    loss     FCCO   gamma     temperature
+  openclip   MBCL     no     n/a       global, learnable (autodiff)
+  sogclr     GCL      yes    constant  global, constant
+  isogclr    RGCL     yes    constant  individualized, learnable (eq. 9)
+  v0         GCL      yes    cosine    global, learnable (eq. 8, unscaled)
+  v1         GCL      yes    cosine    global, constant
+  v2         RGCL     yes    cosine    individualized, learnable (eq. 9)
+  v3         RGCL-g   yes    cosine    global, learnable (eq. 10)
+
+This module owns the per-sample FCCO state (u1, u2), the temperature
+parameters and their optimizer moments, and produces (a) the differentiable
+surrogate objective whose gradient is the paper's estimator and (b) the
+closed-form temperature gradients.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses as LS
+from repro.core import schedules as SCH
+
+sg = jax.lax.stop_gradient
+
+VERSIONS = ("openclip", "sogclr", "isogclr", "v0", "v1", "v2", "v3")
+
+
+@dataclasses.dataclass(frozen=True)
+class FastCLIPConfig:
+    version: str = "v3"
+    n_samples: int = 0                 # dataset size (u buffers)
+    eps: float = 1e-14                 # (1e-6 for xlarge, App. D)
+    rho: float = 8.5
+    tau_init: float = 0.07
+    tau_min: float = 0.01              # tau_0 lower bound
+    lr_tau: float = 1e-4
+    tau_lr_decay_at: float = 0.03      # v3: lr_tau /= 3 once tau < this
+    # gamma (inner LR) schedule
+    gamma: float = 0.6                 # constant-schedule value
+    gamma_min: float = 0.2             # cosine-schedule floor
+    gamma_decay_epochs: int = 16
+    steps_per_epoch: int = 1000
+    gamma_schedule: str = "auto"       # auto | constant | cosine (ablations)
+    # tau optimizer (AdamW with wd=0, per paper Proc. 5)
+    tau_beta1: float = 0.9
+    tau_beta2: float = 0.999
+    tau_adam_eps: float = 1e-8
+
+    @property
+    def uses_fcco(self) -> bool:
+        return self.version != "openclip"
+
+    @property
+    def individual_tau(self) -> bool:
+        return self.version in ("isogclr", "v2")
+
+    @property
+    def learnable_tau(self) -> bool:
+        return self.version in ("openclip", "isogclr", "v0", "v2", "v3")
+
+    @property
+    def scale_by_tau(self) -> bool:
+        # v0 optimizes the unscaled GCL (no leading tau on the estimator)
+        return self.version != "v0"
+
+    def gamma_fn(self):
+        if self.version == "openclip":
+            return SCH.gamma_constant(1.0)   # no history (paper §4)
+        sched = self.gamma_schedule
+        if sched == "auto":
+            sched = ("constant" if self.version in ("sogclr", "isogclr")
+                     else "cosine")
+        if sched == "constant":
+            return SCH.gamma_constant(self.gamma)
+        return SCH.gamma_cosine(self.gamma_min, self.steps_per_epoch,
+                                self.gamma_decay_epochs)
+
+
+def init_state(fc: FastCLIPConfig):
+    """FCCO + temperature state.  u sharded by sample in the distributed
+    setting (see repro.core.distributed)."""
+    n = max(fc.n_samples, 1)
+    st = {"step": jnp.zeros((), jnp.int32)}
+    if fc.uses_fcco:
+        st["u1"] = jnp.zeros((n,), jnp.float32)
+        st["u2"] = jnp.zeros((n,), jnp.float32)
+    if fc.individual_tau:
+        st["tau1"] = jnp.full((n,), fc.tau_init, jnp.float32)
+        st["tau2"] = jnp.full((n,), fc.tau_init, jnp.float32)
+        z = jnp.zeros((n,), jnp.float32)
+        st["tau_opt"] = {"m1": z, "v1": z, "m2": z, "v2": z,
+                         "t": jnp.zeros((), jnp.int32)}
+    else:
+        st["tau"] = jnp.asarray(fc.tau_init, jnp.float32)
+        if fc.learnable_tau:
+            st["tau_opt"] = {"m": jnp.zeros(()), "v": jnp.zeros(()),
+                             "t": jnp.zeros((), jnp.int32)}
+    return st
+
+
+def batch_taus(fc: FastCLIPConfig, state, idx):
+    """Per-row temperatures for batch indices ``idx`` (or scalars)."""
+    if fc.individual_tau:
+        return state["tau1"][idx], state["tau2"][idx]
+    return state["tau"], state["tau"]
+
+
+# ---------------------------------------------------------------------------
+# Objective (differentiable wrt embeddings; openclip also wrt tau)
+# ---------------------------------------------------------------------------
+
+def objective(fc: FastCLIPConfig, e1, e2, u1_rows, u2_rows, tau1, tau2,
+              gamma):
+    """Single-device (global-batch view).  Returns (loss_surrogate, aux).
+    aux carries u updates and the stop-grad stats for the tau update."""
+    if fc.version == "openclip":
+        e1n, e2n = LS.l2_normalize(e1), LS.l2_normalize(e2)
+        loss = LS.mbcl_loss(e1n, e2n, tau1)
+        return loss, {"g1": None}
+    loss, aux = LS.fcco_reference_step(
+        e1, e2, u1_rows, u2_rows, tau1, tau2, gamma, fc.eps,
+        scale_by_tau=fc.scale_by_tau)
+    return loss, aux
+
+
+def loss_value(fc: FastCLIPConfig, aux, tau1, tau2, mbcl=None):
+    """The reported (batch-estimated) loss value for logging."""
+    v = fc.version
+    if v == "openclip":
+        return mbcl
+    u1, u2 = aux["u1_new"], aux["u2_new"]
+    if v in ("sogclr", "v0", "v1"):
+        return LS.gcl_value(u1, u2, jnp.mean(tau1 * jnp.ones_like(u1)), fc.eps)
+    if v in ("isogclr", "v2"):
+        return LS.rgcl_value(u1, u2, tau1, tau2, fc.eps, fc.rho)
+    return LS.rgcl_g_value(u1, u2, tau1, fc.eps, fc.rho)
+
+
+# ---------------------------------------------------------------------------
+# Temperature gradients (paper eqs. 8-10) and update (Proc. 4/5)
+# ---------------------------------------------------------------------------
+
+def tau_gradient(fc: FastCLIPConfig, aux, tau1, tau2):
+    """Closed-form tau gradients from the row stats in ``aux`` (all
+    stop-grad).  Returns scalar for global tau, per-row pair for v2."""
+    eps = fc.eps
+    u1, u2 = aux["u1_new"], aux["u2_new"]
+    dg1, dg2 = aux["dg1_dtau"], aux["dg2_dtau"]
+    v = fc.version
+    if v == "v0":                                    # eq. (8)
+        return jnp.mean(dg1 / (eps + u1) + dg2 / (eps + u2))
+    if v in ("isogclr", "v2"):                       # eq. (9), per-row
+        g_t1 = jnp.log(eps + u1) + fc.rho + tau1 * dg1 / (eps + u1)
+        g_t2 = jnp.log(eps + u2) + fc.rho + tau2 * dg2 / (eps + u2)
+        return g_t1, g_t2
+    if v == "v3":                                    # eq. (10)
+        return (jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2)) + 2 * fc.rho
+                + tau1 * jnp.mean(dg1 / (eps + u1) + dg2 / (eps + u2)))
+    return None                                      # constant tau
+
+
+def _adam_scalar(fc, g, m, v, t):
+    b1, b2, ae = fc.tau_beta1, fc.tau_beta2, fc.tau_adam_eps
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    tf = t.astype(jnp.float32)
+    mh = m / (1 - b1 ** tf)
+    vh = v / (1 - b2 ** tf)
+    return mh / (jnp.sqrt(vh) + ae), m, v
+
+
+def tau_update(fc: FastCLIPConfig, state, tau_grad, idx=None):
+    """Apply the temperature update.  For v2/isogclr only rows ``idx`` move
+    (stochastic coordinate update)."""
+    if not fc.learnable_tau or tau_grad is None:
+        return state
+    st = dict(state)
+    opt = dict(st["tau_opt"])
+    t = opt["t"] + 1
+    opt["t"] = t
+    if fc.individual_tau:
+        g1, g2 = tau_grad
+        for side, g in (("1", g1), ("2", g2)):
+            m = opt[f"m{side}"].at[idx].set(
+                fc.tau_beta1 * opt[f"m{side}"][idx]
+                + (1 - fc.tau_beta1) * g)
+            v = opt[f"v{side}"].at[idx].set(
+                fc.tau_beta2 * opt[f"v{side}"][idx]
+                + (1 - fc.tau_beta2) * jnp.square(g))
+            tf = t.astype(jnp.float32)
+            mh = m[idx] / (1 - fc.tau_beta1 ** tf)
+            vh = v[idx] / (1 - fc.tau_beta2 ** tf)
+            step = mh / (jnp.sqrt(vh) + fc.tau_adam_eps)
+            tau = st[f"tau{side}"].at[idx].set(
+                jnp.maximum(st[f"tau{side}"][idx] - fc.lr_tau * step,
+                            fc.tau_min))
+            st[f"tau{side}"] = tau
+            opt[f"m{side}"] = m
+            opt[f"v{side}"] = v
+    else:
+        step, m, v = _adam_scalar(fc, tau_grad, opt["m"], opt["v"], t)
+        lr = jnp.asarray(fc.lr_tau, jnp.float32)
+        if fc.version == "v3":
+            lr = jnp.where(state["tau"] < fc.tau_lr_decay_at, lr / 3.0, lr)
+        st["tau"] = jnp.maximum(state["tau"] - lr * step, fc.tau_min)
+        opt["m"], opt["v"] = m, v
+    st["tau_opt"] = opt
+    return st
+
+
+def scatter_u(state, idx, u1_new_rows, u2_new_rows):
+    st = dict(state)
+    st["u1"] = state["u1"].at[idx].set(u1_new_rows)
+    st["u2"] = state["u2"].at[idx].set(u2_new_rows)
+    return st

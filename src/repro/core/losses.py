@@ -1,0 +1,160 @@
+"""Contrastive losses: MBCL (OpenCLIP baseline), GCL / RGCL / RGCL-g with
+their FCCO (SogCLR-family) gradient estimators.
+
+Notation (paper §3): for a batch of pairs with *normalized* embeddings
+e1 (images) and e2 (texts), s[i, j] = e1_i . e2_j and
+
+    h1[i, j] = exp((s[i, j] - s[i, i]) / tau1_i)      j != i
+    h2[i, j] = exp((s[j, i] - s[i, i]) / tau2_i)      j != i
+    g1_i = mean_{j != i} h1[i, j]      g2_i = mean_{j != i} h2[i, j]
+
+The FCCO estimators u1/u2 track g1/g2 across iterations (eq. 1); the model
+gradient estimator is the gradient of the *surrogate*
+
+    Lsur = (1/B) sum_i  sg(w1_i) g1_i + sg(w2_i) g2_i ,
+    w_i = tau_i / (eps + u_i^{t+1})          (v1/v2/v3/sogclr/isogclr)
+    w_i = 1 / (eps + u_i^{t+1})              (v0: unscaled GCL)
+
+which reproduces eqs. (2)-(7) of the paper under autodiff.  All statistics
+run in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+sg = jax.lax.stop_gradient
+
+
+def l2_normalize(x, axis=-1, eps=1e-8):
+    x = x.astype(jnp.float32)
+    n = jnp.sqrt(jnp.sum(jnp.square(x), axis=axis, keepdims=True))
+    return x / jnp.maximum(n, eps)
+
+
+class RowStats(NamedTuple):
+    g1: jnp.ndarray          # (b,)  differentiable batch estimator, image
+    g2: jnp.ndarray          # (b,)  ... text
+    dg1_dtau: jnp.ndarray    # (b,)  d g1 / d tau1  (stop-grad, for eq. 8/10)
+    dg2_dtau: jnp.ndarray    # (b,)
+
+
+def row_stats(e1_rows, e2_rows, e1_all, e2_all, tau1_rows, tau2_rows,
+              row_offset=0, denom=None) -> RowStats:
+    """Differentiable batch estimators g1/g2 for a block of anchor rows.
+
+    e1_rows/e2_rows: (b, d) embeddings of the local pairs; e1_all/e2_all:
+    (B, d) the full (gathered) batch; tau*_rows: (b,) or scalar.
+    ``row_offset``: global index of local row 0 (diagonal masking).
+    """
+    b, B = e1_rows.shape[0], e2_all.shape[0]
+    denom = float(denom if denom is not None else max(B - 1, 1))
+    cols = jnp.arange(B)
+    rows = row_offset + jnp.arange(b)
+    offdiag = (cols[None, :] != rows[:, None]).astype(jnp.float32)
+    t1 = jnp.broadcast_to(jnp.asarray(tau1_rows, jnp.float32), (b,))
+    t2 = jnp.broadcast_to(jnp.asarray(tau2_rows, jnp.float32), (b,))
+
+    sd = jnp.sum(e1_rows * e2_rows, axis=-1).astype(jnp.float32)   # s_ii
+    s1 = jnp.einsum("bd,Bd->bB", e1_rows, e2_all,
+                    preferred_element_type=jnp.float32)
+    s2 = jnp.einsum("bd,Bd->bB", e2_rows, e1_all,
+                    preferred_element_type=jnp.float32)
+    z1 = (s1 - sd[:, None]) / t1[:, None]
+    z2 = (s2 - sd[:, None]) / t2[:, None]
+    h1 = jnp.exp(z1) * offdiag
+    h2 = jnp.exp(z2) * offdiag
+    g1 = jnp.sum(h1, axis=-1) / denom
+    g2 = jnp.sum(h2, axis=-1) / denom
+    dg1 = jnp.sum(sg(h1) * sg(-(s1 - sd[:, None])), axis=-1) / (
+        denom * t1 ** 2)
+    dg2 = jnp.sum(sg(h2) * sg(-(s2 - sd[:, None])), axis=-1) / (
+        denom * t2 ** 2)
+    return RowStats(g1, g2, dg1, dg2)
+
+
+def update_u(u_old, g_batch, gamma):
+    """FCCO moving-average inner estimator (eq. 1).  Not differentiated."""
+    return (1.0 - gamma) * u_old + gamma * sg(g_batch)
+
+
+def fcco_weights(u1_new, u2_new, tau1, tau2, eps, *, scale_by_tau=True):
+    """w_i = tau_i/(eps+u_i) (or 1/(eps+u_i) for v0)."""
+    t1 = tau1 if scale_by_tau else 1.0
+    t2 = tau2 if scale_by_tau else 1.0
+    return t1 / (eps + u1_new), t2 / (eps + u2_new)
+
+
+def surrogate_loss(stats: RowStats, w1, w2, batch_denom):
+    """Gradient-matched surrogate: (1/B) sum_i sg(w1_i) g1_i + sg(w2_i) g2_i.
+    ``batch_denom``: global batch size B (the local sum is psum-ed by the
+    caller in the distributed setting)."""
+    return jnp.sum(sg(w1) * stats.g1 + sg(w2) * stats.g2) / batch_denom
+
+
+# ---------------------------------------------------------------------------
+# Reported loss values (not used for gradients in the FCCO path)
+# ---------------------------------------------------------------------------
+
+def gcl_value(u1, u2, tau, eps):
+    """(GCL) value with u as the inner-function estimate (mean over rows)."""
+    return tau * jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2))
+
+
+def rgcl_g_value(u1, u2, tau, eps, rho):
+    """(RGCL-g) value."""
+    return (tau * jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2))
+            + 2.0 * rho * tau)
+
+
+def rgcl_value(u1, u2, tau1, tau2, eps, rho):
+    """(RGCL) value (individualized temperatures)."""
+    return jnp.mean(tau1 * (jnp.log(eps + u1) + rho)
+                    + tau2 * (jnp.log(eps + u2) + rho))
+
+
+# ---------------------------------------------------------------------------
+# MBCL: the OpenCLIP mini-batch contrastive loss (baseline)
+# ---------------------------------------------------------------------------
+
+def mbcl_loss(e1, e2, tau):
+    """Bidirectional InfoNCE over the (global) batch.  e1/e2 normalized.
+    Matches (MBCL) up to an additive constant; gradient identical to
+    OpenCLIP's."""
+    B = e1.shape[0]
+    s = jnp.einsum("bd,Bd->bB", e1, e2,
+                   preferred_element_type=jnp.float32) / tau
+    labels = jnp.arange(B)
+    logz1 = jax.nn.logsumexp(s, axis=1)
+    logz2 = jax.nn.logsumexp(s, axis=0)
+    diag = jnp.diagonal(s)
+    return 0.5 * (jnp.mean(logz1 - diag) + jnp.mean(logz2 - diag))
+
+
+# ---------------------------------------------------------------------------
+# Single-device (global view) reference of one full FCCO loss step
+# ---------------------------------------------------------------------------
+
+def fcco_reference_step(e1, e2, u1, u2, tau1, tau2, gamma, eps, *,
+                        scale_by_tau=True):
+    """Oracle used by tests / the Pallas kernel / the distributed path.
+
+    e1/e2: (B, d) *unnormalized*; u1/u2: (B,) current estimators for these
+    rows; tau1/tau2 scalar or (B,).  Returns (surrogate, aux) where
+    aux = dict(u1_new, u2_new, g1, g2, dg1_dtau, dg2_dtau).
+    Differentiate ``surrogate`` wrt e1/e2 to get the FastCLIP estimator.
+    """
+    e1n = l2_normalize(e1)
+    e2n = l2_normalize(e2)
+    stats = row_stats(e1n, e2n, e1n, e2n, tau1, tau2)
+    u1n = update_u(u1, stats.g1, gamma)
+    u2n = update_u(u2, stats.g2, gamma)
+    w1, w2 = fcco_weights(u1n, u2n, tau1, tau2, eps,
+                          scale_by_tau=scale_by_tau)
+    loss = surrogate_loss(stats, w1, w2, e1.shape[0])
+    aux = {"u1_new": u1n, "u2_new": u2n, "g1": sg(stats.g1),
+           "g2": sg(stats.g2), "dg1_dtau": stats.dg1_dtau,
+           "dg2_dtau": stats.dg2_dtau}
+    return loss, aux

@@ -1,0 +1,37 @@
+"""Schedules: the inner LR (gamma) schedules of Section 5 and the model LR
+schedule of Appendix B."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def gamma_constant(gamma_value: float):
+    def fn(step):
+        return jnp.asarray(gamma_value, jnp.float32)
+    return fn
+
+
+def gamma_cosine(gamma_min: float, steps_per_epoch: int, decay_epochs: int):
+    """Paper §5: gamma_t = 0.5 (1 + cos(pi * epoch / E)) (1 - gamma_min)
+    + gamma_min, held constant within an epoch, clamped to gamma_min after
+    E epochs."""
+    def fn(step):
+        epoch = jnp.floor_divide(step, steps_per_epoch).astype(jnp.float32)
+        frac = jnp.minimum(epoch / decay_epochs, 1.0)
+        return (0.5 * (1.0 + jnp.cos(np.pi * frac)) * (1.0 - gamma_min)
+                + gamma_min)
+    return fn
+
+
+def lr_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                     min_lr: float = 0.0):
+    """Appendix B: linear warmup to peak, cosine decay to min_lr."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_lr + 0.5 * (1.0 + jnp.cos(np.pi * frac)) * (peak_lr - min_lr)
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

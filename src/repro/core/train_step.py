@@ -1,0 +1,269 @@
+"""Train-step assembly: model towers + FastCLIP objective + optimizers.
+
+Composition (distributed):
+  - the *model* forward/backward runs under pjit/GSPMD (batch sharded over
+    ('pod','data'), weights per the sharding rules in repro.launch.mesh);
+  - the *contrastive loss* runs in a shard_map island over the batch axes,
+    using either the paper's communication-efficient reduction or the
+    OpenCLIP-style autodiff reduction (repro.core.distributed);
+  - the FCCO u state (and v2's individual temperatures) are sharded by
+    sample ownership and updated shard-locally.
+
+``mesh_axes=None`` gives the single-device reference semantics used by unit
+tests and the CPU-scale experiments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import distributed as D
+from repro.core import fastclip as FC
+from repro.core import losses as LS
+from repro.models import backbones as BB
+from repro.optim import Optimizer, clip_by_global_norm
+
+sg = jax.lax.stop_gradient
+
+
+# ---------------------------------------------------------------------------
+# Loss core: (normalized embeddings, fc state pieces) -> loss + aux
+# ---------------------------------------------------------------------------
+
+def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
+                   reduction: str = "fastclip"):
+    """Returns loss_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma)
+    -> (loss, aux) with aux = {u1_new, u2_new (full arrays), tau stats}.
+    Inputs e1n/e2n are the *normalized* global-batch embeddings (sharded
+    over mesh_axes in the distributed case); u1/u2 the full (n,) state;
+    tau1/tau2 scalars or full (n,) arrays (v2); idx the (B,) global sample
+    indices."""
+
+    if mesh_axes is None:
+        def local_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
+            t1 = tau1[idx] if jnp.ndim(tau1) else tau1
+            t2 = tau2[idx] if jnp.ndim(tau2) else tau2
+            stats = LS.row_stats(e1n, e2n, e1n, e2n, t1, t2)
+            u1_rows = LS.update_u(u1[idx], stats.g1, gamma)
+            u2_rows = LS.update_u(u2[idx], stats.g2, gamma)
+            w1, w2 = LS.fcco_weights(sg(u1_rows), sg(u2_rows), t1, t2,
+                                     fc.eps, scale_by_tau=fc.scale_by_tau)
+            loss = LS.surrogate_loss(stats, w1, w2, e1n.shape[0])
+            aux = {"u1_new": u1.at[idx].set(sg(u1_rows)),
+                   "u2_new": u2.at[idx].set(sg(u2_rows)),
+                   "u1_rows": sg(u1_rows), "u2_rows": sg(u2_rows),
+                   "stats": jax.tree.map(sg, stats)}
+            return loss, aux
+        return local_core
+
+    axes = tuple(mesh_axes)
+    from jax.sharding import PartitionSpec as P
+    pspec = P(axes)
+
+    pair = (D.make_fastclip_pair_loss(axes) if reduction == "fastclip"
+            else D.make_allgather_ad_pair_loss(axes))
+
+    def dist_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
+        tau_is_arr = jnp.ndim(tau1) > 0
+
+        def inner(e1l, e2l, u1s, u2s, idxs, t1in, t2in):
+            shard = u1s.shape[0]
+            rel = idxs - D._global_index(axes) * shard
+            if tau_is_arr:
+                t1 = t1in[rel]
+                t2 = t2in[rel]
+            else:
+                t1, t2 = t1in, t2in
+            # stats pre-pass (stop-grad; gathers CSE with the loss pass)
+            off = D._global_index(axes) * e1l.shape[0]
+            e1a = D._gather(sg(e1l), axes)
+            e2a = D._gather(sg(e2l), axes)
+            st0 = LS.row_stats(sg(e1l), sg(e2l), e1a, e2a, t1, t2,
+                               row_offset=off)
+            u1r = LS.update_u(u1s[rel], st0.g1, gamma)
+            u2r = LS.update_u(u2s[rel], st0.g2, gamma)
+            w1, w2 = LS.fcco_weights(u1r, u2r, t1, t2, fc.eps,
+                                     scale_by_tau=fc.scale_by_tau)
+            loss, stats = pair(e1l, e2l, w1, w2,
+                               t1 * jnp.ones_like(w1),
+                               t2 * jnp.ones_like(w2))
+            return (loss, u1s.at[rel].set(u1r), u2s.at[rel].set(u2r),
+                    u1r, u2r, tuple(stats))
+
+        in_specs = (pspec, pspec, pspec, pspec, pspec,
+                    pspec if tau_is_arr else P(),
+                    pspec if tau_is_arr else P())
+        out_specs = (P(), pspec, pspec, pspec, pspec,
+                     (pspec, pspec, pspec, pspec))
+        fn = jax.shard_map(inner, mesh=_current_mesh(),
+                           in_specs=in_specs, out_specs=out_specs,
+                           check_vma=False)
+        loss, u1_new, u2_new, u1r, u2r, stats = fn(
+            e1n, e2n, u1, u2, idx, tau1, tau2)
+        aux = {"u1_new": sg(u1_new), "u2_new": sg(u2_new),
+               "u1_rows": sg(u1r), "u2_rows": sg(u2r),
+               "stats": LS.RowStats(*jax.tree.map(sg, stats))}
+        return loss, aux
+
+    return dist_core
+
+
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def _current_mesh():
+    if _MESH is None:
+        raise RuntimeError("set_mesh(mesh) before building distributed steps")
+    return _MESH
+
+
+# ---------------------------------------------------------------------------
+# Full train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    arch: ArchConfig
+    fc: FC.FastCLIPConfig
+    optimizer: Optimizer
+    lr_fn: Callable
+    wd: float = 0.1
+    grad_clip: float = 0.0
+    mesh_axes: Optional[Sequence[str]] = None
+    reduction: str = "fastclip"
+    impl: str = "chunked"
+
+
+def init_train_state(rng, tc: TrainStepConfig):
+    params = BB.init_params(rng, tc.arch)
+    return {
+        "params": params,
+        "opt": tc.optimizer.init(params),
+        "fc": FC.init_state(tc.fc),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(tc: TrainStepConfig):
+    fc = tc.fc
+    gamma_fn = fc.gamma_fn()
+    loss_core = (None if fc.version == "openclip"
+                 else make_loss_core(fc, tc.mesh_axes, tc.reduction))
+    if fc.version == "openclip" and tc.mesh_axes is not None:
+        mbcl_dist = None  # built lazily inside (needs mesh at trace time)
+
+    def train_step(state, batch, idx):
+        fcs = state["fc"]
+        step = state["step"]
+        gamma = gamma_fn(step)
+        lr = tc.lr_fn(step)
+        tau1, tau2 = ((fcs["tau1"], fcs["tau2"]) if fc.individual_tau
+                      else (fcs["tau"], fcs["tau"]))
+
+        def loss_fn(params, tau_diff):
+            e1, e2 = BB.encode_pair(params, tc.arch, batch, impl=tc.impl)
+            e1n = LS.l2_normalize(e1)
+            e2n = LS.l2_normalize(e2)
+            if fc.version == "openclip":
+                if tc.mesh_axes is None:
+                    loss = LS.mbcl_loss(e1n, e2n, tau_diff)
+                else:
+                    from jax.sharding import PartitionSpec as P
+                    axes = tuple(tc.mesh_axes)
+                    f = D.make_mbcl_loss(axes)
+                    loss = jax.shard_map(
+                        f, mesh=_current_mesh(),
+                        in_specs=(P(axes), P(axes), P()), out_specs=P(),
+                        check_vma=False)(e1n, e2n, tau_diff)
+                return loss, {"e1n": sg(e1n), "e2n": sg(e2n)}
+            t1 = fcs["tau1"] if fc.individual_tau else sg(tau_diff)
+            t2 = fcs["tau2"] if fc.individual_tau else sg(tau_diff)
+            loss, aux = loss_core(e1n, e2n, fcs["u1"], fcs["u2"], t1, t2,
+                                  idx, gamma)
+            aux["e1n"] = sg(e1n)
+            aux["e2n"] = sg(e2n)
+            return loss, aux
+
+        (loss, aux), (grads, gtau) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                state["params"], tau1 if not fc.individual_tau else 0.0)
+
+        if tc.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        else:
+            gnorm = jnp.asarray(0.0)
+
+        params, opt = tc.optimizer.update(
+            state["params"], grads, state["opt"], lr=lr, wd=tc.wd)
+
+        new_fc = dict(fcs)
+        metrics = {"loss": loss, "lr": lr, "gamma": gamma,
+                   "grad_norm": gnorm}
+        if fc.version == "openclip":
+            if fc.learnable_tau:
+                new_fc = FC.tau_update(fc, new_fc, gtau)
+            metrics["tau"] = new_fc.get("tau", tau1)
+        else:
+            new_fc["u1"] = aux["u1_new"]
+            new_fc["u2"] = aux["u2_new"]
+            stats_aux = {"u1_new": aux["u1_rows"], "u2_new": aux["u2_rows"],
+                         "dg1_dtau": aux["stats"].dg1_dtau,
+                         "dg2_dtau": aux["stats"].dg2_dtau}
+            t1r = tau1[idx] if fc.individual_tau else tau1
+            t2r = tau2[idx] if fc.individual_tau else tau2
+            tg = FC.tau_gradient(fc, stats_aux, t1r, t2r)
+            if fc.individual_tau:
+                new_fc = FC.tau_update(fc, new_fc, tg, idx=idx)
+                metrics["tau"] = jnp.mean(new_fc["tau1"])
+            elif tg is not None:
+                new_fc = FC.tau_update(fc, new_fc, tg)
+                metrics["tau"] = new_fc["tau"]
+            else:
+                metrics["tau"] = tau1
+            metrics["u_mean"] = jnp.mean(aux["u1_rows"])
+            metrics["loss_value"] = FC.loss_value(
+                fc, {"u1_new": aux["u1_rows"], "u2_new": aux["u2_rows"]},
+                t1r, t2r)
+        new_fc["step"] = fcs["step"] + 1
+
+        new_state = {"params": params, "opt": opt, "fc": new_fc,
+                     "step": step + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Retrieval evaluation (synthetic-data metric for the paper-claims benches)
+# ---------------------------------------------------------------------------
+
+def retrieval_accuracy(params, cfg: ArchConfig, batch, impl="chunked",
+                       classes=None):
+    """Top-1 retrieval over the batch.  With ``classes`` given, a
+    retrieval is correct when it lands on any same-class item (synthetic
+    data has class-duplicate captions, so exact-index accuracy saturates
+    at the collision ceiling)."""
+    e1, e2 = BB.encode_pair(params, cfg, batch, impl=impl)
+    e1n = LS.l2_normalize(e1)
+    e2n = LS.l2_normalize(e2)
+    s = e1n @ e2n.T
+    a1 = jnp.argmax(s, axis=1)
+    a2 = jnp.argmax(s, axis=0)
+    if classes is None:
+        i2t = jnp.mean(a1 == jnp.arange(s.shape[0]))
+        t2i = jnp.mean(a2 == jnp.arange(s.shape[0]))
+    else:
+        classes = jnp.asarray(classes)
+        i2t = jnp.mean(classes[a1] == classes)
+        t2i = jnp.mean(classes[a2] == classes)
+    return 0.5 * (i2t + t2i)

@@ -1,0 +1,61 @@
+"""Sharded, epoch-shuffled, index-carrying data pipeline.
+
+Each worker owns a contiguous shard of the dataset (samples
+[k*n/K, (k+1)*n/K)), matching the sharding of the FCCO u buffers: a worker
+only ever draws indices it owns, so u updates are shard-local (paper §3
+"S is partitioned evenly across K workers").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ShardedLoader:
+    dataset: object            # .batch(idx) -> dict, .n
+    global_batch: int
+    n_shards: int = 1
+    seed: int = 0
+    drop_last: bool = True
+
+    def __post_init__(self):
+        self.n = self.dataset.n
+        assert self.n % self.n_shards == 0, "dataset must shard evenly"
+        assert self.global_batch % self.n_shards == 0
+        self.shard_size = self.n // self.n_shards
+        self.local_batch = self.global_batch // self.n_shards
+
+    @property
+    def steps_per_epoch(self) -> int:
+        return self.shard_size // self.local_batch
+
+    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, dict]]:
+        """Yields (global_indices (global_batch,), batch dict) with the
+        per-shard sub-batches concatenated in shard order, so that
+        reshaping to (K, local_batch) matches the mesh data axis."""
+        per_shard = []
+        for k in range(self.n_shards):
+            rng = np.random.RandomState(self.seed * 100003 + epoch * 31 + k)
+            lo = k * self.shard_size
+            perm = lo + rng.permutation(self.shard_size)
+            per_shard.append(perm)
+        for step in range(self.steps_per_epoch):
+            idx = np.concatenate([
+                p[step * self.local_batch:(step + 1) * self.local_batch]
+                for p in per_shard])
+            yield idx, self.dataset.batch(idx)
+
+    def steps(self, n_steps: int):
+        """Infinite-ish stream over epochs."""
+        step = 0
+        epoch = 0
+        while step < n_steps:
+            for idx, batch in self.epoch(epoch):
+                yield epoch, step, idx, batch
+                step += 1
+                if step >= n_steps:
+                    return
+            epoch += 1

@@ -1,0 +1,125 @@
+"""Synthetic datasets (deterministic, index-addressable).
+
+FCCO requires every batch element to carry its *global sample index* (the u
+estimators are per-sample), so the pipeline yields (indices, batch).
+
+The contrastive dataset embeds a learnable signal: image i is a fixed random
+"prototype" image determined by a latent class, and its caption tokens encode
+the same class, so a CLIP model can genuinely align the modalities and
+retrieval accuracy is a meaningful metric (used by the paper-claims
+benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+@dataclasses.dataclass
+class ContrastiveDataset:
+    """n synthetic image-text pairs over ``n_classes`` latent concepts."""
+    n: int
+    image_size: int
+    context_length: int
+    vocab_size: int
+    n_classes: int = 64
+    noise: float = 0.3
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.classes = rng.randint(0, self.n_classes, size=self.n)
+        # class prototypes in a low-dim latent, rendered to image "texture"
+        self.protos = rng.randn(self.n_classes, 8, 8, 3).astype(np.float32)
+        # caption template: class id spelled in tokens (reserving 0 = BOS)
+        self.tok_base = rng.randint(1, self.vocab_size,
+                                    size=(self.n_classes, 4))
+
+    def images(self, idx):
+        rng = np.random.RandomState(hash(("img", self.seed)) % (2**31))
+        base = self.protos[self.classes[idx]]             # (b, 8, 8, 3)
+        up = np.repeat(np.repeat(base, self.image_size // 8, axis=1),
+                       self.image_size // 8, axis=2)
+        noise = np.random.RandomState(
+            (self.seed * 7919 + int(idx[0])) % (2**31)
+        ).randn(*up.shape).astype(np.float32) * self.noise
+        return up + noise
+
+    def texts(self, idx):
+        b = len(idx)
+        toks = np.zeros((b, self.context_length), np.int32)
+        cls_toks = self.tok_base[self.classes[idx]]       # (b, 4)
+        reps = min(self.context_length // 4, 4)
+        for r in range(reps):
+            toks[:, r * 4:(r + 1) * 4] = cls_toks
+        return toks
+
+    def batch(self, idx):
+        idx = np.asarray(idx)
+        return {"images": self.images(idx), "texts": self.texts(idx)}
+
+
+@dataclasses.dataclass
+class LMDataset:
+    """Synthetic token stream with learnable bigram structure."""
+    n: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        # sparse bigram table: each token has 4 likely successors
+        self.next_tok = rng.randint(0, self.vocab_size,
+                                    size=(self.vocab_size, 4))
+
+    def batch(self, idx):
+        idx = np.asarray(idx)
+        b = len(idx)
+        rng = np.random.RandomState((self.seed * 31 + int(idx[0])) % (2**31))
+        toks = np.zeros((b, self.seq_len + 1), np.int64)
+        toks[:, 0] = rng.randint(0, self.vocab_size, size=b)
+        for t in range(self.seq_len):
+            choice = rng.randint(0, 4, size=b)
+            toks[:, t + 1] = self.next_tok[toks[:, t], choice]
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "labels": toks[:, 1:].astype(np.int32)}
+
+
+@dataclasses.dataclass
+class PairedEmbeddingDataset:
+    """Stub-modality pairs for the contrastive objective on assigned
+    backbones: tokens (text side) + precomputed paired embeddings (image /
+    audio side).  Class-correlated so alignment is learnable."""
+    n: int
+    seq_len: int
+    vocab_size: int
+    pair_dim: int = 512
+    n_classes: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        self.classes = rng.randint(0, self.n_classes, size=self.n)
+        self.protos = rng.randn(self.n_classes, self.pair_dim).astype(
+            np.float32)
+        self.tok_base = rng.randint(1, self.vocab_size,
+                                    size=(self.n_classes, 8))
+
+    def batch(self, idx):
+        idx = np.asarray(idx)
+        b = len(idx)
+        cls = self.classes[idx]
+        emb = self.protos[cls] + 0.3 * np.random.RandomState(
+            (self.seed + int(idx[0])) % (2**31)
+        ).randn(b, self.pair_dim).astype(np.float32)
+        toks = np.zeros((b, self.seq_len), np.int32)
+        reps = max(1, self.seq_len // 8)
+        ct = self.tok_base[cls]
+        for r in range(min(reps, 8)):
+            toks[:, r * 8:(r + 1) * 8] = ct
+        return {"tokens": toks, "labels": np.roll(toks, -1, axis=1),
+                "pair_embeds": emb}

@@ -1,0 +1,100 @@
+"""Pallas TPU flash attention (fwd): causal / sliding-window, online
+softmax, (BQ x BK) tiles in VMEM, f32 accumulators in scratch.
+
+Layout: q/k/v are (BH, S, hd) — batch*heads flattened to the leading grid
+axis.  The backward is served by the chunked pure-JAX path (remat); this
+kernel is the serving/prefill hot path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 256
+BK = 256
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, window, n_valid_k, n_k_blocks):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                       # (BQ, hd)
+    k = k_ref[0]                       # (BK, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = qi * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    k_pos = ki * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    mask = k_pos < n_valid_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v_ref.dtype), v_ref[0],
+                        (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, interpret=False):
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd)."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * H, Sk, hd)
+    vf = v.reshape(B * H, Sk, hd)
+    pq, pk = (-Sq) % BQ, (-Sk) % BK
+    if pq:
+        qf = jnp.pad(qf, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kf = jnp.pad(kf, ((0, 0), (0, pk), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pk), (0, 0)))
+    nq, nk = (Sq + pq) // BQ, (Sk + pk) // BK
+    grid = (B * H, nq, nk)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, causal=causal,
+                          window=window, n_valid_k=Sk, n_k_blocks=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, BK, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, hd), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+            pltpu.VMEM((BQ,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out[:, :Sq].reshape(B, H, Sq, hd)

@@ -1,0 +1,195 @@
+"""Pallas TPU kernels for the FastCLIP contrastive hot-spot.
+
+The loss layer's compute is dominated by the (B x B) pair matrix:
+similarity (MXU) -> exp -> masked row reductions, twice (image/text side),
+plus the same matrix re-weighted in the backward.  These kernels stream the
+matrix through VMEM in (BR x BC) tiles (flash-attention style): the B x B
+matrix never touches HBM.
+
+    gcl_pair_stats : forward statistics g1, g2, dg1/dtau, dg2/dtau
+    gcl_pair_grads : closed-form backward (de1, de2) of the FCCO surrogate
+
+Tiles are 128-aligned for the MXU; accumulation in f32; column blocks are
+the innermost grid axis so output rows are revisited sequentially.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 128   # row tile
+BC = 128   # col tile
+
+
+def _pad_rows(x, m, value=0.0):
+    pad = (-x.shape[0]) % m
+    if pad:
+        x = jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                    constant_values=value)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Forward stats kernel
+# ---------------------------------------------------------------------------
+
+def _stats_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, t1_ref,
+                  t2_ref, g1_ref, g2_ref, dg1_ref, dg2_ref, *, n_valid):
+    r = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        g1_ref[...] = jnp.zeros_like(g1_ref)
+        g2_ref[...] = jnp.zeros_like(g2_ref)
+        dg1_ref[...] = jnp.zeros_like(dg1_ref)
+        dg2_ref[...] = jnp.zeros_like(dg2_ref)
+
+    e1r = e1r_ref[...]
+    e2r = e2r_ref[...]
+    e1c = e1c_ref[...]
+    e2c = e2c_ref[...]
+    sd = sdr_ref[...].astype(jnp.float32)            # (BR,)
+    t1 = t1_ref[...].astype(jnp.float32)
+    t2 = t2_ref[...].astype(jnp.float32)
+
+    rows = r * BR + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 0)
+    cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+    mask = (rows != cols) & (cols < n_valid) & (rows < n_valid)
+
+    s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s2 = jax.lax.dot_general(e2r, e1c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    z1 = (s1 - sd[:, None]) / t1[:, None]
+    z2 = (s2 - sd[:, None]) / t2[:, None]
+    h1 = jnp.where(mask, jnp.exp(z1), 0.0)
+    h2 = jnp.where(mask, jnp.exp(z2), 0.0)
+    g1_ref[...] += jnp.sum(h1, axis=1)
+    g2_ref[...] += jnp.sum(h2, axis=1)
+    dg1_ref[...] += jnp.sum(h1 * -(s1 - sd[:, None]), axis=1) / (t1 ** 2)
+    dg2_ref[...] += jnp.sum(h2 * -(s2 - sd[:, None]), axis=1) / (t2 ** 2)
+
+
+def gcl_pair_stats(e1, e2, tau1, tau2, *, interpret=False):
+    """e1/e2: (B, d) normalized embeddings; tau1/tau2: (B,).
+    Returns (g1, g2, dg1, dg2) each (B,) f32 (means over B-1)."""
+    B, d = e1.shape
+    sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
+    e1p = _pad_rows(e1, BR)
+    e2p = _pad_rows(e2, BR)
+    sdp = _pad_rows(sd, BR)
+    t1p = _pad_rows(jnp.broadcast_to(tau1, (B,)).astype(jnp.float32), BR, 1.0)
+    t2p = _pad_rows(jnp.broadcast_to(tau2, (B,)).astype(jnp.float32), BR, 1.0)
+    Bp = e1p.shape[0]
+    grid = (Bp // BR, Bp // BC)
+
+    row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
+    col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
+    vec_row = pl.BlockSpec((BR,), lambda r, c: (r,))
+
+    out = pl.pallas_call(
+        functools.partial(_stats_kernel, n_valid=B),
+        grid=grid,
+        in_specs=[row_spec, row_spec, col_spec, col_spec,
+                  vec_row, vec_row, vec_row],
+        out_specs=[vec_row] * 4,
+        out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 4,
+        interpret=interpret,
+    )(e1p, e2p, e1p, e2p, sdp, t1p, t2p)
+    denom = max(B - 1, 1)
+    return tuple(o[:B] / denom for o in out)
+
+
+# ---------------------------------------------------------------------------
+# Backward kernel: de1/de2 of the FCCO surrogate
+# ---------------------------------------------------------------------------
+
+def _grads_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, sdc_ref,
+                  w1r_ref, w2r_ref, w1c_ref, w2c_ref, t1r_ref, t2r_ref,
+                  t1c_ref, t2c_ref, de1_ref, de2_ref, r1_ref, r2_ref,
+                  *, n_valid):
+    r = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        de1_ref[...] = jnp.zeros_like(de1_ref)
+        de2_ref[...] = jnp.zeros_like(de2_ref)
+        r1_ref[...] = jnp.zeros_like(r1_ref)
+        r2_ref[...] = jnp.zeros_like(r2_ref)
+
+    e1r = e1r_ref[...]
+    e2r = e2r_ref[...]
+    e1c = e1c_ref[...]
+    e2c = e2c_ref[...]
+    sdr = sdr_ref[...].astype(jnp.float32)
+    sdc = sdc_ref[...].astype(jnp.float32)
+
+    rows = r * BR + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 0)
+    cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+    mask = (rows != cols) & (cols < n_valid) & (rows < n_valid)
+
+    s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    s2 = jax.lax.dot_general(e2r, e1c, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    a1 = (w1r_ref[...] / t1r_ref[...])[:, None] \
+        * jnp.where(mask, jnp.exp((s1 - sdr[:, None]) / t1r_ref[...][:, None]), 0.0)
+    a2 = (w2r_ref[...] / t2r_ref[...])[:, None] \
+        * jnp.where(mask, jnp.exp((s2 - sdr[:, None]) / t2r_ref[...][:, None]), 0.0)
+    # transpose blocks: m1[p, j] = A1[j, p] over column anchors j
+    #   A1[j, p] = w1_j/t1_j exp((e1_j.e2_p - sd_j)/t1_j); e1_j.e2_p = s2[p, j]
+    m1 = (w1c_ref[...] / t1c_ref[...])[None, :] \
+        * jnp.where(mask, jnp.exp((s2 - sdc[None, :]) / t1c_ref[...][None, :]), 0.0)
+    #   A2[j, p] = w2_j/t2_j exp((e2_j.e1_p - sd_j)/t2_j); e2_j.e1_p = s1[p, j]
+    m2 = (w2c_ref[...] / t2c_ref[...])[None, :] \
+        * jnp.where(mask, jnp.exp((s1 - sdc[None, :]) / t2c_ref[...][None, :]), 0.0)
+
+    de1_ref[...] += jax.lax.dot_general(
+        a1 + m2, e2c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    de2_ref[...] += jax.lax.dot_general(
+        a2 + m1, e1c, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    r1_ref[...] += jnp.sum(a1, axis=1)
+    r2_ref[...] += jnp.sum(a2, axis=1)
+
+
+def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, interpret=False):
+    """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i."""
+    B, d = e1.shape
+    sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
+    pads = lambda x, v=0.0: _pad_rows(
+        jnp.broadcast_to(x, (B,)).astype(jnp.float32), BR, v)
+    e1p, e2p = _pad_rows(e1, BR), _pad_rows(e2, BR)
+    sdp = pads(sd)
+    w1p, w2p = pads(w1), pads(w2)
+    t1p, t2p = pads(tau1, 1.0), pads(tau2, 1.0)
+    Bp = e1p.shape[0]
+    grid = (Bp // BR, Bp // BC)
+
+    row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
+    col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
+    vrow = pl.BlockSpec((BR,), lambda r, c: (r,))
+    vcol = pl.BlockSpec((BC,), lambda r, c: (c,))
+
+    de1, de2, r1, r2 = pl.pallas_call(
+        functools.partial(_grads_kernel, n_valid=B),
+        grid=grid,
+        in_specs=[row_spec, row_spec, col_spec, col_spec, vrow, vcol,
+                  vrow, vrow, vcol, vcol, vrow, vrow, vcol, vcol],
+        out_specs=[pl.BlockSpec((BR, d), lambda r, c: (r, 0))] * 2
+        + [vrow] * 2,
+        out_shape=[jax.ShapeDtypeStruct((Bp, d), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(e1p, e2p, e1p, e2p, sdp, sdp, w1p, w2p, w1p, w2p, t1p, t2p, t1p, t2p)
+    kappa = 1.0 / (B * max(B - 1.0, 1.0))
+    rsum = (r1 + r2)[:B, None]
+    de1 = kappa * (de1[:B] - rsum * e2.astype(jnp.float32))
+    de2 = kappa * (de2[:B] - rsum * e1.astype(jnp.float32))
+    return de1, de2

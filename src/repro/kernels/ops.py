@@ -1,0 +1,48 @@
+"""jit'd wrappers around the Pallas kernels.
+
+``fused_gcl_loss`` packages the fwd/bwd kernels as a custom-vjp scalar loss
+so the FCCO surrogate can run entirely through the fused kernels on TPU
+(per-device compute of the distributed step, or the whole loss on one
+device).  On CPU the ``interpret=True`` path executes the same kernel body.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def fused_gcl_loss(e1n, e2n, w1, w2, tau1, tau2, interpret=False):
+    """L = (1/B) sum_i w1_i g1_i + w2_i g2_i via the Pallas kernels.
+    e1n/e2n normalized (B, d); w/tau (B,).  Returns (loss, (g1,g2,dg1,dg2))."""
+    g1, g2, dg1, dg2 = gcl_pair_stats(e1n, e2n, tau1, tau2,
+                                      interpret=interpret)
+    loss = jnp.sum(w1 * g1 + w2 * g2) / e1n.shape[0]
+    return loss, (g1, g2, dg1, dg2)
+
+
+def _fwd(e1n, e2n, w1, w2, tau1, tau2, interpret):
+    out = fused_gcl_loss(e1n, e2n, w1, w2, tau1, tau2, interpret)
+    return out, (e1n, e2n, w1, w2, tau1, tau2)
+
+
+def _bwd(interpret, res, cts):
+    ct, _ = cts
+    e1n, e2n, w1, w2, tau1, tau2 = res
+    de1, de2 = gcl_pair_grads(e1n, e2n, w1, w2, tau1, tau2,
+                              interpret=interpret)
+    z = jnp.zeros_like(w1)
+    return (ct * de1).astype(e1n.dtype), (ct * de2).astype(e2n.dtype), \
+        z, z, jnp.zeros_like(tau1), jnp.zeros_like(tau2)
+
+
+fused_gcl_loss.defvjp(_fwd, _bwd)

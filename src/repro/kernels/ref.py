@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gcl_pair_stats_ref(e1, e2, tau1, tau2):
+    """Fused contrastive inner-estimator statistics over the full pair
+    matrix.  e1/e2: (B, d) normalized; tau1/tau2: (B,).
+
+    Returns (g1, g2, dg1, dg2), each (B,):
+        g1_i  = mean_{j!=i} exp((e1_i.e2_j - sd_i)/tau1_i)
+        g2_i  = mean_{j!=i} exp((e2_i.e1_j - sd_i)/tau2_i)
+        dg1_i = mean_{j!=i} h1[i,j] * (-(s1_ij - sd_i)) / tau1_i^2
+    """
+    B = e1.shape[0]
+    sd = jnp.sum(e1 * e2, axis=-1)
+    off = 1.0 - jnp.eye(B, dtype=jnp.float32)
+    s1 = (e1 @ e2.T).astype(jnp.float32)
+    s2 = (e2 @ e1.T).astype(jnp.float32)
+    z1 = (s1 - sd[:, None]) / tau1[:, None]
+    z2 = (s2 - sd[:, None]) / tau2[:, None]
+    h1 = jnp.exp(z1) * off
+    h2 = jnp.exp(z2) * off
+    denom = B - 1
+    g1 = h1.sum(1) / denom
+    g2 = h2.sum(1) / denom
+    dg1 = (h1 * -(s1 - sd[:, None])).sum(1) / (denom * tau1 ** 2)
+    dg2 = (h2 * -(s2 - sd[:, None])).sum(1) / (denom * tau2 ** 2)
+    return g1, g2, dg1, dg2
+
+
+def gcl_pair_grads_ref(e1, e2, w1, w2, tau1, tau2):
+    """Closed-form gradient of the FCCO surrogate
+        L = (1/B) sum_i w1_i g1_i + w2_i g2_i
+    w.r.t. the normalized embeddings (Appendix A).  Returns (de1, de2)."""
+    B = e1.shape[0]
+    sd = jnp.sum(e1 * e2, axis=-1)
+    off = 1.0 - jnp.eye(B, dtype=jnp.float32)
+    s1 = (e1 @ e2.T).astype(jnp.float32)
+    s2 = (e2 @ e1.T).astype(jnp.float32)
+    A1 = (w1 / tau1)[:, None] * jnp.exp((s1 - sd[:, None]) / tau1[:, None]) * off
+    A2 = (w2 / tau2)[:, None] * jnp.exp((s2 - sd[:, None]) / tau2[:, None]) * off
+    kappa = 1.0 / (B * (B - 1.0))
+    r1 = A1.sum(1)
+    r2 = A2.sum(1)
+    de1 = kappa * ((A1 + A2.T) @ e2 - (r1 + r2)[:, None] * e2)
+    de2 = kappa * ((A2 + A1.T) @ e1 - (r1 + r2)[:, None] * e1)
+    return de1, de2
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """(B, H, S, hd) attention oracle."""
+    B, H, Sq, hd = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    qp = jnp.arange(Sq)
+    kp = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window:
+        mask &= kp[None, :] > qp[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)
+
+
+def ssd_chunk_ref(x, log_a, Bm, Cm):
+    """Oracle for the Mamba2 SSD kernel: defer to the sequential scan."""
+    from repro.models.ssm import ssd_sequential
+    return ssd_sequential(x, log_a, Bm, Cm)[0]

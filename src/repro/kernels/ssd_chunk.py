@@ -1,0 +1,93 @@
+"""Pallas TPU kernel for the Mamba2 chunkwise SSD scan.
+
+Grid: (batch*heads, n_chunks) with the chunk axis innermost and
+sequential — the inter-chunk state S (N, P) lives in VMEM scratch and is
+carried across grid steps, so the recurrence never round-trips HBM.
+Per chunk the intra part is two MXU matmuls on (Lc x Lc) tiles:
+
+    F      = cumsum(log_a)                       (Lc,)
+    M      = (C B^T) * exp(F_i - F_j) * tril     (Lc, Lc)
+    y      = M x + exp(F) (C S)                  (Lc, P)
+    S_next = exp(F_L) S + B^T diag(exp(F_L - F)) x
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, y_ref, s_ref, *, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # (Lc, P)
+    la = la_ref[0].astype(jnp.float32)     # (Lc,)
+    b = b_ref[0].astype(jnp.float32)       # (Lc, N)
+    c = c_ref[0].astype(jnp.float32)       # (Lc, N)
+    Lc = x.shape[0]
+
+    F = jnp.cumsum(la)                     # (Lc,)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+    decay = jnp.where(rows >= cols, jnp.exp(F[:, None] - F[None, :]), 0.0)
+    G = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    M = G * decay
+    y_intra = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    S = s_ref[...]
+    y_inter = jnp.exp(F)[:, None] * jax.lax.dot_general(
+        c, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    FL = F[Lc - 1]
+    w = jnp.exp(FL - F)                    # (Lc,)
+    s_ref[...] = (jnp.exp(FL) * S
+                  + jax.lax.dot_general(b * w[:, None], x,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+def ssd_chunked_pallas(x, log_a, Bm, Cm, *, chunk=64, interpret=False):
+    """x: (B,T,H,P); log_a: (B,T,H); Bm/Cm: (B,T,N) -> y (B,T,H,P).
+    The state dimension N and head dim P should be 128-multiples on real
+    TPU; interpret mode accepts anything."""
+    B, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Lc
+    # flatten to (B*H, T, .) and broadcast B/C over heads
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, Tp, P)
+    laf = log_a.transpose(0, 2, 1).reshape(B * H, Tp)
+    bf = jnp.broadcast_to(Bm[:, None], (B, H, Tp, N)).reshape(B * H, Tp, N)
+    cf = jnp.broadcast_to(Cm[:, None], (B, H, Tp, N)).reshape(B * H, Tp, N)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, Lc, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Lc), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, Lc, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Lc, N), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Lc, P), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xf, laf, bf, cf)
+    return y.reshape(B, H, Tp, P).transpose(0, 2, 1, 3)[:, :T]

@@ -1,0 +1,215 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh, report memory/cost/collective analysis (EXPERIMENTS.md
+§Dry-run and §Roofline read these JSONs).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--objective lm|contrastive] \
+        [--reduction fastclip|allgather_ad] [--out out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, get_arch
+from repro.core import fastclip as FCC
+from repro.core import train_step as TS
+from repro.launch import mesh as MM
+from repro.launch import steps as ST
+from repro.models import backbones as BB
+from repro.models import sharding as SH
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     collective_stats, memory_per_device)
+from repro.roofline.hlo_cost import HLOCostModel
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _opt_shardings(mesh, opt_specs, p_shard):
+    def one(key, val):
+        if key in ("m", "v"):
+            return p_shard
+        return jax.tree.map(lambda _: _rep(mesh), val)
+    return {k: one(k, v) if k in ("m", "v") else jax.tree.map(
+        lambda _: _rep(mesh), v) for k, v in opt_specs.items()}
+
+
+def build_train(cfg, shape, mesh, objective, reduction, sharding="tp"):
+    ba = MM.batch_axes(mesh, sharding)
+    p_specs = ST.params_specs(cfg)
+    p_shard = MM.param_shardings(mesh, p_specs, mode=sharding)
+    batch = ST.batch_specs(cfg, shape, objective=objective)
+    b_shard = MM.batch_shardings(mesh, batch, mode=sharding)
+
+    if objective == "contrastive":
+        fc = ST.contrastive_fc_config(cfg, shape)
+        TS.set_mesh(mesh)
+        step_fn, tc = ST.make_contrastive_train_step(
+            cfg, fc, mesh_axes=ba, reduction=reduction)
+        opt = tc.optimizer
+        opt_sp = ST.opt_specs(p_specs, opt)
+        fc_sp = jax.eval_shape(lambda: FCC.init_state(fc))
+        fc_shard = {}
+        for k, v in fc_sp.items():
+            if k in ("u1", "u2", "tau1", "tau2"):
+                fc_shard[k] = MM.u_sharding(mesh)
+            elif k == "tau_opt":
+                fc_shard[k] = {kk: (MM.u_sharding(mesh)
+                                    if getattr(vv, "ndim", 0) else _rep(mesh))
+                               for kk, vv in v.items()}
+            else:
+                fc_shard[k] = _rep(mesh)
+        state_sp = {"params": p_specs, "opt": opt_sp, "fc": fc_sp,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_shard = {"params": p_shard,
+                       "opt": _opt_shardings(mesh, opt_sp, p_shard),
+                       "fc": fc_shard, "step": _rep(mesh)}
+        idx_sp = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        idx_shard = NamedSharding(mesh, P(ba))
+        args = (state_sp, batch, idx_sp)
+        shards = (state_shard, b_shard, idx_shard)
+        return step_fn, args, shards
+
+    step_fn, opt = ST.make_lm_train_step(cfg)
+    opt_sp = ST.opt_specs(p_specs, opt)
+    state_sp = {"params": p_specs, "opt": opt_sp,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_shard = {"params": p_shard,
+                   "opt": _opt_shardings(mesh, opt_sp, p_shard),
+                   "step": _rep(mesh)}
+    return step_fn, (state_sp, batch), (state_shard, b_shard)
+
+
+def build_prefill(cfg, shape, mesh):
+    p_specs = ST.params_specs(cfg)
+    p_shard = MM.param_shardings(mesh, p_specs)
+    batch = ST.batch_specs(cfg, shape)
+    b_shard = MM.batch_shardings(mesh, batch)
+    step_fn = ST.make_prefill_step(cfg)
+    return step_fn, (p_specs, batch), (p_shard, b_shard)
+
+
+def build_decode(cfg, shape, mesh):
+    ba = MM.batch_axes(mesh)
+    p_specs = ST.params_specs(cfg)
+    p_shard = MM.param_shardings(mesh, p_specs)
+    st_specs = ST.decode_state_specs(cfg, shape)
+    st_shard = MM.decode_state_shardings(mesh, st_specs)
+    B = shape.global_batch
+    bsz = int(np.prod([mesh.shape[a] for a in ba]))
+    tok_sp = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = NamedSharding(mesh, P(ba if B % bsz == 0 and B > 1 else None,
+                                      None))
+    pos_sp = jax.ShapeDtypeStruct((), jnp.int32)
+    step_fn = ST.make_serve_step(cfg, shape)
+    return step_fn, (p_specs, st_specs, tok_sp, pos_sp), \
+        (p_shard, st_shard, tok_shard, _rep(mesh))
+
+
+def run_dryrun(arch, shape_name, multi_pod=False, objective="lm",
+               reduction="fastclip", sharding="tp", verbose=True):
+    cfg = get_arch(arch)
+    if cfg.family == "clip":
+        objective = "contrastive"   # the paper's own model has no LM head
+    shape = INPUT_SHAPES[shape_name]
+    mesh = MM.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    SH.set_batch_axes(MM.batch_axes(mesh, sharding))
+    if sharding == "fsdp":
+        SH.enable_moe_a2a(mesh)
+
+    if shape.kind == "train":
+        step_fn, args, shards = build_train(cfg, shape, mesh, objective,
+                                            reduction, sharding=sharding)
+    elif shape.kind == "prefill":
+        step_fn, args, shards = build_prefill(cfg, shape, mesh)
+    else:
+        step_fn, args, shards = build_decode(cfg, shape, mesh)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step_fn, in_shardings=shards).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = memory_per_device(compiled)
+    hlo_text = compiled.as_text()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    cm = HLOCostModel(hlo_text)
+    flops, hbm_bytes, coll_bytes = cm.totals()
+    coll_counts = {k: int(v) for k, v in cm.collective_counts().items()}
+    n_params = BB.count_params_analytic(cfg)
+    n_active = BB.count_params_analytic(cfg, active_only=True)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "objective": objective, "reduction": reduction,
+        "sharding": sharding,
+        "params": n_params, "active_params": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": hbm_bytes,
+        "collective_bytes_per_device": coll_bytes,
+        "collective_counts": coll_counts,
+        "cost_analysis_raw": {"flops": float(ca.get("flops", 0.0)),
+                              "bytes": float(ca.get("bytes accessed", 0.0))},
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "bottleneck": max(terms, key=terms.get),
+        },
+    }
+    if verbose:
+        print(json.dumps(result, indent=2))
+        print(compiled.memory_analysis())
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--objective", default="lm",
+                    choices=["lm", "contrastive"])
+    ap.add_argument("--reduction", default="fastclip",
+                    choices=["fastclip", "allgather_ad"])
+    ap.add_argument("--sharding", default="tp", choices=["tp", "fsdp"])
+    ap.add_argument("--no-inner-remat", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.no_inner_remat:
+        SH.set_inner_remat(False)
+    res = run_dryrun(args.arch, args.shape, args.multi_pod, args.objective,
+                     args.reduction, sharding=args.sharding)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Step builders + abstract input specs for every (arch x input-shape).
+
+Step kinds per shape (DESIGN.md §4):
+    train_4k     -> train_step   (native objective; --objective contrastive
+                                  runs the FastCLIP two-tower objective)
+    prefill_32k  -> prefill_step (forward, last-position logits)
+    decode_32k   -> serve_step   (one token, full KV cache / SSM state)
+    long_500k    -> serve_step   (SSM/hybrid native; full-attention archs
+                                  run the sliding-window variant W=8192)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import fastclip as FCC
+from repro.core import train_step as TS
+from repro.core.schedules import lr_warmup_cosine
+from repro.models import backbones as BB
+from repro.optim import adamw
+
+LONG_WINDOW = 8192          # sliding window for long_500k on attention archs
+PARAM_DTYPE = jnp.bfloat16  # dry-run / production compute dtype
+
+
+def needs_window_override(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k on archs with quadratic attention -> sliding window."""
+    return (shape.name == "long_500k"
+            and cfg.family in ("dense", "moe", "vlm", "audio")
+            and not cfg.sliding_window)
+
+
+def decode_window(cfg: ArchConfig, shape: InputShape) -> Optional[int]:
+    return LONG_WINDOW if needs_window_override(cfg, shape) else None
+
+
+# ---------------------------------------------------------------------------
+# Abstract input specs (ShapeDtypeStruct; no allocation)
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: InputShape, *, objective="lm"):
+    """The model-input part of the step inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "clip":
+        c = cfg.clip
+        return {"images": sds((B, c.image_size, c.image_size, 3),
+                              PARAM_DTYPE),
+                "texts": sds((B, c.context_length), jnp.int32)}
+    b = {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "train":
+        b["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        b["image_embeds"] = sds((B, cfg.n_image_tokens, cfg.vision_dim),
+                                PARAM_DTYPE)
+    if cfg.family == "audio":
+        b["frames"] = sds((B, S // cfg.audio_subsample, cfg.d_model),
+                          PARAM_DTYPE)
+    if objective == "contrastive" and shape.kind == "train":
+        b["pair_embeds"] = sds((B, BB.PAIR_DIM), PARAM_DTYPE)
+    return b
+
+
+def params_specs(cfg: ArchConfig, dtype=PARAM_DTYPE):
+    shapes = BB.param_shapes(cfg)
+    return jax.tree.map(lambda l: sds(l.shape, dtype), shapes)
+
+
+def opt_specs(params_sp, optimizer):
+    """Moments mirror params in f32 (+ scalar step counters)."""
+    state = jax.eval_shape(optimizer.init, params_sp)
+    return jax.tree.map(lambda l: sds(l.shape, l.dtype), state)
+
+
+def decode_state_specs(cfg: ArchConfig, shape: InputShape,
+                       dtype=PARAM_DTYPE):
+    wo = decode_window(cfg, shape)
+    st = jax.eval_shape(functools.partial(
+        BB.init_decode_state, cfg, shape.global_batch, shape.seq_len,
+        dtype, window_override=wo))
+    return jax.tree.map(lambda l: sds(l.shape, l.dtype), st)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_lm_train_step(cfg: ArchConfig, *, lr=1e-4, wd=0.1,
+                       total_steps=10_000, impl="chunked"):
+    opt = adamw()
+    lr_fn = lr_warmup_cosine(lr, 500, total_steps)
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return BB.lm_loss(params, cfg, batch, impl=impl)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        params, opt_state = opt.update(state["params"], grads, state["opt"],
+                                       lr=lr_fn(state["step"]), wd=wd)
+        return {"params": params, "opt": opt_state,
+                "step": state["step"] + 1}, {"loss": loss, **metrics}
+
+    return train_step, opt
+
+
+def make_contrastive_train_step(cfg: ArchConfig, fc: FCC.FastCLIPConfig,
+                                *, mesh_axes=None, reduction="fastclip",
+                                lr=1e-4, wd=0.1, total_steps=10_000,
+                                impl="chunked"):
+    tc = TS.TrainStepConfig(
+        arch=cfg, fc=fc, optimizer=adamw(),
+        lr_fn=lr_warmup_cosine(lr, 500, total_steps), wd=wd,
+        mesh_axes=mesh_axes, reduction=reduction, impl=impl)
+    return TS.make_train_step(tc), tc
+
+
+def make_prefill_step(cfg: ArchConfig, *, impl="chunked"):
+    def prefill_step(params, batch):
+        return BB.prefill_logits(params, cfg, batch, impl=impl)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape):
+    wo = decode_window(cfg, shape)
+
+    def serve_step(params, state, token, pos):
+        return BB.decode_step(params, cfg, state, token, pos,
+                              window_override=wo)
+    return serve_step
+
+
+def contrastive_fc_config(cfg: ArchConfig, shape: InputShape,
+                          version="v3") -> FCC.FastCLIPConfig:
+    # u buffers sized for one epoch of the shape's global batch x 1000 steps
+    return FCC.FastCLIPConfig(
+        version=version, n_samples=shape.global_batch * 1000,
+        steps_per_epoch=1000, gamma_decay_epochs=16)

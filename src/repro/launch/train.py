@@ -1,0 +1,142 @@
+"""Training launcher.
+
+Single-process CPU/TPU entry point for the contrastive (FastCLIP) and LM
+objectives on synthetic data, with checkpointing and periodic eval.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch clip-vitb32-cc12m --version v3 --steps 200 --reduced \
+        [--objective contrastive|lm] [--ckpt-dir ckpts] [--resume]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint as CK
+from repro.configs import INPUT_SHAPES, get_arch
+from repro.core import fastclip as FC
+from repro.core import train_step as TS
+from repro.core.schedules import lr_warmup_cosine
+from repro.data import (ContrastiveDataset, LMDataset,
+                        PairedEmbeddingDataset, ShardedLoader)
+from repro.models import backbones as BB
+from repro.optim import get_optimizer
+
+
+def build_dataset(cfg, objective, n, seq_len):
+    if cfg.family == "clip":
+        return ContrastiveDataset(n=n, image_size=cfg.clip.image_size,
+                                  context_length=cfg.clip.context_length,
+                                  vocab_size=cfg.vocab_size, n_classes=64)
+    if objective == "contrastive":
+        return PairedEmbeddingDataset(n=n, seq_len=seq_len,
+                                      vocab_size=cfg.vocab_size)
+    return LMDataset(n=n, seq_len=seq_len, vocab_size=cfg.vocab_size)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="clip-vitb32-cc12m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--version", default="v3", choices=FC.VERSIONS)
+    ap.add_argument("--objective", default="contrastive",
+                    choices=["contrastive", "lm"])
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--n-samples", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--wd", type=float, default=0.1)
+    ap.add_argument("--rho", type=float, default=6.5)
+    ap.add_argument("--eps", type=float, default=1e-14)
+    ap.add_argument("--gamma-min", type=float, default=0.2)
+    ap.add_argument("--reduction", default="fastclip",
+                    choices=["fastclip", "allgather_ad"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    ds = build_dataset(cfg, args.objective, args.n_samples, args.seq_len)
+    loader = ShardedLoader(ds, global_batch=args.global_batch,
+                           seed=args.seed)
+
+    if args.objective == "lm" and cfg.family != "clip":
+        from repro.launch.steps import make_lm_train_step
+        step_fn, opt = make_lm_train_step(cfg, lr=args.lr, wd=args.wd,
+                                          total_steps=args.steps)
+        params = BB.init_params(jax.random.PRNGKey(args.seed), cfg)
+        state = {"params": params, "opt": opt.init(params),
+                 "step": jnp.zeros((), jnp.int32)}
+        jit_step = jax.jit(step_fn)
+
+        def run_step(state, idx, batch):
+            return jit_step(state, batch)
+    else:
+        fc = FC.FastCLIPConfig(
+            version=args.version, n_samples=args.n_samples, rho=args.rho,
+            eps=args.eps, gamma_min=args.gamma_min,
+            tau_init=0.07 if args.version == "v3" else 0.03,
+            lr_tau=2e-4 if args.version == "v3" else 1e-2,
+            steps_per_epoch=loader.steps_per_epoch,
+            gamma_decay_epochs=max(
+                1, args.steps // (2 * loader.steps_per_epoch)))
+        tc = TS.TrainStepConfig(
+            arch=cfg, fc=fc, optimizer=get_optimizer(args.optimizer),
+            lr_fn=lr_warmup_cosine(args.lr, min(500, args.steps // 10 + 1),
+                                   args.steps),
+            wd=args.wd, reduction=args.reduction)
+        state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
+        jit_step = jax.jit(TS.make_train_step(tc))
+
+        def run_step(state, idx, batch):
+            return jit_step(state, batch, jnp.asarray(idx))
+
+    start = 0
+    if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir):
+        like = jax.tree.map(jnp.zeros_like, state)
+        state, start, _ = CK.restore(args.ckpt_dir, like)
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for epoch, step, idx, batch in loader.steps(args.steps):
+        if step < start:
+            continue
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, m = run_step(state, idx, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            msg = {k: round(float(v), 5) for k, v in m.items()}
+            print(f"step {step:5d} epoch {epoch} {json.dumps(msg)}",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
+                    metadata={"arch": args.arch, "version": args.version})
+    dt = time.time() - t0
+    print(f"trained {args.steps - start} steps in {dt:.1f}s "
+          f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")
+
+    if cfg.family == "clip" or args.objective == "contrastive":
+        eval_batch = {k: jnp.asarray(v)
+                      for k, v in ds.batch(np.arange(
+                          min(128, args.n_samples))).items()}
+        acc = float(TS.retrieval_accuracy(state["params"], cfg, eval_batch))
+        print(f"retrieval accuracy: {acc:.4f}")
+    if args.ckpt_dir:
+        CK.save(args.ckpt_dir, jax.device_get(state), args.steps,
+                metadata={"arch": args.arch, "version": args.version})
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Attention: GQA w/ RoPE, qk-norm, optional qkv-bias, sliding window,
+chunked (flash-style) training attention, cross-attention, KV-cache decode.
+
+Shapes: x (B, S, d); q (B, S, H, hd); k/v (B, S, Hkv, hd).
+The chunked implementation streams over query and key blocks with an online
+softmax so the full (S, S) score matrix is never resident — the pure-JAX
+analog of the Pallas flash kernel in ``repro.kernels.flash_attention``
+(which is the TPU hot path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    causal: bool = True
+    sliding_window: int = 0     # 0 = full
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+
+def init_attention(rng, spec: AttnSpec, kv_dim: Optional[int] = None):
+    """kv_dim: input dim for K/V projections (cross-attention)."""
+    r = L.split_rngs(rng, 4)
+    kv_dim = kv_dim or spec.d_model
+    H, Hk, hd, d = spec.n_heads, spec.n_kv_heads, spec.head_dim, spec.d_model
+    p = {
+        "wq": L.dense_init(r[0], d, H * hd),
+        "wk": L.dense_init(r[1], kv_dim, Hk * hd),
+        "wv": L.dense_init(r[2], kv_dim, Hk * hd),
+        "wo": L.dense_init(r[3], H * hd, d, scale=1.0 / np.sqrt(H * hd)),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((Hk * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((Hk * hd,), jnp.float32)
+    if spec.qk_norm:
+        p["q_norm"] = L.init_rmsnorm(hd)
+        p["k_norm"] = L.init_rmsnorm(hd)
+    return p
+
+
+def _project_q(params, spec, x):
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(x.dtype))
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(B, S, spec.n_heads, spec.head_dim)
+    if spec.qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+    return q
+
+
+def _project_kv(params, spec, x):
+    B, S, _ = x.shape
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(x.dtype))
+    if spec.qkv_bias:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    k = k.reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    v = v.reshape(B, S, spec.n_kv_heads, spec.head_dim)
+    if spec.qk_norm:
+        k = L.rmsnorm(params["k_norm"], k)
+    return k, v
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    B, S, Hk, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (B, S, Hk, n_rep, hd)).reshape(B, S, Hk * n_rep, hd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash-style attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_mask(q_pos, k_pos, causal, window):
+    """(qc, kc) boolean mask of *allowed* positions."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_chunk=512,
+                      kv_chunk=1024, q_offset=0):
+    """Online-softmax attention.  q: (B,Sq,H,hd), k/v: (B,Sk,H,hd).
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill=0)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Sk)
+    # pad to multiples
+    nq, nk = -(-Sq // qc), -(-Sk // kc)
+    pq, pk = nq * qc - Sq, nk * kc - Sk
+    scale = 1.0 / np.sqrt(hd)
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) * scale
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    # (n, B, c, H, hd)
+    qs = qf.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    ks = kf.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+    vs = vf.reshape(B, nk, kc, H, hd).transpose(1, 0, 2, 3, 4)
+    k_valid = (jnp.arange(nk * kc) < Sk).reshape(nk, kc)
+
+    def q_block(qi, qblk):
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, kblk, vblk, kval = inp
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            mask = _block_mask(q_pos, k_pos, causal, window) & kval[None, :]
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # mask again: for fully-masked blocks (e.g. pre-window) m_new may
+            # still be NEG_INF and exp(s - m_new) would be 1, not 0.
+            p = jnp.exp(s - m_new[..., None]) * mask[None, None]
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * alpha.transpose(0, 2, 1)[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, qc, H, hd), jnp.float32)
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nk), ks, vs, k_valid))
+        l = jnp.maximum(l, 1e-30)
+        return acc / l.transpose(0, 2, 1)[..., None]
+
+    per_q = jax.checkpoint(q_block)
+    out = jax.lax.map(lambda i_q: per_q(i_q[0], i_q[1]),
+                      (jnp.arange(nq), qs))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * qc, H, hd)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
+    """Reference O(S^2)-memory attention (oracle for tests)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(hd)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = _block_mask(q_pos, k_pos, causal, window)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full layer application
+# ---------------------------------------------------------------------------
+
+def attention(params, spec: AttnSpec, x, *, positions=None, kv_x=None,
+              impl="chunked"):
+    """Self- (kv_x=None) or cross- (kv_x=(B,Skv,d_kv)) attention, training
+    mode (no cache)."""
+    B, S, _ = x.shape
+    q = _project_q(params, spec, x)
+    cross = kv_x is not None
+    k, v = _project_kv(params, spec, kv_x if cross else x)
+    if not cross:
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q = L.apply_rope(q, positions, spec.rope_theta)
+        k = L.apply_rope(k, positions, spec.rope_theta)
+    n_rep = spec.n_heads // spec.n_kv_heads
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    causal = spec.causal and not cross
+    window = spec.sliding_window if not cross else 0
+    if impl == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+    else:
+        out = naive_attention(q, k, v, causal=causal, window=window)
+    out = out.reshape(B, S, spec.n_heads * spec.head_dim)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+# Cache layout per layer:
+#   full attention : k/v (B, S_max, Hkv, hd), entries beyond `pos` invalid.
+#   sliding window : ring buffer (B, W, Hkv, hd) + slot_pos (W,) absolute
+#                    positions (-1 = empty).  RoPE is applied at write time.
+
+
+def init_kv_cache(spec: AttnSpec, batch, max_len, dtype=jnp.bfloat16):
+    W = min(spec.sliding_window or max_len, max_len)
+    return {
+        "k": jnp.zeros((batch, W, spec.n_kv_heads, spec.head_dim), dtype),
+        "v": jnp.zeros((batch, W, spec.n_kv_heads, spec.head_dim), dtype),
+        "slot_pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def decode_attention(params, spec: AttnSpec, cache, x, pos):
+    """One-token decode.  x: (B, 1, d); pos: scalar int32 absolute position.
+    Returns (out (B,1,d), new_cache)."""
+    B = x.shape[0]
+    q = _project_q(params, spec, x)                      # (B,1,H,hd)
+    k_new, v_new = _project_kv(params, spec, x)          # (B,1,Hkv,hd)
+    posb = jnp.broadcast_to(pos[None] if pos.ndim == 0 else pos, (B, 1))
+    q = L.apply_rope(q, posb, spec.rope_theta)
+    k_new = L.apply_rope(k_new, posb, spec.rope_theta)
+
+    W = cache["k"].shape[1]
+    slot = (pos % W).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    slot_pos = cache["slot_pos"].at[slot].set(pos.astype(jnp.int32))
+    new_cache = {"k": k, "v": v, "slot_pos": slot_pos}
+
+    # attend over the whole buffer; mask invalid/out-of-window slots
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if spec.sliding_window:
+        valid &= slot_pos > pos - spec.sliding_window
+    n_rep = spec.n_heads // spec.n_kv_heads
+    kr, vr = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) / np.sqrt(spec.head_dim)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    out = out.reshape(B, 1, spec.n_heads * spec.head_dim).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype)), new_cache
+
+
+def init_cross_cache(params, spec: AttnSpec, kv_x):
+    """Precompute cross-attention K/V once (prefill);
+    kv_x: (B, Skv, d_kv)."""
+    k, v = _project_kv(params, spec, kv_x)
+    return {"k": k, "v": v}
+
+
+def decode_cross_attention(params, spec: AttnSpec, cross_cache, x):
+    B = x.shape[0]
+    q = _project_q(params, spec, x)
+    n_rep = spec.n_heads // spec.n_kv_heads
+    k = _repeat_kv(cross_cache["k"].astype(x.dtype), n_rep)
+    v = _repeat_kv(cross_cache["v"].astype(x.dtype), n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / np.sqrt(spec.head_dim)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+    out = out.reshape(B, 1, spec.n_heads * spec.head_dim).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))

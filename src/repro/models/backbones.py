@@ -1,0 +1,568 @@
+"""Backbone assembly: build every assigned architecture family from the
+shared substrate, with a uniform interface:
+
+    init_params(rng, cfg)                       -> params pytree
+    lm_loss(params, cfg, batch)                 -> (loss, metrics)
+    forward_hidden(params, cfg, batch)          -> (B, S, d) final hidden
+    encode(params, cfg, batch)                  -> (B, E) contrastive tower
+    encode_pair(params, cfg, batch)             -> (e1, e2) two-tower pair
+    init_decode_state(cfg, batch, seq_len)      -> decode caches (zeros)
+    decode_step(params, cfg, state, token, pos) -> (logits, state)
+
+Depth patterns are *super-blocks* scanned with lax.scan so HLO size is
+depth-independent:
+    dense   : [attn+mlp] x L
+    moe     : [dense? + attn+moe] x (L // every)
+    vlm     : [self x (every-1) + cross] x (L // every)
+    hybrid  : [mamba x every + shared-attn(tied)] x (L // every) + remainder
+    ssm     : repeating xLSTM pattern unit, contiguous runs scanned
+    audio   : encoder stack + decoder stack with cross-attention
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import sharding as SH
+from repro.models import moe as M
+from repro.models import ssm as SSM
+from repro.models import transformer as T
+from repro.models import xlstm as X
+
+CONTRASTIVE_DIM = 512   # joint embedding dim for the contrastive objective
+PAIR_DIM = 512          # stub paired-modality embedding dim
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+def _init_common(r, cfg: ArchConfig):
+    p = {
+        "embed": L.embed_init(r[0], cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "ctr_proj": L.dense_init(r[1], cfg.d_model, CONTRASTIVE_DIM),
+        "pair_proj": L.dense_init(r[2], PAIR_DIM, CONTRASTIVE_DIM),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(r[3], cfg.d_model, cfg.padded_vocab)
+    return p
+
+
+def _xlstm_groups(cfg: ArchConfig):
+    """Parse the repeating pattern into (unit_groups, n_units).
+    unit_groups: list of (kind, count) contiguous runs of the unit."""
+    pat = cfg.xlstm_pattern[:cfg.n_layers]
+    # find shortest repeating unit
+    for ulen in range(1, len(pat) + 1):
+        if len(pat) % ulen == 0 and pat[:ulen] * (len(pat) // ulen) == pat:
+            unit = pat[:ulen]
+            break
+    groups = []
+    for ch in unit:
+        if groups and groups[-1][0] == ch:
+            groups[-1] = (ch, groups[-1][1] + 1)
+        else:
+            groups.append((ch, 1))
+    return groups, len(pat) // len(unit)
+
+
+def init_params(rng, cfg: ArchConfig) -> Dict[str, Any]:
+    if cfg.family == "clip":
+        from repro.models import clip as C
+        return C.init_clip(rng, cfg)
+    r = L.split_rngs(rng, 10)
+    p = _init_common(r, cfg)
+    fam = cfg.family
+
+    if fam == "dense":
+        p["blocks"] = T.init_stack(r[4], cfg, cfg.n_layers)
+
+    elif fam == "moe":
+        every = cfg.moe.every
+        n_super = cfg.n_layers // every
+
+        def init_super(key):
+            ks = L.split_rngs(key, 3)
+            sp = {"attn_blk": T.init_block(ks[0], cfg, mlp="none"),
+                  "moe": M.init_moe(ks[1], cfg)}
+            if every == 2:
+                sp["dense_blk"] = T.init_block(ks[2], cfg, mlp="swiglu")
+            return sp
+
+        p["supers"] = L.init_stack(r[4], n_super, init_super)
+
+    elif fam == "vlm":
+        every = cfg.cross_attn_every
+        n_super = cfg.n_layers // every
+
+        def init_super(key):
+            ks = L.split_rngs(key, 2)
+            return {
+                "selfs": L.init_stack(
+                    ks[0], every - 1, lambda k: T.init_block(k, cfg)),
+                "cross_blk": T.init_block(ks[1], cfg, cross=True),
+            }
+
+        p["supers"] = L.init_stack(r[4], n_super, init_super)
+        p["img_proj"] = L.dense_init(r[5], cfg.vision_dim, cfg.d_model)
+
+    elif fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_super = cfg.n_layers // every
+        rem = cfg.n_layers - n_super * every
+        p["supers"] = L.init_stack(
+            r[4], n_super,
+            lambda k: {"mambas": L.init_stack(
+                k, every, lambda kk: SSM.init_mamba2(kk, cfg))})
+        p["shared_attn"] = T.init_block(r[5], cfg, mlp="swiglu")
+        if rem:
+            p["tail"] = L.init_stack(
+                r[6], rem, lambda k: SSM.init_mamba2(k, cfg))
+
+    elif fam == "ssm":
+        groups, n_units = _xlstm_groups(cfg)
+
+        def init_unit(key):
+            ks = L.split_rngs(key, len(groups))
+            up = {}
+            for gi, (kind, cnt) in enumerate(groups):
+                ini = (X.init_mlstm_block if kind == "m"
+                       else X.init_slstm_block)
+                up[f"g{gi}"] = L.init_stack(ks[gi], cnt,
+                                            lambda k, i=ini: i(k, cfg))
+            return up
+
+        p["units"] = L.init_stack(r[4], n_units, init_unit)
+
+    elif fam == "audio":
+        p["enc_blocks"] = L.init_stack(
+            r[4], cfg.enc_layers,
+            lambda k: T.init_block(k, cfg, mlp="swiglu"))
+        p["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+        p["dec_blocks"] = L.init_stack(
+            r[5], cfg.n_layers,
+            lambda k: T.init_block(k, cfg, cross=True))
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def forward_hidden(params, cfg: ArchConfig, batch, *, impl="chunked",
+                   window_override=None):
+    """Token path -> final hidden states (B, S, d), pre-final-norm residual
+    stream normalized at the end.  Extra losses (MoE aux) in second output."""
+    tokens = batch["tokens"]
+    x = L.embed_tokens(params["embed"], tokens)
+    x = SH.constrain(x, ("batch", "seq", None))
+    aux = {}
+    fam = cfg.family
+    spec = T.attn_spec(cfg, window_override=window_override)
+
+    if fam == "dense":
+        def body(h, p):
+            h = SH.constrain(h, ("batch", "seq", None))
+            return T.apply_block(p, cfg, h, spec=spec, impl=impl), None
+        x, _ = L.scan_layers_grouped(
+            body, x, params["blocks"],
+            group=L.default_remat_group(cfg.n_layers),
+            inner_remat=SH.inner_remat())
+
+    elif fam == "moe":
+        def body(carry, p):
+            h, lb, z = carry
+            h = SH.constrain(h, ("batch", "seq", None))
+            if "dense_blk" in p:
+                h = T.apply_block(p["dense_blk"], cfg, h, spec=spec,
+                                  impl=impl)
+            h = T.apply_block(p["attn_blk"], cfg, h, spec=spec, impl=impl,
+                              mlp="swiglu")
+            if SH.moe_a2a_enabled():
+                h, a = SH.apply_moe_sharded(p["moe"], cfg, h)
+            else:
+                h, a = M.apply_moe(p["moe"], cfg, h)
+            return (h, lb + a["moe_lb"], z + a["moe_z"]), None
+        n_super = cfg.n_layers // cfg.moe.every
+        (x, lb, z), _ = L.scan_layers_grouped(
+            body, (x, 0.0, 0.0), params["supers"],
+            group=L.default_remat_group(n_super))
+        aux = {"moe_lb": lb / n_super, "moe_z": z / n_super}
+
+    elif fam == "vlm":
+        img = jnp.einsum("bnv,vd->bnd", batch["image_embeds"],
+                         params["img_proj"].astype(x.dtype))
+
+        def body(h, p):
+            def inner(hh, pp):
+                return T.apply_block(pp, cfg, hh, spec=spec, impl=impl), None
+            h, _ = L.scan_layers(inner, h, p["selfs"], remat=True)
+            h = T.apply_block(p["cross_blk"], cfg, h, spec=spec, kv_x=img,
+                              impl=impl)
+            return h, None
+        x, _ = L.scan_layers(body, x, params["supers"], remat=True)
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def body(h, p):
+            def inner(hh, pp):
+                return SSM.apply_mamba2(pp, cfg, hh), None
+            h, _ = L.scan_layers(inner, h, p["mambas"], remat=True)
+            h = T.apply_block(shared, cfg, h, spec=spec, impl=impl)
+            return h, None
+        x, _ = L.scan_layers(body, x, params["supers"], remat=True)
+        if "tail" in params:
+            def tail_body(h, p):
+                return SSM.apply_mamba2(p, cfg, h), None
+            x, _ = L.scan_layers(tail_body, x, params["tail"], remat=True)
+
+    elif fam == "ssm":
+        groups, _ = _xlstm_groups(cfg)
+
+        def body(h, p):
+            for gi, (kind, cnt) in enumerate(groups):
+                if kind == "m":
+                    def inner(hh, pp):
+                        return X.apply_mlstm_block(pp, cfg, hh), None
+                else:
+                    def inner(hh, pp):
+                        return X.apply_slstm_block(pp, cfg, hh), None
+                h, _ = L.scan_layers(inner, h, p[f"g{gi}"], remat=True)
+            return h, None
+        x, _ = L.scan_layers(body, x, params["units"], remat=True)
+
+    elif fam == "audio":
+        enc = encode_frames(params, cfg, batch["frames"], impl=impl)
+
+        def body(h, p):
+            return T.apply_block(p, cfg, h, spec=spec, kv_x=enc,
+                                 impl=impl), None
+        x, _ = L.scan_layers(body, x, params["dec_blocks"], remat=True)
+    else:
+        raise ValueError(fam)
+
+    return L.rmsnorm(params["final_norm"], x), aux
+
+
+def encode_frames(params, cfg: ArchConfig, frames, *, impl="chunked"):
+    """Audio encoder over stub frame embeddings (B, S_enc, d_model)."""
+    enc_spec = T.attn_spec(cfg, causal=True)  # streaming-friendly encoder
+
+    def body(h, p):
+        return T.apply_block(p, cfg, h, spec=enc_spec, impl=impl), None
+
+    enc, _ = L.scan_layers(body, frames, params["enc_blocks"], remat=True)
+    return L.rmsnorm(params["enc_norm"], enc)
+
+
+def logits_from_hidden(params, cfg: ArchConfig, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x, transpose=True)
+    return L.unembed(params["lm_head"], x)
+
+
+def lm_loss(params, cfg: ArchConfig, batch, *, impl="chunked"):
+    x, aux = forward_hidden(params, cfg, batch, impl=impl)
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    loss = L.vocab_parallel_ce(x, table, batch["labels"],
+                               tied=cfg.tie_embeddings,
+                               vocab_valid=cfg.vocab_size)
+    total = loss + sum(aux.values())
+    metrics = {"ce": loss, **aux}
+    return total, metrics
+
+
+def prefill_logits(params, cfg: ArchConfig, batch, *, impl="chunked"):
+    """Inference prefill: logits for the last position."""
+    x, _ = forward_hidden(params, cfg, batch, impl=impl)
+    return logits_from_hidden(params, cfg, x[:, -1:])
+
+
+# ===========================================================================
+# Contrastive towers (the paper's technique as a first-class objective)
+# ===========================================================================
+
+def encode(params, cfg: ArchConfig, batch, *, impl="chunked"):
+    """Backbone tower -> (B, CONTRASTIVE_DIM) unnormalized embedding."""
+    if cfg.family == "audio":
+        x = encode_frames(params, cfg, batch["frames"], impl=impl)
+    else:
+        x, _ = forward_hidden(params, cfg, batch, impl=impl)
+    pooled = jnp.mean(x, axis=1)
+    return jnp.einsum("bd,de->be", pooled, params["ctr_proj"].astype(x.dtype))
+
+
+def encode_pair(params, cfg: ArchConfig, batch, *, impl="chunked"):
+    """Two towers: backbone over tokens/frames vs. stub paired-modality
+    embeddings (B, PAIR_DIM) through a learned projection."""
+    if cfg.family == "clip":
+        from repro.models import clip as C
+        return C.encode_pair(params, cfg, batch)
+    e2 = encode(params, cfg, batch, impl=impl)
+    e1 = jnp.einsum("bp,pe->be", batch["pair_embeds"],
+                    params["pair_proj"].astype(e2.dtype))
+    return e1, e2
+
+
+# ===========================================================================
+# Decode (serve_step)
+# ===========================================================================
+
+def _kv_zeros(cfg, lead, batch, max_len, dtype, window_override=None):
+    spec = T.attn_spec(cfg, window_override=window_override)
+    W = min(spec.sliding_window or max_len, max_len)
+    Hk, hd = spec.n_kv_heads, spec.head_dim
+    return {"k": jnp.zeros(lead + (batch, W, Hk, hd), dtype),
+            "v": jnp.zeros(lead + (batch, W, Hk, hd), dtype),
+            "slot_pos": jnp.full(lead + (W,), -1, jnp.int32)}
+
+
+def init_decode_state(cfg: ArchConfig, batch_size, max_len,
+                      dtype=jnp.bfloat16, *, window_override=None):
+    """Zero decode caches with the right structure (dry-run friendly)."""
+    fam = cfg.family
+    B = batch_size
+    wo = window_override
+    if fam == "dense":
+        return {"kv": _kv_zeros(cfg, (cfg.n_layers,), B, max_len, dtype, wo)}
+    if fam == "moe":
+        n_super = cfg.n_layers // cfg.moe.every
+        st = {"moe_kv": _kv_zeros(cfg, (n_super,), B, max_len, dtype, wo)}
+        if cfg.moe.every == 2:
+            st["dense_kv"] = _kv_zeros(cfg, (n_super,), B, max_len, dtype, wo)
+        return st
+    if fam == "vlm":
+        every = cfg.cross_attn_every
+        n_super = cfg.n_layers // every
+        Hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {
+            "self_kv": _kv_zeros(cfg, (n_super, every - 1), B, max_len,
+                                 dtype, wo),
+            "cross_self_kv": _kv_zeros(cfg, (n_super,), B, max_len, dtype, wo),
+            "cross_kv": {
+                "k": jnp.zeros((n_super, B, cfg.n_image_tokens, Hk, hd), dtype),
+                "v": jnp.zeros((n_super, B, cfg.n_image_tokens, Hk, hd), dtype),
+            },
+        }
+    if fam == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_super = cfg.n_layers // every
+        rem = cfg.n_layers - n_super * every
+        d, d_inner, P, H, N = SSM._dims(cfg)
+        w = cfg.ssm.conv_width
+
+        def mamba_zeros(lead):
+            return {"conv": jnp.zeros(lead + (B, w - 1, d_inner + 2 * N),
+                                      jnp.float32),
+                    "S": jnp.zeros(lead + (B, H, N, P), jnp.float32)}
+
+        st = {"mambas": mamba_zeros((n_super, every)),
+              "shared_kv": _kv_zeros(cfg, (n_super,), B, max_len, dtype, wo)}
+        if rem:
+            st["tail"] = mamba_zeros((rem,))
+        return st
+    if fam == "ssm":
+        groups, n_units = _xlstm_groups(cfg)
+        d, d_inner, H, P = X._mdims(cfg)
+        Hs, Ps = cfg.n_heads, cfg.d_model // cfg.n_heads
+        st = {}
+        for gi, (kind, cnt) in enumerate(groups):
+            lead = (n_units, cnt)
+            if kind == "m":
+                st[f"g{gi}"] = {
+                    "C": jnp.zeros(lead + (B, H, P, P), jnp.float32),
+                    "n": jnp.zeros(lead + (B, H, P), jnp.float32),
+                    "m": jnp.full(lead + (B, H), X.NEG, jnp.float32)}
+            else:
+                z = jnp.zeros(lead + (B, Hs, Ps), jnp.float32)
+                st[f"g{gi}"] = {"h": z, "c": z, "n": z,
+                                "m": jnp.full(lead + (B, Hs, Ps), X.NEG,
+                                              jnp.float32)}
+        return st
+    if fam == "audio":
+        Hk, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        n_enc = max_len // cfg.audio_subsample
+        return {
+            "self_kv": _kv_zeros(cfg, (cfg.n_layers,), B, max_len, dtype, wo),
+            "cross_kv": {
+                "k": jnp.zeros((cfg.n_layers, B, n_enc, Hk, hd), dtype),
+                "v": jnp.zeros((cfg.n_layers, B, n_enc, Hk, hd), dtype),
+            },
+        }
+    raise ValueError(fam)
+
+
+def decode_step(params, cfg: ArchConfig, state, token, pos, *,
+                window_override=None):
+    """One-token decode.  token: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, padded_vocab), new_state)."""
+    x = L.embed_tokens(params["embed"], token)
+    fam = cfg.family
+    spec = T.attn_spec(cfg, window_override=window_override)
+    new_state = dict(state)
+
+    if fam == "dense":
+        def body(h, p, c):
+            hh, cc = T.decode_block(p, cfg, {"kv": c}, h, pos, spec=spec)
+            return hh, cc["kv"]
+        x, kv = L.scan_layers(body, x, params["blocks"], state["kv"])
+        new_state["kv"] = kv
+
+    elif fam == "moe":
+        def body(h, p, c):
+            caches = {"moe_kv": c["moe_kv"]}
+            if "dense_blk" in p:
+                hh, dkv = T.decode_block(p["dense_blk"], cfg,
+                                         {"kv": c["dense_kv"]}, h, pos,
+                                         spec=spec)
+            else:
+                hh, dkv = h, None
+            hh, akv = T.decode_block(p["attn_blk"], cfg,
+                                     {"kv": c["moe_kv"]}, hh, pos,
+                                     spec=spec, mlp="swiglu")
+            hh, _ = M.apply_moe(p["moe"], cfg, hh)
+            out_c = {"moe_kv": akv["kv"]}
+            if dkv is not None:
+                out_c["dense_kv"] = dkv["kv"]
+            return hh, out_c
+        cache_xs = {"moe_kv": state["moe_kv"]}
+        if "dense_kv" in state:
+            cache_xs["dense_kv"] = state["dense_kv"]
+        x, caches = L.scan_layers(body, x, params["supers"], cache_xs)
+        new_state.update(caches)
+
+    elif fam == "vlm":
+        def body(h, p, c):
+            def inner(hh, pp, cc):
+                hh, ncc = T.decode_block(pp, cfg, {"kv": cc}, hh, pos,
+                                         spec=spec)
+                return hh, ncc["kv"]
+            h, skv = L.scan_layers(inner, h, p["selfs"], c["self_kv"])
+            h, ckv = T.decode_block(
+                p["cross_blk"], cfg,
+                {"kv": c["cross_self_kv"], "cross": c["cross_kv"]},
+                h, pos, spec=spec)
+            return h, {"self_kv": skv, "cross_self_kv": ckv["kv"],
+                       "cross_kv": c["cross_kv"]}
+        x, caches = L.scan_layers(
+            body, x, params["supers"],
+            {"self_kv": state["self_kv"],
+             "cross_self_kv": state["cross_self_kv"],
+             "cross_kv": state["cross_kv"]})
+        new_state.update(caches)
+
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def body(h, p, c):
+            def inner(hh, pp, cc):
+                hh, ncc = SSM.decode_mamba2(pp, cfg, cc, hh)
+                return hh, ncc
+            h, mc = L.scan_layers(inner, h, p["mambas"], c["mambas"])
+            h, skv = T.decode_block(shared, cfg, {"kv": c["shared_kv"]},
+                                    h, pos, spec=spec)
+            return h, {"mambas": mc, "shared_kv": skv["kv"]}
+        x, caches = L.scan_layers(
+            body, x, params["supers"],
+            {"mambas": state["mambas"], "shared_kv": state["shared_kv"]})
+        new_state.update(caches)
+        if "tail" in params:
+            def tail_body(h, p, c):
+                return SSM.decode_mamba2(p, cfg, c, h)
+            x, tc = L.scan_layers(tail_body, x, params["tail"], state["tail"])
+            new_state["tail"] = tc
+
+    elif fam == "ssm":
+        groups, _ = _xlstm_groups(cfg)
+
+        def body(h, p, c):
+            out_c = {}
+            for gi, (kind, cnt) in enumerate(groups):
+                if kind == "m":
+                    def inner(hh, pp, cc):
+                        return X.decode_mlstm_block(pp, cfg, cc, hh)
+                else:
+                    def inner(hh, pp, cc):
+                        return X.decode_slstm_block(pp, cfg, cc, hh)
+                h, out_c[f"g{gi}"] = L.scan_layers(inner, h, p[f"g{gi}"],
+                                                   c[f"g{gi}"])
+            return h, out_c
+        x, caches = L.scan_layers(body, x, params["units"], state)
+        new_state = caches
+
+    elif fam == "audio":
+        def body(h, p, c):
+            hh, cc = T.decode_block(
+                p, cfg, {"kv": c["self_kv"], "cross": c["cross_kv"]},
+                h, pos, spec=spec)
+            return hh, {"self_kv": cc["kv"], "cross_kv": c["cross_kv"]}
+        x, caches = L.scan_layers(
+            body, x, params["dec_blocks"],
+            {"self_kv": state["self_kv"], "cross_kv": state["cross_kv"]})
+        new_state.update(caches)
+    else:
+        raise ValueError(fam)
+
+    x = L.rmsnorm(params["final_norm"], x)
+    logits = logits_from_hidden(params, cfg, x)[:, 0]
+    return logits, new_state
+
+
+def prepare_decode_state(params, cfg: ArchConfig, batch, batch_size, max_len,
+                         dtype=jnp.float32, *, window_override=None):
+    """Decode state with *cross-attention caches filled* from the batch's
+    modality inputs (image embeds / audio frames).  Self caches start empty;
+    feed the prompt through ``decode_step`` to fill them."""
+    state = init_decode_state(cfg, batch_size, max_len, dtype,
+                              window_override=window_override)
+    spec_c = T.attn_spec(cfg, causal=False)
+    if cfg.family == "vlm":
+        img = jnp.einsum("bnv,vd->bnd", batch["image_embeds"],
+                         params["img_proj"])
+
+        def one(p):
+            c = A.init_cross_cache(p["cross_blk"]["cross"], spec_c, img)
+            return {"k": c["k"].astype(dtype), "v": c["v"].astype(dtype)}
+        state["cross_kv"] = jax.vmap(one)(params["supers"])
+    elif cfg.family == "audio":
+        enc = encode_frames(params, cfg, batch["frames"])
+
+        def one(p):
+            c = A.init_cross_cache(p["cross"], spec_c, enc)
+            return {"k": c["k"].astype(dtype), "v": c["v"].astype(dtype)}
+        state["cross_kv"] = jax.vmap(one)(params["dec_blocks"])
+    return state
+
+
+# ===========================================================================
+# Parameter counting (eval_shape: exact, no allocation)
+# ===========================================================================
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def count_params_analytic(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    for path, leaf in flat:
+        n = int(np.prod(leaf.shape))
+        keys = "/".join(str(k) for k in path)
+        if active_only and "moe" in keys and any(
+                w in keys for w in ("w_gate", "w_up", "w_down")):
+            n = int(n * cfg.moe.top_k / max(cfg.moe.n_experts, 1))
+        total += n
+    return total

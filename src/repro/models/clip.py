@@ -1,0 +1,62 @@
+"""Two-tower CLIP model (the paper's own architectures).
+
+Text tower: 12-layer pre-norm transformer (causal, as in CLIP), pooled at
+the last token.  Vision tower: ViT or ResNet50 per config.  Returns
+*unnormalized* embeddings; L2 normalization happens in the loss layer
+(repro.core) so its gradient is part of the contrastive VJP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vit as V
+from repro.models import resnet as R
+
+
+def init_clip(rng, cfg: ArchConfig):
+    c = cfg.clip
+    r = L.split_rngs(rng, 5)
+    if c.vision_arch == "vit":
+        vision = V.init_vit(r[0], c)
+    elif c.vision_arch == "resnet":
+        vision = R.init_resnet(r[0], c)
+    else:
+        raise ValueError(c.vision_arch)
+    return {
+        "vision": vision,
+        "tok_embed": L.embed_init(r[1], cfg.vocab_size, cfg.d_model),
+        "pos_embed": jax.random.normal(r[2], (1, c.context_length,
+                                              cfg.d_model)) * 0.01,
+        "text_blocks": T.init_stack(r[3], cfg, cfg.n_layers, mlp="gelu"),
+        "text_norm": L.init_rmsnorm(cfg.d_model),
+        "text_proj": L.dense_init(r[4], cfg.d_model, c.embed_dim),
+    }
+
+
+def encode_image(params, cfg: ArchConfig, images):
+    c = cfg.clip
+    if c.vision_arch == "vit":
+        return V.apply_vit(params["vision"], c, images)
+    return R.apply_resnet(params["vision"], c, images)
+
+
+def encode_text(params, cfg: ArchConfig, tokens):
+    """tokens: (B, context_length) int32."""
+    x = L.embed_tokens(params["tok_embed"], tokens)
+    x = x + params["pos_embed"].astype(x.dtype)
+    x = T.apply_stack(params["text_blocks"], cfg, x, mlp="gelu")
+    x = L.rmsnorm(params["text_norm"], x)
+    pooled = x[:, -1]  # last token (synthetic data: fixed-length captions)
+    return jnp.einsum("bd,de->be", pooled, params["text_proj"].astype(x.dtype))
+
+
+def encode_pair(params, cfg: ArchConfig, batch):
+    """batch: {"images": (B,H,W,3), "texts": (B,ctx)} ->
+    (e1 (B,E), e2 (B,E)) unnormalized image/text embeddings."""
+    e1 = encode_image(params, cfg, batch["images"])
+    e2 = encode_text(params, cfg, batch["texts"])
+    return e1, e2

@@ -1,0 +1,249 @@
+"""Shared neural-net building blocks (pure JAX, functional params-as-pytrees).
+
+Conventions
+-----------
+- ``init_*`` functions take an ``rng`` and return a params pytree (nested
+  dicts of jnp arrays, f32 by default).
+- ``apply`` functions are pure; compute dtype follows the input dtype.
+- Layer stacks are built with ``jax.vmap`` over per-layer rngs and consumed
+  with ``jax.lax.scan`` so the lowered HLO size is depth-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_rngs(rng, n):
+    return jax.random.split(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim, out_dim, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(rng, (in_dim, out_dim), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(rng, vocab, dim, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, dim), dtype=jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+def init_layernorm(dim):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"] + params["bias"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(rng, d_model, d_ff):
+    r1, r2, r3 = split_rngs(rng, 3)
+    return {
+        "w_gate": dense_init(r1, d_model, d_ff),
+        "w_up": dense_init(r2, d_model, d_ff),
+        "w_down": dense_init(r3, d_ff, d_model),
+    }
+
+
+def swiglu(params, x):
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+
+
+def init_gelu_mlp(rng, d_model, d_ff):
+    r1, r2 = split_rngs(rng, 2)
+    return {
+        "w_in": dense_init(r1, d_model, d_ff),
+        "b_in": jnp.zeros((d_ff,), jnp.float32),
+        "w_out": dense_init(r2, d_ff, d_model),
+        "b_out": jnp.zeros((d_model,), jnp.float32),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jnp.einsum("...d,df->...f", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_in"].astype(x.dtype))
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"].astype(x.dtype))
+    return out + params["b_out"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim, theta):
+    exponent = np.arange(0, head_dim, 2, dtype=np.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (...,S,hd//2)
+    cos = jnp.cos(angles)[..., None, :]   # (...,S,1,hd//2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_tokens(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_w, x, transpose=False):
+    """Logits. ``transpose=True`` means the arg is the (V,d) embedding table
+    (tied embeddings)."""
+    w = table_or_w.astype(x.dtype)
+    if transpose:
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def cross_entropy(logits, labels, vocab_valid=None):
+    """Mean CE. ``vocab_valid``: mask out padded vocab entries."""
+    logits = logits.astype(jnp.float32)
+    if vocab_valid is not None and vocab_valid < logits.shape[-1]:
+        v = jnp.arange(logits.shape[-1])
+        logits = jnp.where(v < vocab_valid, logits, -1e9)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def vocab_parallel_ce(x, table, labels, *, tied, vocab_valid):
+    """Sharding-friendly CE (Megatron-style).  Never gathers the logits
+    over the vocab axis: the gold logit is recomputed as x . embed[label]
+    and logsumexp reduces the vocab-sharded logits with a scalar psum.
+
+    x: (B, S, d) final hidden; table: (V, d) if tied else (d, V);
+    labels: (B, S).
+    """
+    from repro.models.sharding import constrain
+    logits = unembed(table, x, transpose=tied)           # (B, S, V) model-dtype
+    logits = constrain(logits, ("batch", None, "model"))
+    V = logits.shape[-1]
+    if vocab_valid is not None and vocab_valid < V:
+        v = jnp.arange(V)
+        logits = jnp.where(v < vocab_valid, logits,
+                           jnp.asarray(-1e9, logits.dtype))
+    m = jnp.max(logits, axis=-1).astype(jnp.float32)
+    lse = m + jnp.log(jnp.sum(
+        jnp.exp(logits.astype(jnp.float32) - m[..., None]), axis=-1))
+    if tied:
+        rows = jnp.take(table, labels, axis=0)           # (B, S, d)
+    else:
+        rows = jnp.take(table, labels, axis=1)           # (d, B, S)
+        rows = jnp.moveaxis(rows, 0, -1)
+    gold = jnp.sum(x.astype(jnp.float32) * rows.astype(jnp.float32), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer helpers (scan over depth)
+# ---------------------------------------------------------------------------
+
+def init_stack(rng, n_layers, init_one):
+    """vmap a per-layer initializer over layer rngs -> stacked params with a
+    leading (n_layers,) axis on every leaf."""
+    rngs = jax.random.split(rng, n_layers)
+    return jax.vmap(init_one)(rngs)
+
+
+def scan_layers(f, carry, stacked_params, *stacked_xs, remat=False,
+                length=None):
+    """Run ``carry = f(carry, layer_params, *xs)`` over the leading layer
+    axis with lax.scan.  ``f`` may also return a per-layer output."""
+    body = f
+    if remat:
+        body = jax.checkpoint(f)
+
+    def step(c, inp):
+        return body(c, *inp)
+
+    return jax.lax.scan(step, carry, (stacked_params, *stacked_xs),
+                        length=length)
+
+
+def scan_layers_grouped(f, carry, stacked_params, *stacked_xs, group=4,
+                        inner_remat=True):
+    """Nested-remat layer scan: outer scan over L/group groups (remat'd)
+    with an inner scan over ``group`` layers (each layer remat'd too).
+
+    Memory: the residual carry is saved once per *group* instead of once
+    per layer — the difference between fitting and OOM for the deep/wide
+    archs at train_4k (see DESIGN.md §4).  Backward recompute cost: one
+    extra forward per group level (~1/3 step time), standard for
+    megatron-scale training.
+    """
+    leaves = jax.tree.leaves(stacked_params)
+    L = leaves[0].shape[0]
+    if group <= 1 or L % group != 0 or L <= group:
+        return scan_layers(f, carry, stacked_params, *stacked_xs, remat=True)
+
+    def regroup(t):
+        return jax.tree.map(
+            lambda a: a.reshape((L // group, group) + a.shape[1:]), t)
+
+    gp = regroup(stacked_params)
+    gxs = tuple(regroup(x) for x in stacked_xs)
+    inner_f = jax.checkpoint(f) if inner_remat else f
+
+    def group_body(c, inp):
+        def step(c2, inp2):
+            return inner_f(c2, *inp2)
+        return jax.lax.scan(step, c, inp)
+
+    carry, ys = jax.lax.scan(jax.checkpoint(group_body), carry, (gp, *gxs))
+    ys = jax.tree.map(
+        lambda a: a.reshape((L,) + a.shape[2:]) if a is not None else a, ys)
+    return carry, ys
+
+
+def default_remat_group(n_layers: int) -> int:
+    """sqrt-ish grouping: balances saved-carry memory vs recompute."""
+    if n_layers < 8:
+        return 1
+    for g in (8, 6, 5, 4, 3, 2):
+        if n_layers % g == 0:
+            return g
+    return 1

@@ -1,0 +1,101 @@
+"""ResNet-50 vision tower (paper medium-scale setting).
+
+Deviation from CLIP's modified RN50 (documented in DESIGN.md): GroupNorm(32)
+instead of BatchNorm (stateless/pure-functional, no cross-replica stats) and
+global average pooling + linear projection instead of attention pooling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CLIPConfig
+from repro.models import layers as L
+
+BOTTLENECK_COUNTS = {50: (3, 4, 6, 3)}
+
+
+def _conv_init(rng, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(rng, (kh, kw, cin, cout)) / np.sqrt(fan_in)
+
+
+def conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w.astype(x.dtype), (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def init_groupnorm(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def groupnorm(p, x, groups=32, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    dt = x.dtype
+    xr = x.astype(jnp.float32).reshape(B, H, W, g, C // g)
+    mu = jnp.mean(xr, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xr, axis=(1, 2, 4), keepdims=True)
+    xr = (xr - mu) * jax.lax.rsqrt(var + eps)
+    x = xr.reshape(B, H, W, C)
+    return (x * p["scale"] + p["bias"]).astype(dt)
+
+
+def init_bottleneck(rng, cin, cmid, stride):
+    r = L.split_rngs(rng, 4)
+    cout = cmid * 4
+    p = {
+        "c1": _conv_init(r[0], 1, 1, cin, cmid), "n1": init_groupnorm(cmid),
+        "c2": _conv_init(r[1], 3, 3, cmid, cmid), "n2": init_groupnorm(cmid),
+        "c3": _conv_init(r[2], 1, 1, cmid, cout), "n3": init_groupnorm(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["down"] = _conv_init(r[3], 1, 1, cin, cout)
+        p["down_n"] = init_groupnorm(cout)
+    return p
+
+
+def apply_bottleneck(p, x, stride):
+    h = jax.nn.relu(groupnorm(p["n1"], conv(x, p["c1"])))
+    h = jax.nn.relu(groupnorm(p["n2"], conv(h, p["c2"], stride=stride)))
+    h = groupnorm(p["n3"], conv(h, p["c3"]))
+    if "down" in p:
+        x = groupnorm(p["down_n"], conv(x, p["down"], stride=stride))
+    return jax.nn.relu(x + h)
+
+
+def init_resnet(rng, c: CLIPConfig):
+    counts = BOTTLENECK_COUNTS[50]
+    width = c.vision_width  # stem width, 64 for RN50
+    r = L.split_rngs(rng, 3 + len(counts))
+    p = {"stem": _conv_init(r[0], 7, 7, 3, width),
+         "stem_n": init_groupnorm(width)}
+    cin = width
+    for si, n in enumerate(counts):
+        cmid = width * (2 ** si)
+        blocks = []
+        rr = L.split_rngs(r[1 + si], n)
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            blocks.append(init_bottleneck(rr[bi], cin, cmid, stride))
+            cin = cmid * 4
+        p[f"stage{si}"] = blocks
+    p["proj"] = L.dense_init(r[-1], cin, c.embed_dim)
+    return p
+
+
+def apply_resnet(params, c: CLIPConfig, images):
+    """images (B,H,W,3) -> (B, embed_dim)."""
+    x = conv(images, params["stem"], stride=2)
+    x = jax.nn.relu(groupnorm(params["stem_n"], x))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    counts = BOTTLENECK_COUNTS[50]
+    for si, n in enumerate(counts):
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            x = apply_bottleneck(params[f"stage{si}"][bi], x, stride)
+    pooled = jnp.mean(x, axis=(1, 2))
+    return jnp.einsum("bc,ce->be", pooled, params["proj"].astype(x.dtype))

@@ -1,0 +1,214 @@
+"""Mamba2 (chunkwise SSD) blocks.
+
+The SSD recurrence per head (state S: (N, P)):
+
+    S_t = a_t * S_{t-1} + B_t (x) x_t        a_t in (0, 1]
+    y_t = C_t . S_t  (+ D * x_t skip)
+
+Training/prefill uses the *chunkwise* algorithm (intra-chunk quadratic on an
+MXU-friendly (Lc x Lc) block + inter-chunk state pass over n_chunks), so the
+materialized state is O(T/Lc * N * P) instead of O(T * N * P).  Decode is the
+plain one-step recurrence.  ``ssd_sequential`` is the oracle used in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def ssd_sequential(x, log_a, Bm, Cm, S0=None):
+    """Oracle.  x: (B,T,H,P); log_a: (B,T,H); Bm/Cm: (B,T,N).
+    Returns y (B,T,H,P), S_final (B,H,N,P)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    if S0 is None:
+        S0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(S, inp):
+        xt, lat, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        a = jnp.exp(lat)[:, :, None, None]
+        S = a * S + jnp.einsum("bn,bhp->bhnp", bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, S)
+        return S, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          log_a.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S
+
+
+def ssd_chunked(x, log_a, Bm, Cm, S0=None, chunk=256):
+    """Chunkwise SSD.  Same signature/semantics as ``ssd_sequential``."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Lc
+    # (nc, B, Lc, ...)
+    xc = x.reshape(Bsz, nc, Lc, H, P).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    lac = log_a.reshape(Bsz, nc, Lc, H).transpose(1, 0, 2, 3).astype(jnp.float32)
+    bc = Bm.reshape(Bsz, nc, Lc, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    cc = Cm.reshape(Bsz, nc, Lc, N).transpose(1, 0, 2, 3).astype(jnp.float32)
+    if S0 is None:
+        S0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    idx = jnp.arange(Lc)
+    tril = idx[:, None] >= idx[None, :]
+
+    def chunk_step(S, inp):
+        xb, lab, bb, cb = inp       # (B,Lc,H,P), (B,Lc,H), (B,Lc,N), (B,Lc,N)
+        F = jnp.cumsum(lab, axis=1)                      # (B,Lc,H)
+        # intra-chunk: M[i,j] = (C_i.B_j) exp(F_i - F_j) for j<=i
+        G = jnp.einsum("bin,bjn->bij", cb, bb)           # (B,Lc,Lc)
+        D = jnp.exp(F[:, :, None, :] - F[:, None, :, :])  # (B,i,j,H)
+        D = jnp.where(tril[None, :, :, None], D, 0.0)
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", G, D, xb)
+        # inter-chunk: y_i += exp(F_i) C_i . S
+        y_inter = jnp.einsum("bih,bin,bhnp->bihp", jnp.exp(F), cb, S)
+        # state update: S' = exp(F_L) S + sum_j exp(F_L - F_j) B_j (x) x_j
+        FL = F[:, -1, :]                                 # (B,H)
+        w = jnp.exp(FL[:, None, :] - F)                  # (B,Lc,H)
+        S_new = (jnp.exp(FL)[:, :, None, None] * S
+                 + jnp.einsum("bjh,bjn,bjhp->bhnp", w, bb, xb))
+        return S_new, y_intra + y_inter
+
+    S, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0, (xc, lac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Tp, H, P)
+    return y[:, :T], S
+
+
+def ssd_decode_step(S, x_t, log_a_t, B_t, C_t):
+    """One-token decode.  S: (B,H,N,P); x_t: (B,H,P); log_a_t: (B,H);
+    B_t/C_t: (B,N)."""
+    a = jnp.exp(log_a_t.astype(jnp.float32))[:, :, None, None]
+    S = a * S + jnp.einsum("bn,bhp->bhnp", B_t.astype(jnp.float32),
+                           x_t.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(jnp.float32), S)
+    return S, y
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def _dims(cfg: ArchConfig):
+    d = cfg.d_model
+    d_inner = cfg.ssm.expand * d
+    P = cfg.ssm.head_dim
+    H = d_inner // P
+    N = cfg.ssm.state_size
+    return d, d_inner, P, H, N
+
+
+def init_mamba2(rng, cfg: ArchConfig):
+    d, d_inner, P, H, N = _dims(cfg)
+    w = cfg.ssm.conv_width
+    conv_ch = d_inner + 2 * N
+    r = L.split_rngs(rng, 4)
+    return {
+        "norm": L.init_rmsnorm(d),
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "w_in": L.dense_init(r[0], d, 2 * d_inner + 2 * N + H),
+        "conv_w": (jax.random.normal(r[1], (w, conv_ch)) / np.sqrt(w)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),        # A = -exp(A_log) = -1
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "D": jnp.ones((H,), jnp.float32),
+        "gnorm": L.init_rmsnorm(d_inner),
+        "w_out": L.dense_init(r[2], d_inner, d),
+    }
+
+
+def _split_proj(cfg, proj):
+    d, d_inner, P, H, N = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv.  xbc: (B,T,C); conv_w: (w,C).
+    state: (B,w-1,C) previous inputs for decode; returns (out, new_state)."""
+    w = conv_w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[-1]), xbc.dtype)
+    xfull = jnp.concatenate([state, xbc], axis=1)
+    out = sum(xfull[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_state = xfull[:, -(w - 1):]
+    return out, new_state
+
+
+def _ssm_inputs(cfg, params, xbc_conv, dt_raw):
+    d, d_inner, P, H, N = _dims(cfg)
+    xs, Bm, Cm = jnp.split(xbc_conv, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # (...,H)
+    A = -jnp.exp(params["A_log"])                        # (H,)
+    log_a = dt * A                                       # (...,H)  <= 0
+    shp = xs.shape[:-1] + (H, P)
+    x_heads = xs.reshape(shp).astype(jnp.float32) * dt[..., None]
+    return x_heads, log_a, Bm, Cm
+
+
+def apply_mamba2(params, cfg: ArchConfig, x, *, chunked=True):
+    """Training/prefill.  x: (B,T,d)."""
+    d, d_inner, P, H, N = _dims(cfg)
+    h = L.rmsnorm(params["norm"], x)
+    proj = jnp.einsum("btd,de->bte", h, params["w_in"].astype(h.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xh, log_a, Bm, Cm = _ssm_inputs(cfg, params, xbc, dt_raw)
+    if chunked:
+        y, _ = ssd_chunked(xh, log_a, Bm, Cm, chunk=cfg.ssm.chunk)
+    else:
+        y, _ = ssd_sequential(xh, log_a, Bm, Cm)
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(x.shape[0], x.shape[1], d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["gnorm"], y * jax.nn.silu(z))
+    return x + jnp.einsum("bte,ed->btd", y, params["w_out"].astype(x.dtype))
+
+
+def init_mamba2_cache(cfg: ArchConfig, batch):
+    d, d_inner, P, H, N = _dims(cfg)
+    w = cfg.ssm.conv_width
+    return {
+        "conv": jnp.zeros((batch, w - 1, d_inner + 2 * N), jnp.float32),
+        "S": jnp.zeros((batch, H, N, P), jnp.float32),
+    }
+
+
+def decode_mamba2(params, cfg: ArchConfig, cache, x):
+    """One-token decode.  x: (B,1,d)."""
+    d, d_inner, P, H, N = _dims(cfg)
+    h = L.rmsnorm(params["norm"], x)
+    proj = jnp.einsum("btd,de->bte", h, params["w_in"].astype(h.dtype))
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   state=cache["conv"].astype(xbc.dtype))
+    xh, log_a, Bm, Cm = _ssm_inputs(cfg, params, xbc, dt_raw)
+    S, y = ssd_decode_step(cache["S"], xh[:, 0], log_a[:, 0], Bm[:, 0],
+                           Cm[:, 0])
+    y = y[:, None] + params["D"][None, None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["gnorm"], y * jax.nn.silu(z))
+    out = x + jnp.einsum("bte,ed->btd", y, params["w_out"].astype(x.dtype))
+    return out, {"conv": conv_state.astype(jnp.float32), "S": S}

@@ -1,0 +1,148 @@
+"""Transformer blocks and stacks (dense / cross-attention / encoder).
+
+Stacks are scanned over depth (``L.init_stack`` + ``lax.scan``) so the
+lowered HLO is depth-independent.  Heterogeneous depth patterns (MoE every
+N-th layer, cross-attn every N-th layer, hybrid blocks) are expressed as
+*super-blocks*: a scan over homogeneous groups, see ``repro.models.backbones``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def attn_spec(cfg: ArchConfig, *, causal=True, window_override=None) -> A.AttnSpec:
+    return A.AttnSpec(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        qk_norm=cfg.qk_norm,
+        qkv_bias=cfg.qkv_bias,
+        rope_theta=cfg.rope_theta,
+        causal=causal,
+        sliding_window=(cfg.sliding_window if window_override is None
+                        else window_override),
+    )
+
+
+# ---------------------------------------------------------------------------
+# One pre-norm decoder block: x += attn(n1(x)); x += mlp(n2(x))
+# ---------------------------------------------------------------------------
+
+def init_block(rng, cfg: ArchConfig, *, cross=False, mlp="swiglu"):
+    r = L.split_rngs(rng, 4)
+    spec = attn_spec(cfg)
+    p = {
+        "n1": L.init_rmsnorm(cfg.d_model),
+        "attn": A.init_attention(r[0], spec),
+        "n2": L.init_rmsnorm(cfg.d_model),
+    }
+    if mlp == "swiglu":
+        p["mlp"] = L.init_swiglu(r[1], cfg.d_model, cfg.d_ff)
+    elif mlp == "gelu":
+        p["mlp"] = L.init_gelu_mlp(r[1], cfg.d_model, cfg.d_ff)
+    elif mlp == "none":
+        pass
+    else:
+        raise ValueError(mlp)
+    if cross:
+        p["n_cross"] = L.init_rmsnorm(cfg.d_model)
+        p["cross"] = A.init_attention(
+            r[2], attn_spec(cfg, causal=False), kv_dim=cfg.d_model)
+    return p
+
+
+def apply_block(params, cfg: ArchConfig, x, *, spec=None, kv_x=None,
+                impl="chunked", mlp="swiglu"):
+    spec = spec or attn_spec(cfg)
+    h = A.attention(params["attn"], spec, L.rmsnorm(params["n1"], x),
+                    impl=impl)
+    x = x + h
+    if "cross" in params and kv_x is not None:
+        cspec = attn_spec(cfg, causal=False)
+        h = A.attention(params["cross"], cspec,
+                        L.rmsnorm(params["n_cross"], x), kv_x=kv_x, impl=impl)
+        x = x + h
+    if "mlp" in params:
+        fn = L.swiglu if mlp == "swiglu" else L.gelu_mlp
+        x = x + fn(params["mlp"], L.rmsnorm(params["n2"], x))
+    return x
+
+
+def decode_block(params, cfg: ArchConfig, cache, x, pos, *, spec=None,
+                 mlp="swiglu"):
+    """One-token decode through a block.  cache: {"kv":..., "cross":...?}."""
+    spec = spec or attn_spec(cfg)
+    h, kv = A.decode_attention(params["attn"], spec,
+                               cache["kv"], L.rmsnorm(params["n1"], x), pos)
+    x = x + h
+    new_cache = dict(cache)
+    new_cache["kv"] = kv
+    if "cross" in params and "cross" in cache:
+        cspec = attn_spec(cfg, causal=False)
+        h = A.decode_cross_attention(params["cross"], cspec, cache["cross"],
+                                     L.rmsnorm(params["n_cross"], x))
+        x = x + h
+    if "mlp" in params:
+        fn = L.swiglu if mlp == "swiglu" else L.gelu_mlp
+        x = x + fn(params["mlp"], L.rmsnorm(params["n2"], x))
+    return x, new_cache
+
+
+def init_block_cache(cfg: ArchConfig, batch, max_len, *, cross=False,
+                     dtype=jnp.bfloat16):
+    spec = attn_spec(cfg)
+    c = {"kv": A.init_kv_cache(spec, batch, max_len, dtype)}
+    # cross cache is filled at prefill time (init_cross_cache)
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous dense stack
+# ---------------------------------------------------------------------------
+
+def init_stack(rng, cfg: ArchConfig, n_layers, *, mlp="swiglu"):
+    return L.init_stack(rng, n_layers,
+                        lambda r: init_block(r, cfg, mlp=mlp))
+
+
+def apply_stack(stacked, cfg: ArchConfig, x, *, impl="chunked",
+                mlp="swiglu", causal=True, remat=True):
+    spec = attn_spec(cfg, causal=causal)
+
+    def body(h, p):
+        return apply_block(p, cfg, h, spec=spec, impl=impl, mlp=mlp), None
+
+    x, _ = L.scan_layers(body, x, stacked, remat=remat)
+    return x
+
+
+def decode_stack(stacked, cfg: ArchConfig, caches, x, pos, *, mlp="swiglu",
+                 window_override=None):
+    spec = attn_spec(cfg, window_override=window_override)
+
+    def body(h, p, c):
+        h, c = decode_block(p, cfg, c, h, pos, spec=spec, mlp=mlp)
+        return h, c
+
+    x, caches = L.scan_layers(body, x, stacked, caches)
+    return x, caches
+
+
+def init_stack_cache(cfg: ArchConfig, n_layers, batch, max_len,
+                     dtype=jnp.bfloat16, window_override=None):
+    spec = attn_spec(cfg, window_override=window_override)
+    W = min(spec.sliding_window or max_len, max_len)
+    Hk, hd = spec.n_kv_heads, spec.head_dim
+    return {"kv": {
+        "k": jnp.zeros((n_layers, batch, W, Hk, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, W, Hk, hd), dtype),
+        "slot_pos": jnp.full((n_layers, W), -1, jnp.int32),
+    }}

@@ -1,0 +1,73 @@
+"""ViT vision tower for CLIP (patch embed -> pre-norm blocks -> pooled)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, CLIPConfig
+from repro.models import attention as A
+from repro.models import layers as L
+
+
+def _vit_spec(c: CLIPConfig) -> A.AttnSpec:
+    return A.AttnSpec(d_model=c.vision_width, n_heads=c.vision_heads,
+                      n_kv_heads=c.vision_heads,
+                      head_dim=c.vision_width // c.vision_heads,
+                      causal=False, rope_theta=10_000.0)
+
+
+def init_vit(rng, c: CLIPConfig):
+    n_patches = (c.image_size // c.patch_size) ** 2
+    patch_dim = 3 * c.patch_size ** 2
+    r = L.split_rngs(rng, 4 + c.vision_layers)
+    spec = _vit_spec(c)
+
+    def init_block(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "n1": L.init_layernorm(c.vision_width),
+            "attn": A.init_attention(k1, spec),
+            "n2": L.init_layernorm(c.vision_width),
+            "mlp": L.init_gelu_mlp(k2, c.vision_width, 4 * c.vision_width),
+        }
+
+    return {
+        "patch": L.dense_init(r[0], patch_dim, c.vision_width),
+        "cls": jax.random.normal(r[1], (1, 1, c.vision_width)) * 0.02,
+        "pos": jax.random.normal(r[2], (1, n_patches + 1, c.vision_width)) * 0.02,
+        "blocks": L.init_stack(r[3], c.vision_layers, init_block),
+        "final_norm": L.init_layernorm(c.vision_width),
+        "proj": L.dense_init(r[4], c.vision_width, c.embed_dim),
+    }
+
+
+def patchify(images, patch):
+    """images: (B, H, W, 3) -> (B, n_patches, 3*patch*patch)."""
+    B, H, W, _ = images.shape
+    gh, gw = H // patch, W // patch
+    x = images.reshape(B, gh, patch, gw, patch, 3)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, gh * gw, patch * patch * 3)
+
+
+def apply_vit(params, c: CLIPConfig, images):
+    """images: (B, H, W, 3) -> embeddings (B, embed_dim) (not normalized)."""
+    spec = _vit_spec(c)
+    x = patchify(images, c.patch_size)
+    x = jnp.einsum("bpd,dw->bpw", x, params["patch"].astype(x.dtype))
+    cls = jnp.broadcast_to(params["cls"].astype(x.dtype),
+                           (x.shape[0], 1, x.shape[-1]))
+    x = jnp.concatenate([cls, x], axis=1) + params["pos"].astype(x.dtype)
+
+    def body(h, p):
+        a = A.attention(p["attn"], spec, L.layernorm(p["n1"], h),
+                        impl="chunked")
+        h = h + a
+        h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["n2"], h))
+        return h, None
+
+    x, _ = L.scan_layers(body, x, params["blocks"], remat=True)
+    x = L.layernorm(params["final_norm"], x)
+    pooled = x[:, 0]  # CLS token
+    return jnp.einsum("bw,we->be", pooled, params["proj"].astype(x.dtype))

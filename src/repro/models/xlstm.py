@@ -1,0 +1,289 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential recurrence with exponential gating).
+
+mLSTM per head (stabilized, paper eq. 19-27):
+    m_t = max(logsig(f~_t) + m_{t-1}, i~_t)
+    f'  = exp(logsig(f~_t) + m_{t-1} - m_t);  i' = exp(i~_t - m_t)
+    C_t = f' C_{t-1} + i' v_t k_t^T ;  n_t = f' n_{t-1} + i' k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+Training uses a chunkwise form (intra-chunk quadratic + carried
+(C, n, m) across chunks, all in the exp(-m)-stabilized scale), validated
+against the sequential oracle in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core
+# ---------------------------------------------------------------------------
+
+def mlstm_sequential(q, k, v, i_raw, f_raw, carry=None):
+    """Oracle + decode path.  q/k/v: (B,T,H,P); i_raw/f_raw: (B,T,H).
+    carry: (C (B,H,P,P), n (B,H,P), m (B,H)) in stabilized scale."""
+    B, T, H, P = q.shape
+    q = q.astype(jnp.float32) / np.sqrt(P)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    li = i_raw.astype(jnp.float32)
+    if carry is None:
+        carry = (jnp.zeros((B, H, P, P), jnp.float32),
+                 jnp.zeros((B, H, P), jnp.float32),
+                 jnp.full((B, H), NEG, jnp.float32))
+
+    def step(c, inp):
+        C, n, m = c
+        qt, kt, vt, lft, lit = inp
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)[..., None]
+        ip = jnp.exp(lit - m_new)[..., None]
+        C = fp[..., None] * C + ip[..., None] * vt[..., :, None] * kt[..., None, :]
+        n = fp * n + ip * kt
+        num = jnp.einsum("bhvp,bhp->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, qt)),
+                          jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+               for a in (q, k, v, lf, li))
+    carry, hs = jax.lax.scan(step, carry, xs)
+    return hs.transpose(1, 0, 2, 3), carry
+
+
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk=64):
+    """Chunkwise-stabilized mLSTM (training).  Same outputs as sequential."""
+    B, T, H, P = q.shape
+    Lc = min(chunk, T)
+    pad = (-T) % Lc
+    if pad:
+        zp4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        zp3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, zp4) for a in (q, k, v))
+        i_raw = jnp.pad(i_raw, zp3, constant_values=NEG)  # padded i-gate off
+        f_raw = jnp.pad(f_raw, zp3)
+    Tp = T + pad
+    nc = Tp // Lc
+    qf = (q.astype(jnp.float32) / np.sqrt(P)) \
+        .reshape(B, nc, Lc, H, P).transpose(1, 0, 2, 3, 4)
+    kf = k.astype(jnp.float32).reshape(B, nc, Lc, H, P).transpose(1, 0, 2, 3, 4)
+    vf = v.astype(jnp.float32).reshape(B, nc, Lc, H, P).transpose(1, 0, 2, 3, 4)
+    lf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32)) \
+        .reshape(B, nc, Lc, H).transpose(1, 0, 2, 3)
+    li = i_raw.astype(jnp.float32).reshape(B, nc, Lc, H).transpose(1, 0, 2, 3)
+
+    idx = jnp.arange(Lc)
+    tril = idx[:, None] >= idx[None, :]
+
+    def chunk_step(carry, inp):
+        C, n, m = carry            # stabilized by exp(-m)
+        qb, kb, vb, lfb, lib = inp
+        F = jnp.cumsum(lfb, axis=1)            # (B,Lc,H)
+        b = lib - F                            # log weight rel. chunk start
+        # per-position stabilizer: m_i = F_i + c_i
+        c = jnp.maximum(jax.lax.cummax(b, axis=1), m[:, None, :])
+        m_i = F + c
+        # intra-chunk weights w_ij = exp(F_i + b_j - m_i) = exp(b_j - c_i)
+        wd = jnp.exp(b[:, None, :, :] - c[:, :, None, :])     # (B,i,j,H)
+        wd = jnp.where(tril[None, :, :, None], wd, 0.0)
+        G = jnp.einsum("bihp,bjhp->bijh", qb, kb)             # q.k
+        num = jnp.einsum("bijh,bijh,bjhv->bihv", G, wd, vb)
+        den = jnp.einsum("bijh,bijh->bih", G, wd)
+        # inter-chunk: scale exp(F_i + m_prev - m_i) = exp(m_prev - c_i)
+        sc = jnp.exp(m[:, None, :] - c)                        # (B,Lc,H)
+        num = num + sc[..., None] * jnp.einsum("bhvp,bihp->bihv", C, qb)
+        den = den + sc * jnp.einsum("bhp,bihp->bih", n, qb)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # carry update at chunk end: m' = F_L + c_L
+        FL = F[:, -1, :]
+        m_new = FL + c[:, -1, :]
+        wS = jnp.exp(FL[:, None, :] + b - m_new[:, None, :])   # (B,Lc,H)
+        C_new = (jnp.exp(FL + m - m_new)[:, :, None, None] * C
+                 + jnp.einsum("bjh,bjhv,bjhp->bhvp", wS, vb, kb))
+        n_new = (jnp.exp(FL + m - m_new)[..., None] * n
+                 + jnp.einsum("bjh,bjhp->bhp", wS, kb))
+        return (C_new, n_new, m_new), h
+
+    carry0 = (jnp.zeros((B, H, P, P), jnp.float32),
+              jnp.zeros((B, H, P), jnp.float32),
+              jnp.full((B, H), NEG, jnp.float32))
+    _, hs = jax.lax.scan(jax.checkpoint(chunk_step), carry0,
+                         (qf, kf, vf, lf, li))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, P)
+    return h[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def _mdims(cfg: ArchConfig):
+    d = cfg.d_model
+    d_inner = cfg.ssm.expand * d
+    H = cfg.n_heads
+    P = d_inner // H
+    return d, d_inner, H, P
+
+
+def init_mlstm_block(rng, cfg: ArchConfig):
+    d, d_inner, H, P = _mdims(cfg)
+    r = L.split_rngs(rng, 6)
+    return {
+        "norm": L.init_rmsnorm(d),
+        "w_up": L.dense_init(r[0], d, 2 * d_inner),      # [x_in, z gate]
+        "wq": L.dense_init(r[1], d_inner, d_inner),
+        "wk": L.dense_init(r[2], d_inner, d_inner),
+        "wv": L.dense_init(r[3], d_inner, d_inner),
+        "w_if": L.dense_init(r[4], d_inner, 2 * H, scale=0.01),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),         # forget-open init
+        "onorm": L.init_rmsnorm(d_inner),
+        "w_down": L.dense_init(r[5], d_inner, d),
+    }
+
+
+def _mlstm_qkvif(params, cfg, h):
+    d, d_inner, H, P = _mdims(cfg)
+    up = jnp.einsum("btd,de->bte", h, params["w_up"].astype(h.dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bte,ef->btf", xin, params["wq"].astype(h.dtype))
+    k = jnp.einsum("bte,ef->btf", xin, params["wk"].astype(h.dtype))
+    v = jnp.einsum("bte,ef->btf", xin, params["wv"].astype(h.dtype))
+    gates = jnp.einsum("bte,eg->btg", xin, params["w_if"].astype(h.dtype))
+    i_raw, f_raw = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    i_raw = i_raw + params["b_i"]
+    f_raw = f_raw + params["b_f"]
+    shp = q.shape[:-1] + (H, P)
+    # (q is scaled by 1/sqrt(P) inside the mlstm core)
+    return (q.reshape(shp), k.reshape(shp), v.reshape(shp), i_raw, f_raw, z)
+
+
+def apply_mlstm_block(params, cfg: ArchConfig, x, *, chunked=True):
+    d, d_inner, H, P = _mdims(cfg)
+    h = L.rmsnorm(params["norm"], x)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvif(params, cfg, h)
+    if chunked:
+        y = mlstm_chunked(q, k, v, i_raw, f_raw, chunk=cfg.ssm.chunk)
+    else:
+        y, _ = mlstm_sequential(q, k, v, i_raw, f_raw)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["onorm"], y) * jax.nn.silu(z)
+    return x + jnp.einsum("bte,ed->btd", y, params["w_down"].astype(x.dtype))
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch):
+    d, d_inner, H, P = _mdims(cfg)
+    return {"C": jnp.zeros((batch, H, P, P), jnp.float32),
+            "n": jnp.zeros((batch, H, P), jnp.float32),
+            "m": jnp.full((batch, H), NEG, jnp.float32)}
+
+
+def decode_mlstm_block(params, cfg: ArchConfig, cache, x):
+    d, d_inner, H, P = _mdims(cfg)
+    h = L.rmsnorm(params["norm"], x)
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvif(params, cfg, h)
+    y, (C, n, m) = mlstm_sequential(q, k, v, i_raw, f_raw,
+                                    carry=(cache["C"], cache["n"], cache["m"]))
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = L.rmsnorm(params["onorm"], y) * jax.nn.silu(z)
+    out = x + jnp.einsum("bte,ed->btd", y, params["w_down"].astype(x.dtype))
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scalar recurrence, block-diagonal recurrent R)
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(rng, cfg: ArchConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    r = L.split_rngs(rng, 4)
+    return {
+        "norm": L.init_rmsnorm(d),
+        # input projections for (z, i, f, o)
+        "w_x": L.dense_init(r[0], d, 4 * d),
+        # block-diagonal recurrent weights per head, per gate
+        "R": (jax.random.normal(r[1], (4, H, P, P)) / np.sqrt(P)),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.full((d,), 3.0),       # f bias open
+                              jnp.zeros((d,))]),
+        "gnorm": L.init_rmsnorm(d),
+        "w_ff": L.init_swiglu(r[2], d, 2 * d),
+    }
+
+
+def slstm_scan(params, cfg: ArchConfig, xproj, state=None):
+    """xproj: (B,T,4d) precomputed input projections.  Sequential scan.
+    state: (h, c, n, m) each (B,H,P) / (B,H,P)... gates per-unit."""
+    B, T, _ = xproj.shape
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    R = params["R"].astype(jnp.float32)
+    b = params["b"].astype(jnp.float32)
+    if state is None:
+        z = jnp.zeros((B, H, P), jnp.float32)
+        state = (z, z, z, jnp.full((B, H, P), NEG, jnp.float32))
+
+    def step(s, xt):
+        h, c, n, m = s
+        # recurrent contribution: per gate g, (B,H,P) @ (H,P,P)
+        rec = jnp.einsum("bhp,ghpq->bghq", h, R)          # (B,4,H,P)
+        tot = xt.reshape(B, 4, H, P) + rec + b.reshape(4, H, P)
+        zt = jnp.tanh(tot[:, 0])
+        it = tot[:, 1]
+        ft = tot[:, 2]
+        ot = jax.nn.sigmoid(tot[:, 3])
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(lf + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (h_new, c_new, n_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state,
+                             xproj.transpose(1, 0, 2).astype(jnp.float32))
+    return hs.transpose(1, 0, 2, 3).reshape(B, T, d), state
+
+
+def apply_slstm_block(params, cfg: ArchConfig, x):
+    h = L.rmsnorm(params["norm"], x)
+    xproj = jnp.einsum("btd,de->bte", h, params["w_x"].astype(h.dtype))
+    y, _ = slstm_scan(params, cfg, xproj)
+    y = L.rmsnorm(params["gnorm"], y.astype(x.dtype))
+    x = x + y
+    return x + L.swiglu(params["w_ff"], x)
+
+
+def init_slstm_cache(cfg: ArchConfig, batch):
+    d = cfg.d_model
+    H = cfg.n_heads
+    P = d // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, P), NEG,
+                                                  jnp.float32)}
+
+
+def decode_slstm_block(params, cfg: ArchConfig, cache, x):
+    h = L.rmsnorm(params["norm"], x)
+    xproj = jnp.einsum("btd,de->bte", h, params["w_x"].astype(h.dtype))
+    y, (hh, cc, nn, mm) = slstm_scan(params, cfg, xproj,
+                                     state=(cache["h"], cache["c"],
+                                            cache["n"], cache["m"]))
+    y = L.rmsnorm(params["gnorm"], y.astype(x.dtype))
+    x = x + y
+    out = x + L.swiglu(params["w_ff"], x)
+    return out, {"h": hh, "c": cc, "n": nn, "m": mm}

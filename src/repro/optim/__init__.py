@@ -1,0 +1,6 @@
+from repro.optim.base import (  # noqa: F401
+    Optimizer, clip_by_global_norm, global_norm, tree_zeros_like,
+)
+from repro.optim.optimizers import (  # noqa: F401
+    OPTIMIZERS, adamw, get_optimizer, lamb, lion, sgdm,
+)

@@ -1,0 +1,39 @@
+"""Optimizer interface (paper Proc. 4): pytree optimizers from scratch.
+
+    opt = adamw(beta1=..., ...)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, lr=..., wd=...)
+
+``lr``/``wd`` are passed at update time so schedules stay outside.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (params, grads, state, *, lr, wd) -> (p, s)
+
+
+def tree_zeros_like(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                        params)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), n

@@ -1,0 +1,141 @@
+"""The four optimizers benchmarked by the paper (Proc. 4): SGD w/ momentum,
+LAMB, Lion, AdamW.  All operate on arbitrary pytrees, moments in f32."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, tree_zeros_like
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum (Polyak):  m = mu m + g + wd p ;  p -= lr m
+# ---------------------------------------------------------------------------
+
+def sgdm(mu=0.9):
+    def init(params):
+        return {"m": tree_zeros_like(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr, wd=0.0):
+        def upd(p, g, m):
+            m_new = mu * m + _f32(g) + wd * _f32(p)
+            return (p - lr * m_new.astype(p.dtype)).astype(p.dtype), m_new
+        flat = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "t": state["t"] + 1}
+
+    return Optimizer("sgdm", init, update)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (Loshchilov & Hutter 2019)
+# ---------------------------------------------------------------------------
+
+def adamw(beta1=0.9, beta2=0.999, eps=1e-8):
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr, wd=0.0):
+        t = state["t"] + 1
+        bc1 = 1.0 - beta1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - beta2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = _f32(g)
+            m_new = beta1 * m + (1 - beta1) * g
+            v_new = beta2 * v + (1 - beta2) * jnp.square(g)
+            mh = m_new / bc1
+            vh = v_new / bc2
+            step = mh / (jnp.sqrt(vh) + eps) + wd * _f32(p)
+            return (p - lr * step.astype(p.dtype)).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is3 = lambda t_: isinstance(t_, tuple)
+        new_p = jax.tree.map(lambda t_: t_[0], flat, is_leaf=is3)
+        new_m = jax.tree.map(lambda t_: t_[1], flat, is_leaf=is3)
+        new_v = jax.tree.map(lambda t_: t_[2], flat, is_leaf=is3)
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer("adamw", init, update)
+
+
+# ---------------------------------------------------------------------------
+# Lion (Chen et al. 2023):
+#   c = b1 m + (1-b1) g ;  m = b2 m + (1-b2) g ;  p -= lr (sign(c) + wd p)
+# ---------------------------------------------------------------------------
+
+def lion(beta1=0.9, beta2=0.99):
+    def init(params):
+        return {"m": tree_zeros_like(params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr, wd=0.0):
+        def upd(p, g, m):
+            g = _f32(g)
+            c = beta1 * m + (1 - beta1) * g
+            m_new = beta2 * m + (1 - beta2) * g
+            step = jnp.sign(c) + wd * _f32(p)
+            return (p - lr * step.astype(p.dtype)).astype(p.dtype), m_new
+
+        flat = jax.tree.map(upd, params, grads, state["m"])
+        is2 = lambda t_: isinstance(t_, tuple)
+        new_p = jax.tree.map(lambda t_: t_[0], flat, is_leaf=is2)
+        new_m = jax.tree.map(lambda t_: t_[1], flat, is_leaf=is2)
+        return new_p, {"m": new_m, "t": state["t"] + 1}
+
+    return Optimizer("lion", init, update)
+
+
+# ---------------------------------------------------------------------------
+# LAMB (You et al. 2020), per-leaf trust ratio (paper Proc. 4 "per layer").
+# Following EVA-CLIP (paper App. B), alpha=1 for scalar/1-d leaves
+# (norms, biases, temperature) -> same update as AdamW.
+# ---------------------------------------------------------------------------
+
+def lamb(beta1=0.9, beta2=0.999, eps=1e-6):
+    def init(params):
+        return {"m": tree_zeros_like(params), "v": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state, *, lr, wd=0.0):
+        t = state["t"] + 1
+        bc1 = 1.0 - beta1 ** t.astype(jnp.float32)
+        bc2 = 1.0 - beta2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = _f32(g)
+            m_new = beta1 * m + (1 - beta1) * g
+            v_new = beta2 * v + (1 - beta2) * jnp.square(g)
+            r = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+            upd_dir = r + wd * _f32(p)
+            if p.ndim >= 2:
+                pn = jnp.linalg.norm(_f32(p))
+                un = jnp.linalg.norm(upd_dir)
+                alpha = jnp.where((pn > 0) & (un > 0), pn / jnp.maximum(un, 1e-9), 1.0)
+            else:
+                alpha = 1.0
+            return (p - lr * alpha * upd_dir.astype(p.dtype)).astype(p.dtype), \
+                m_new, v_new
+
+        flat = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        is3 = lambda t_: isinstance(t_, tuple)
+        new_p = jax.tree.map(lambda t_: t_[0], flat, is_leaf=is3)
+        new_m = jax.tree.map(lambda t_: t_[1], flat, is_leaf=is3)
+        new_v = jax.tree.map(lambda t_: t_[2], flat, is_leaf=is3)
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer("lamb", init, update)
+
+
+OPTIMIZERS = {"adamw": adamw, "lamb": lamb, "lion": lion, "sgdm": sgdm}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)

@@ -1,0 +1,329 @@
+"""Trip-count-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+under-reports flops/bytes/collectives for scan-over-layers models by the
+layer count.  This walker parses the post-optimization HLO text, builds the
+call graph (fusions, while bodies, conditionals), extracts loop trip counts
+from the condition regions, and accumulates:
+
+    flops       2 * out_elems * contraction_size for every dot
+                (+ window flops for convolutions)
+    bytes       sum of (output + operand) bytes of every materialized op
+                (post-fusion HLO: one line = one buffer) — an explicit
+                HBM-traffic model
+    collectives ring cost model per op (see analysis.collective_stats)
+
+All numbers are per-device (the HLO is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)"
+    r"\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT )?%([\w.\-]+) = ")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+_SKIP_BYTES_OPS = (
+    "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
+    "after-all(", "partition-id(", "replica-id(",
+)
+
+
+def _shapes_bytes_elems(segment: str) -> Tuple[int, int]:
+    """Total (bytes, elems) of all shapes in a type segment."""
+    total_b = total_e = 0
+    for m in _SHAPE_RE.finditer(segment):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[m.group(1)]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # (child, kind): kind in {fusion, while_body, while_cond, branch, apply}
+    while_children: List[Tuple[str, str, int]] = dataclasses.field(
+        default_factory=list)  # (body, cond, trip)
+
+
+class HLOCostModel:
+    def __init__(self, hlo_text: str, default_group: int = 2):
+        self.default_group = default_group
+        self._parse(hlo_text)
+        self._memo: Dict[str, Tuple[float, float, float]] = {}
+
+    # -- parsing ------------------------------------------------------------
+
+    def _parse(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self.sym: Dict[str, str] = {}   # %name -> type segment
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if cur is None:
+                m = _COMP_HDR.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if s == "}":
+                cur = None
+                continue
+            self.comps[cur].append(s)
+            dm = _DEF_RE.match(s)
+            if dm and " = " in s:
+                typ = s.split(" = ", 1)[1]
+                # type segment = up to the op name's '('
+                self.sym[dm.group(1)] = typ
+
+    def _out_segment(self, line: str) -> str:
+        rhs = line.split(" = ", 1)[1]
+        # type part ends at the first op-name token: find ` opname(`
+        m = re.match(r"^(\([^)]*\)|[\w\[\]{},:*\s]+?)\s+[\w\-]+\(", rhs)
+        return m.group(1) if m else rhs
+
+    def _operand_shapes(self, line: str) -> List[str]:
+        """Type segments of the operands referenced on the line."""
+        rhs = line.split(" = ", 1)[1]
+        paren = rhs.find("(")
+        args = rhs[paren + 1:]
+        out = []
+        for m in _OPND_RE.finditer(args.split(")", 1)[0]):
+            seg = self.sym.get(m.group(1))
+            if seg:
+                out.append(seg)
+        return out
+
+    def _dot_flops(self, line: str) -> float:
+        seg = self._out_segment(line)
+        out_b, out_e = _shapes_bytes_elems(seg)
+        lc = _LHS_C_RE.search(line)
+        dims = [int(x) for x in lc.group(1).split(",")] if lc and lc.group(1) \
+            else []
+        opnds = self._operand_shapes(line)
+        if not opnds or not dims:
+            return 2.0 * out_e
+        mm = _SHAPE_RE.search(opnds[0])
+        if not mm or not mm.group(2):
+            return 2.0 * out_e
+        lhs_dims = [int(x) for x in mm.group(2).split(",")]
+        k = 1
+        for dix in dims:
+            if dix < len(lhs_dims):
+                k *= lhs_dims[dix]
+        return 2.0 * out_e * k
+
+    def _conv_flops(self, line: str) -> float:
+        seg = self._out_segment(line)
+        _, out_e = _shapes_bytes_elems(seg)
+        w = _WINDOW_RE.search(line)
+        ksize = 1
+        if w:
+            for d in w.group(1).split("x"):
+                ksize *= int(d)
+        opnds = self._operand_shapes(line)
+        cin = 1
+        if len(opnds) >= 2:
+            mm = _SHAPE_RE.search(opnds[1])
+            if mm and mm.group(2):
+                rhs_dims = [int(x) for x in mm.group(2).split(",")]
+                cin = rhs_dims[-2] if len(rhs_dims) >= 2 else 1
+        return 2.0 * out_e * ksize * cin
+
+    def _fusion_param_reads(self, child: str):
+        """param_index -> bytes actually read, for fusion params that are
+        only consumed by slicing ops inside the fusion."""
+        if not hasattr(self, "_fusion_clamp_cache"):
+            self._fusion_clamp_cache = {}
+        if child in self._fusion_clamp_cache:
+            return self._fusion_clamp_cache[child]
+        lines = self.comps.get(child, ())
+        param_of = {}      # %name -> param index
+        reads = {}
+        uses = {}          # param index -> list of (op, out_bytes)
+        for s in lines:
+            dm = _DEF_RE.match(s)
+            if not dm:
+                continue
+            name = dm.group(1)
+            rhs = s.split(" = ", 1)[1]
+            pm = re.search(r"parameter\((\d+)\)", rhs)
+            if pm:
+                param_of[name] = int(pm.group(1))
+                continue
+            opm = re.search(r"\b([\w\-]+)\(", rhs)
+            op = opm.group(1) if opm else ""
+            seg = self._out_segment(s)
+            out_b, _ = _shapes_bytes_elems(seg)
+            for om in _OPND_RE.finditer(rhs[rhs.find("("):]):
+                if om.group(1) in param_of:
+                    idx = param_of[om.group(1)]
+                    uses.setdefault(idx, []).append((op, out_b))
+        for idx, us in uses.items():
+            if us and all(o in ("dynamic-slice", "slice", "gather",
+                                "dynamic-update-slice", "bitcast")
+                          for o, _ in us):
+                reads[idx] = sum(b for _, b in us)
+        self._fusion_clamp_cache[child] = reads
+        return reads
+
+    def _trip_count(self, cond_comp: str) -> int:
+        best = 1
+        for line in self.comps.get(cond_comp, ()):
+            for m in _CONST_INT_RE.finditer(line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # -- per-computation direct stats ----------------------------------------
+
+    def _direct(self, name: str) -> CompStats:
+        from repro.roofline.analysis import (_COLLECTIVE_KINDS, _group_size)
+        st = CompStats()
+        for line in self.comps.get(name, ()):
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            opm = re.search(r"\b([\w\-]+)\(", rhs)
+            op = opm.group(1) if opm else ""
+            # call graph
+            if op == "while":
+                b = _BODY_RE.search(line)
+                c = _COND_RE.search(line)
+                if b and c:
+                    st.while_children.append(
+                        (b.group(1), c.group(1), self._trip_count(c.group(1))))
+            elif op == "conditional":
+                br = _BRANCH_RE.search(line)
+                if br:
+                    for child in _OPND_RE.finditer(br.group(1)):
+                        st.calls.append((child.group(1), "branch"))
+            elif "calls=" in line:
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    st.calls.append((cm.group(1), "fusion"))
+            # flops
+            if op == "dot":
+                st.flops += self._dot_flops(line)
+            elif op == "convolution":
+                st.flops += self._conv_flops(line)
+            # collectives
+            matched_coll = False
+            for kind in _COLLECTIVE_KINDS:
+                if re.match(rf"{kind}(-start)?$", op or ""):
+                    seg = self._out_segment(line)
+                    out_b, _ = _shapes_bytes_elems(seg)
+                    G = _group_size(line, self.default_group)
+                    ring = (G - 1) / max(G, 1)
+                    if kind == "reduce-scatter":
+                        moved = ring * G * out_b
+                    elif kind == "all-reduce":
+                        moved = 2 * ring * out_b
+                    else:
+                        moved = ring * out_b
+                    st.coll_bytes += moved
+                    st.coll_counts[kind] = st.coll_counts.get(kind, 0) + 1
+                    matched_coll = True
+                    break
+            # bytes: TPU-fusion-oriented HBM traffic model.  Count one
+            # write + one downstream read (2x output bytes) for buffers
+            # that would be materialized on TPU: MXU op results, fusion
+            # outputs, explicit copies, data-movement ops, and collective
+            # results.  Pure elementwise / iota / mask / compare ops are
+            # assumed fused away (CPU HLO fuses at much finer granularity
+            # than TPU, so counting every line wildly overestimates).
+            # dynamic-update-slice is in-place: only the update region
+            # (second-largest operand; index operands are scalars) moves.
+            lhs_name = line.split(" = ", 1)[0]
+            if op == "dynamic-update-slice" or (
+                    op == "fusion" and "dynamic-update-slice" in lhs_name):
+                opnds = sorted((_shapes_bytes_elems(oseg)[0]
+                                for oseg in self._operand_shapes(line)),
+                               reverse=True)
+                upd = opnds[1] if len(opnds) >= 2 else (
+                    opnds[0] if opnds else 0)
+                st.bytes += 2 * upd
+            elif op in ("dot", "convolution", "fusion", "copy",
+                        "dynamic-slice", "gather", "scatter", "reduce",
+                        "concatenate", "pad", "sort", "transpose",
+                        "reshape") or matched_coll:
+                seg = self._out_segment(line)
+                out_b, _ = _shapes_bytes_elems(seg)
+                st.bytes += 2 * out_b
+        return st
+
+    # -- recursive totals -----------------------------------------------------
+
+    def totals(self, name: Optional[str] = None, _depth=0):
+        """(flops, bytes, coll_bytes) of a computation incl. children."""
+        name = name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        if _depth > 64 or name not in self.comps:
+            return (0.0, 0.0, 0.0)
+        self._memo[name] = (0.0, 0.0, 0.0)  # cycle guard
+        st = self._direct(name)
+        f, b, c = st.flops, st.bytes, st.coll_bytes
+        for child, kind in st.calls:
+            cf, cb, cc = self.totals(child, _depth + 1)
+            if kind == "fusion":
+                f += cf          # fusion internals: flops only (one buffer)
+                c += cc
+            else:
+                f += cf
+                b += cb
+                c += cc
+        for body, cond, trip in st.while_children:
+            bf, bb, bc = self.totals(body, _depth + 1)
+            f += trip * bf
+            b += trip * bb
+            c += trip * bc
+        self._memo[name] = (f, b, c)
+        return self._memo[name]
+
+    def collective_counts(self) -> Dict[str, float]:
+        """Trip-multiplied collective op counts."""
+        counts: Dict[str, float] = {}
+
+        def walk(name, mult, depth=0):
+            if depth > 64 or name not in self.comps:
+                return
+            st = self._direct(name)
+            for k, v in st.coll_counts.items():
+                counts[k] = counts.get(k, 0) + v * mult
+            for child, kind in st.calls:
+                walk(child, mult, depth + 1)
+            for body, cond, trip in st.while_children:
+                walk(body, mult * trip, depth + 1)
+
+        walk(self.entry, 1)
+        return counts

@@ -1,0 +1,55 @@
+"""Mini dry-run: reduced configs lower+compile on an 8-device (2,4) mesh
+for both sharding modes — the fast CI version of deliverable (e)."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa
+
+from repro.configs import get_arch  # noqa: E402
+from repro.launch import mesh as MM  # noqa: E402
+from repro.launch import steps as ST  # noqa: E402
+from repro.models import backbones as BB  # noqa: E402
+from repro.models import sharding as SH  # noqa: E402
+
+
+def main(arch, mode):
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+    cfg = get_arch(arch).reduced()
+    SH.set_batch_axes(MM.batch_axes(mesh, mode))
+    if mode == "fsdp":
+        SH.enable_moe_a2a(mesh)
+    step_fn, opt = ST.make_lm_train_step(cfg)
+    p_specs = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                           BB.param_shapes(cfg))
+    p_shard = MM.param_shardings(mesh, p_specs, mode=mode)
+    opt_sp = ST.opt_specs(p_specs, opt)
+    rep = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_sp)
+    B, S = 8, 32
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_image_tokens, cfg.vision_dim), jnp.float32)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, S // cfg.audio_subsample, cfg.d_model), jnp.float32)
+    b_shard = MM.batch_shardings(mesh, batch, mode=mode)
+    state_sp = {"params": p_specs, "opt": opt_sp,
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_sh = {"params": p_shard, "opt": rep,
+                "step": NamedSharding(mesh, P())}
+    with mesh:
+        comp = jax.jit(step_fn, in_shardings=(state_sh, b_shard)) \
+            .lower(state_sp, batch).compile()
+    print("COMPILED", arch, mode, comp.memory_analysis().temp_size_in_bytes)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

@@ -1,0 +1,115 @@
+"""Attention: chunked flash-style vs naive oracle; decode cache semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import attention as A
+
+
+def _qkv(B=2, S=96, H=4, hd=32, Hk=None, seed=0):
+    Hk = Hk or H
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Hk, hd))
+    v = jax.random.normal(ks[2], (B, S, Hk, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 17),
+                                           (False, 0), (True, 64)])
+@pytest.mark.parametrize("S", [16, 96, 130])
+def test_chunked_matches_naive(S, causal, window):
+    q, k, v = _qkv(S=S)
+    out_c = A.chunked_attention(q, k, v, causal=causal, window=window,
+                                q_chunk=32, kv_chunk=48)
+    out_n = A.naive_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out_c, out_n, atol=2e-5)
+
+
+def test_chunked_grads_match_naive():
+    q, k, v = _qkv(S=64)
+
+    def f(impl):
+        def loss(q, k, v):
+            fn = A.chunked_attention if impl == "c" else A.naive_attention
+            return jnp.sum(fn(q, k, v, causal=True) ** 2)
+        return jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+
+    gc = f("c")
+    gn = f("n")
+    for a, b in zip(gc, gn):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_q_offset_matches_suffix():
+    """chunked attention with q_offset == attention of the suffix rows."""
+    q, k, v = _qkv(S=64)
+    out_full = A.naive_attention(q, k, v, causal=True)
+    out_suffix = A.chunked_attention(q[:, 32:], k, v, causal=True,
+                                     q_offset=32, q_chunk=16, kv_chunk=16)
+    np.testing.assert_allclose(out_suffix, out_full[:, 32:], atol=2e-5)
+
+
+def _spec(H=4, Hk=2, hd=16, window=0, **kw):
+    return A.AttnSpec(d_model=H * hd, n_heads=H, n_kv_heads=Hk, head_dim=hd,
+                      sliding_window=window, rope_theta=1e4, **kw)
+
+
+def test_decode_matches_forward():
+    """Stepwise decode through the cache == teacher-forced attention."""
+    spec = _spec()
+    rng = jax.random.PRNGKey(1)
+    params = A.init_attention(rng, spec)
+    B, T = 2, 24
+    x = jax.random.normal(rng, (B, T, spec.d_model)) * 0.5
+    out_fwd = A.attention(params, spec, x, impl="naive")
+
+    cache = A.init_kv_cache(spec, B, max_len=T, dtype=jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = A.decode_attention(params, spec, cache, x[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_dec, out_fwd, atol=2e-4)
+
+
+def test_decode_sliding_window_matches_forward():
+    spec = _spec(window=8)
+    rng = jax.random.PRNGKey(2)
+    params = A.init_attention(rng, spec)
+    B, T = 1, 30
+    x = jax.random.normal(rng, (B, T, spec.d_model)) * 0.5
+    out_fwd = A.attention(params, spec, x, impl="naive")
+    cache = A.init_kv_cache(spec, B, max_len=T, dtype=jnp.float32)
+    assert cache["k"].shape[1] == 8  # ring buffer is window-sized
+    outs = []
+    for t in range(T):
+        o, cache = A.decode_attention(params, spec, cache, x[:, t:t + 1],
+                                      jnp.int32(t))
+        outs.append(o)
+    out_dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_dec, out_fwd, atol=2e-4)
+
+
+def test_cross_attention_decode_matches_forward():
+    spec = _spec(causal=False)
+    rng = jax.random.PRNGKey(3)
+    params = A.init_attention(rng, spec)
+    B, T, Skv = 2, 5, 12
+    x = jax.random.normal(rng, (B, T, spec.d_model)) * 0.5
+    kv_x = jax.random.normal(rng, (B, Skv, spec.d_model)) * 0.5
+    out_fwd = A.attention(params, spec, x, kv_x=kv_x, impl="naive")
+    cc = A.init_cross_cache(params, spec, kv_x)
+    outs = [A.decode_cross_attention(params, spec, cc, x[:, t:t + 1])
+            for t in range(T)]
+    np.testing.assert_allclose(jnp.concatenate(outs, 1), out_fwd, atol=2e-4)
+
+
+def test_gqa_repeat():
+    q, k, v = _qkv(H=8, Hk=2, S=32)
+    out = A.chunked_attention(
+        q, A._repeat_kv(k, 4), A._repeat_kv(v, 4), causal=True)
+    assert out.shape == q.shape
+    assert not bool(jnp.any(jnp.isnan(out)))

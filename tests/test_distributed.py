@@ -1,0 +1,57 @@
+"""Distributed semantics, via subprocesses with 8 forced host devices
+(keeps the main pytest process at 1 device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HELPER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "helpers", "dist_check.py")
+
+
+def _run(check):
+    p = subprocess.run([sys.executable, HELPER, check],
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
+
+
+def test_fastclip_vjp_matches_oracle_on_8_devices():
+    _run("vjp")
+
+
+def test_communication_reduction_vs_openclip_style():
+    """The paper's §4 claim at HLO level: no reduce-scatter of feature
+    grads, >40% fewer collective bytes."""
+    _run("comm")
+
+
+def test_distributed_train_step_equals_single_device():
+    _run("train")
+
+
+def test_moe_all_to_all_routing_matches_oracle():
+    """§Perf a2a expert router == dense-dispatch oracle on a (2,4) mesh."""
+    helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "helpers", "a2a_check.py")
+    p = subprocess.run([sys.executable, helper], capture_output=True,
+                       text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-3000:])
+    assert "A2A MOE OK" in p.stdout
+
+
+import pytest as _pytest
+
+
+@_pytest.mark.parametrize("arch,mode", [
+    ("qwen3-1.7b", "tp"), ("qwen3-1.7b", "fsdp"),
+    ("qwen3-moe-30b-a3b", "fsdp"), ("zamba2-1.2b", "tp"),
+])
+def test_mini_dryrun_lowers_and_compiles(arch, mode):
+    helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "helpers", "dryrun_mini.py")
+    p = subprocess.run([sys.executable, helper, arch, mode],
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-2000:], p.stderr[-4000:])
+    assert "COMPILED" in p.stdout

@@ -1,0 +1,106 @@
+"""The seven algorithm versions (Table 1): state, tau updates, semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fastclip as FC
+from repro.core import losses as LS
+
+
+def _mkcfg(version, **kw):
+    return FC.FastCLIPConfig(version=version, n_samples=32,
+                             steps_per_epoch=4, gamma_decay_epochs=4, **kw)
+
+
+@pytest.mark.parametrize("version", FC.VERSIONS)
+def test_init_state_structure(version):
+    fc = _mkcfg(version)
+    st = FC.init_state(fc)
+    if fc.uses_fcco:
+        assert st["u1"].shape == (32,)
+    else:
+        assert "u1" not in st
+    if fc.individual_tau:
+        assert st["tau1"].shape == (32,)
+    else:
+        assert st["tau"].shape == ()
+
+
+@pytest.mark.parametrize("version", ["v0", "v3"])
+def test_global_tau_update_moves_and_clamps(version):
+    fc = _mkcfg(version, lr_tau=0.5, tau_init=0.02, tau_min=0.01)
+    st = FC.init_state(fc)
+    # large positive gradient should push tau down to the clamp
+    for _ in range(30):
+        st = FC.tau_update(fc, st, jnp.asarray(10.0))
+    np.testing.assert_allclose(st["tau"], fc.tau_min, atol=1e-6)
+
+
+def test_v2_coordinate_update_touches_only_batch_rows():
+    fc = _mkcfg("v2", lr_tau=0.1)
+    st = FC.init_state(fc)
+    idx = jnp.asarray([3, 7, 11])
+    g = (jnp.ones(3), -jnp.ones(3))
+    st2 = FC.tau_update(fc, st, g, idx=idx)
+    moved1 = np.where(np.asarray(st2["tau1"]) != np.asarray(st["tau1"]))[0]
+    moved2 = np.where(np.asarray(st2["tau2"]) != np.asarray(st["tau2"]))[0]
+    assert set(moved1) <= {3, 7, 11}
+    assert set(moved2) <= {3, 7, 11}
+    # opposite gradient signs move opposite directions
+    assert np.all(np.asarray(st2["tau1"][idx]) <= np.asarray(st["tau1"][idx]))
+    assert np.all(np.asarray(st2["tau2"][idx]) >= np.asarray(st["tau2"][idx]))
+
+
+def test_gamma_fn_per_version():
+    np.testing.assert_allclose(
+        float(_mkcfg("sogclr", gamma=0.6).gamma_fn()(100)), 0.6, rtol=1e-6)
+    assert float(_mkcfg("openclip").gamma_fn()(5)) == 1.0
+    g = _mkcfg("v3", gamma_min=0.2).gamma_fn()
+    assert float(g(0)) == 1.0
+    np.testing.assert_allclose(float(g(4 * 4)), 0.2, atol=1e-6)
+
+
+def test_tau_gradient_v3_formula():
+    fc = _mkcfg("v3", rho=2.0, eps=1e-14)
+    aux = {"u1_new": jnp.asarray([0.5, 0.5]),
+           "u2_new": jnp.asarray([0.5, 0.5]),
+           "dg1_dtau": jnp.asarray([1.0, 1.0]),
+           "dg2_dtau": jnp.asarray([1.0, 1.0])}
+    tau = 0.1
+    g = FC.tau_gradient(fc, aux, tau, tau)
+    expect = (2 * np.log(0.5) + 2 * 2.0) + 0.1 * (2 * (1.0 / 0.5))
+    np.testing.assert_allclose(g, expect, rtol=1e-5)
+
+
+def test_tau_gradient_constant_versions_none():
+    for v in ("v1", "sogclr"):
+        fc = _mkcfg(v)
+        assert FC.tau_gradient(fc, {"u1_new": jnp.ones(2),
+                                    "u2_new": jnp.ones(2),
+                                    "dg1_dtau": jnp.ones(2),
+                                    "dg2_dtau": jnp.ones(2)}, 0.07, 0.07) \
+            is None
+
+
+def test_scale_by_tau_only_v0_differs():
+    assert not _mkcfg("v0").scale_by_tau
+    for v in ("v1", "v2", "v3", "sogclr", "isogclr"):
+        assert _mkcfg(v).scale_by_tau
+
+
+def test_v3_tau_lr_decay_when_small():
+    fc = _mkcfg("v3", lr_tau=0.03, tau_init=0.02, tau_lr_decay_at=0.03,
+                tau_min=0.001)
+    st = FC.init_state(fc)
+    st2 = FC.tau_update(fc, st, jnp.asarray(1.0))
+    # tau < 0.03 -> effective lr = lr/3; AdamW step 1 is ~sign: |step|~0.01
+    step = float(st["tau"] - st2["tau"])
+    np.testing.assert_allclose(step, 0.01, rtol=0.05)
+    # above the threshold the full lr applies
+    fc2 = _mkcfg("v3", lr_tau=0.03, tau_init=0.06, tau_lr_decay_at=0.03,
+                 tau_min=0.001)
+    st = FC.init_state(fc2)
+    st2 = FC.tau_update(fc2, st, jnp.asarray(1.0))
+    np.testing.assert_allclose(float(st["tau"] - st2["tau"]), 0.03,
+                               rtol=0.05)

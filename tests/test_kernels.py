@@ -1,0 +1,114 @@
+"""Per-kernel allclose vs ref.py oracles, swept over shapes/dtypes
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.losses import l2_normalize
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
+from repro.kernels.ops import fused_gcl_loss
+
+
+def _emb(B, d, dtype, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    e1 = l2_normalize(jax.random.normal(k1, (B, d))).astype(dtype)
+    e2 = l2_normalize(jax.random.normal(k2, (B, d))).astype(dtype)
+    return e1, e2
+
+
+@pytest.mark.parametrize("B,d", [(32, 16), (128, 64), (200, 128), (256, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gcl_pair_stats_sweep(B, d, dtype):
+    e1, e2 = _emb(B, d, dtype)
+    t1 = jnp.full((B,), 0.07)
+    t2 = jnp.full((B,), 0.05)
+    out_k = gcl_pair_stats(e1.astype(jnp.float32), e2.astype(jnp.float32),
+                           t1, t2, interpret=True)
+    out_r = R.gcl_pair_stats_ref(e1.astype(jnp.float32),
+                                 e2.astype(jnp.float32), t1, t2)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-5
+    for a, b in zip(out_k, out_r):
+        np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,d", [(64, 32), (192, 128), (130, 64)])
+def test_gcl_pair_grads_sweep(B, d):
+    e1, e2 = _emb(B, d, jnp.float32, seed=1)
+    k = jax.random.PRNGKey(2)
+    w1 = jax.random.uniform(k, (B,)) + 0.5
+    w2 = jax.random.uniform(k, (B,)) + 0.2
+    t1 = jnp.full((B,), 0.08)
+    t2 = jnp.full((B,), 0.06)
+    gk = gcl_pair_grads(e1, e2, w1, w2, t1, t2, interpret=True)
+    gr = R.gcl_pair_grads_ref(e1, e2, w1, w2, t1, t2)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_gcl_loss_custom_vjp_matches_autodiff():
+    from repro.core import losses as LS
+    B, d = 96, 48
+    e1, e2 = _emb(B, d, jnp.float32, seed=3)
+    tau = jnp.full((B,), 0.07)
+    w1 = jnp.full((B,), 1.3)
+    w2 = jnp.full((B,), 0.9)
+
+    def via_kernel(a, b):
+        loss, _ = fused_gcl_loss(a, b, w1, w2, tau, tau, True)
+        return loss
+
+    def via_ref(a, b):
+        st = LS.row_stats(a, b, a, b, tau, tau)
+        return LS.surrogate_loss(st, w1, w2, B)
+
+    lk, gk = jax.value_and_grad(via_kernel, argnums=(0, 1))(e1, e2)
+    lr, gr = jax.value_and_grad(via_ref, argnums=(0, 1))(e1, e2)
+    np.testing.assert_allclose(lk, lr, rtol=1e-5)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("S,hd,causal,window",
+                         [(128, 64, True, 0), (300, 64, True, 0),
+                          (256, 128, True, 96), (256, 64, False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, hd, causal, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 2, S, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (2, 2, S, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (2, 2, S, hd)).astype(dtype)
+    o = flash_attention(q, k, v, causal=causal, window=window,
+                        interpret=True)
+    r = R.flash_attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), causal=causal,
+                              window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(o.astype(jnp.float32), r, atol=tol)
+
+
+def test_flash_cross_attention_longer_kv():
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    o = flash_attention(q, k, v, causal=False, interpret=True)
+    r = R.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(o, r, atol=2e-5)
+
+
+@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 32), (60, 16)])
+def test_ssd_chunk_kernel_matches_sequential(T, chunk):
+    from repro.kernels.ssd_chunk import ssd_chunked_pallas
+    from repro.models.ssm import ssd_sequential
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    B, H, P, N = 2, 3, 8, 4
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    Bm = jax.random.normal(ks[2], (B, T, N)) * 0.5
+    Cm = jax.random.normal(ks[3], (B, T, N)) * 0.5
+    yk = ssd_chunked_pallas(x, log_a, Bm, Cm, chunk=chunk, interpret=True)
+    yr, _ = ssd_sequential(x, log_a, Bm, Cm)
+    np.testing.assert_allclose(yk, yr, atol=2e-4)

@@ -1,0 +1,121 @@
+"""Unit tests for the contrastive losses and the FCCO machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import losses as LS
+
+
+def _pairs(B=16, d=8, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    e1 = LS.l2_normalize(jax.random.normal(k1, (B, d)))
+    e2 = LS.l2_normalize(jax.random.normal(k2, (B, d)))
+    return e1, e2
+
+
+def manual_stats(e1, e2, tau):
+    B = e1.shape[0]
+    s = np.asarray(e1 @ e2.T, np.float64)
+    sd = np.diag(s)
+    g1 = np.zeros(B)
+    g2 = np.zeros(B)
+    for i in range(B):
+        for j in range(B):
+            if j == i:
+                continue
+            g1[i] += np.exp((s[i, j] - s[i, i]) / tau)
+            g2[i] += np.exp((s[j, i] - s[i, i]) / tau)
+    return g1 / (B - 1), g2 / (B - 1)
+
+
+def test_row_stats_matches_manual():
+    e1, e2 = _pairs()
+    tau = 0.1
+    st = LS.row_stats(e1, e2, e1, e2, tau, tau)
+    g1m, g2m = manual_stats(e1, e2, tau)
+    np.testing.assert_allclose(st.g1, g1m, rtol=1e-5)
+    np.testing.assert_allclose(st.g2, g2m, rtol=1e-5)
+
+
+def test_row_stats_block_equals_full():
+    """Row blocks with offsets reproduce the full computation."""
+    e1, e2 = _pairs(B=12)
+    tau = 0.07
+    full = LS.row_stats(e1, e2, e1, e2, tau, tau)
+    for lo, hi in [(0, 4), (4, 8), (8, 12)]:
+        blk = LS.row_stats(e1[lo:hi], e2[lo:hi], e1, e2, tau, tau,
+                           row_offset=lo)
+        np.testing.assert_allclose(blk.g1, full.g1[lo:hi], rtol=1e-6)
+        np.testing.assert_allclose(blk.g2, full.g2[lo:hi], rtol=1e-6)
+
+
+def test_dg_dtau_matches_finite_diff():
+    e1, e2 = _pairs(B=10)
+    tau = 0.08
+    eps = 1e-4
+    st = LS.row_stats(e1, e2, e1, e2, tau, tau)
+    hi = LS.row_stats(e1, e2, e1, e2, tau + eps, tau + eps)
+    lo = LS.row_stats(e1, e2, e1, e2, tau - eps, tau - eps)
+    fd1 = (hi.g1 - lo.g1) / (2 * eps)
+    np.testing.assert_allclose(st.dg1_dtau, fd1, rtol=2e-2)
+
+
+def test_update_u_bounds():
+    u = jnp.asarray([0.1, 0.5, 0.9])
+    g = jnp.asarray([0.9, 0.1, 0.5])
+    for gamma in [0.0, 0.3, 1.0]:
+        un = LS.update_u(u, g, gamma)
+        assert jnp.all(un >= jnp.minimum(u, g) - 1e-7)
+        assert jnp.all(un <= jnp.maximum(u, g) + 1e-7)
+    np.testing.assert_allclose(LS.update_u(u, g, 1.0), g)
+    np.testing.assert_allclose(LS.update_u(u, g, 0.0), u)
+
+
+def test_mbcl_matches_manual_infonce():
+    e1, e2 = _pairs(B=8)
+    tau = 0.1
+    loss = LS.mbcl_loss(e1, e2, tau)
+    s = np.asarray(e1 @ e2.T) / tau
+    ce1 = -np.mean(np.diag(s) - np.log(np.exp(s).sum(1)))
+    ce2 = -np.mean(np.diag(s) - np.log(np.exp(s).sum(0)))
+    np.testing.assert_allclose(loss, 0.5 * (ce1 + ce2), rtol=1e-5)
+
+
+def test_surrogate_grad_is_fcco_estimator():
+    """The surrogate's autodiff gradient equals the closed-form estimator
+    computed by the kernel reference (Appendix A)."""
+    from repro.kernels.ref import gcl_pair_grads_ref
+    e1, e2 = _pairs(B=14, d=6)
+    tau = jnp.full((14,), 0.09)
+    u1 = jnp.full((14,), 0.4)
+    u2 = jnp.full((14,), 0.6)
+    gamma, eps = 0.7, 1e-14
+
+    def f(e1n, e2n):
+        st = LS.row_stats(e1n, e2n, e1n, e2n, tau, tau)
+        u1n = LS.update_u(u1, st.g1, gamma)
+        u2n = LS.update_u(u2, st.g2, gamma)
+        w1, w2 = LS.fcco_weights(u1n, u2n, tau, tau, eps)
+        return LS.surrogate_loss(st, w1, w2, 14), (w1, w2)
+
+    (_, (w1, w2)), (de1, de2) = jax.value_and_grad(
+        f, argnums=(0, 1), has_aux=True)(e1, e2)
+    de1_ref, de2_ref = gcl_pair_grads_ref(e1, e2, w1, w2, tau, tau)
+    np.testing.assert_allclose(de1, de1_ref, atol=1e-6)
+    np.testing.assert_allclose(de2, de2_ref, atol=1e-6)
+
+
+def test_loss_values_finite_and_ordered():
+    u1 = jnp.asarray([0.5, 1.0])
+    u2 = jnp.asarray([0.5, 1.0])
+    v_gcl = LS.gcl_value(u1, u2, 0.07, 1e-14)
+    v_rg = LS.rgcl_g_value(u1, u2, 0.07, 1e-14, rho=6.5)
+    assert np.isfinite(v_gcl) and np.isfinite(v_rg)
+    assert v_rg > v_gcl  # + 2 rho tau
+
+
+def test_l2_normalize():
+    x = jax.random.normal(jax.random.PRNGKey(0), (5, 7)) * 10
+    n = LS.l2_normalize(x)
+    np.testing.assert_allclose(jnp.linalg.norm(n, axis=-1), 1.0, rtol=1e-5)

@@ -1,0 +1,104 @@
+"""Optimizers (paper Proc. 4) from scratch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw, clip_by_global_norm, lamb, lion, sgdm
+
+PARAMS = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]]),
+          "b": jnp.asarray([0.1, -0.1])}
+GRADS = {"w": jnp.asarray([[0.1, 0.2], [-0.3, 0.4]]),
+         "b": jnp.asarray([0.5, -0.5])}
+
+
+@pytest.mark.parametrize("maker", [adamw, lamb, lion, sgdm])
+def test_optimizer_shapes_and_finiteness(maker):
+    opt = maker()
+    st = opt.init(PARAMS)
+    p, st = opt.update(PARAMS, GRADS, st, lr=1e-2, wd=0.01)
+    assert jax.tree.structure(p) == jax.tree.structure(PARAMS)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(PARAMS)):
+        assert a.shape == b.shape
+        assert bool(jnp.all(jnp.isfinite(a)))
+
+
+def test_adamw_first_step_is_signlike():
+    """After bias correction, step 1 of Adam is ~lr * sign(g)."""
+    opt = adamw(eps=1e-12)
+    st = opt.init(PARAMS)
+    p, _ = opt.update(PARAMS, GRADS, st, lr=1e-2, wd=0.0)
+    expect = jax.tree.map(lambda x, g: x - 1e-2 * jnp.sign(g), PARAMS, GRADS)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_lion_update_is_sign_scaled():
+    opt = lion()
+    st = opt.init(PARAMS)
+    p, _ = opt.update(PARAMS, GRADS, st, lr=1e-2, wd=0.0)
+    expect = jax.tree.map(lambda x, g: x - 1e-2 * jnp.sign(g), PARAMS, GRADS)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_sgdm_matches_manual():
+    opt = sgdm(mu=0.9)
+    st = opt.init(PARAMS)
+    p1, st = opt.update(PARAMS, GRADS, st, lr=0.1, wd=0.0)
+    p2, st = opt.update(p1, GRADS, st, lr=0.1, wd=0.0)
+    # m1 = g; m2 = 0.9 g + g = 1.9 g
+    expect = jax.tree.map(lambda x, g: x - 0.1 * g - 0.1 * 1.9 * g,
+                          PARAMS, GRADS)
+    for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_lamb_trust_ratio_only_on_matrices():
+    opt = lamb()
+    st = opt.init(PARAMS)
+    p, _ = opt.update(PARAMS, GRADS, st, lr=1e-2, wd=0.0)
+    # the 1-d bias uses alpha=1 -> identical to adamw step
+    opt_a = adamw(eps=1e-6)
+    st_a = opt_a.init(PARAMS)
+    pa, _ = opt_a.update(PARAMS, GRADS, st_a, lr=1e-2, wd=0.0)
+    np.testing.assert_allclose(p["b"], pa["b"], atol=1e-6)
+
+
+@pytest.mark.parametrize("maker", [adamw, lamb, lion, sgdm])
+def test_optimizers_minimize_quadratic(maker):
+    opt = maker()
+    x = {"x": jnp.asarray([3.0, -2.0])}
+    st = opt.init(x)
+    lr = 0.05 if maker is not sgdm else 0.02
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
+
+    l0 = float(loss(x))
+    for _ in range(200):
+        g = jax.grad(loss)(x)
+        x, st = opt.update(x, g, st, lr=lr, wd=0.0)
+    assert float(loss(x)) < 0.05 * l0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0)}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(n, np.sqrt(90.0), rtol=1e-6)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(clipped["a"]), 1.0, rtol=1e-5)
+    g2 = {"a": jnp.full((4,), 1e-3)}
+    same, _ = clip_by_global_norm(g2, 1.0)
+    np.testing.assert_allclose(same["a"], g2["a"])
+
+
+def test_weight_decay_is_decoupled():
+    """wd applies to params, not to moments (AdamW semantics)."""
+    opt = adamw()
+    zero_g = jax.tree.map(jnp.zeros_like, PARAMS)
+    st = opt.init(PARAMS)
+    p, st = opt.update(PARAMS, zero_g, st, lr=0.1, wd=0.5)
+    expect = jax.tree.map(lambda x: x * (1 - 0.05), PARAMS)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, rtol=1e-5)

@@ -1,0 +1,106 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import losses as LS
+from repro.core import schedules as SCH
+from repro.models import layers as L
+
+jax.config.update("jax_platform_name", "cpu")
+
+finite_f = st.floats(min_value=-5.0, max_value=5.0, allow_nan=False,
+                     width=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 16), st.integers(0, 10_000))
+def test_l2_normalize_unit_norm(B, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (B, d)) * 10 + 1e-3
+    n = LS.l2_normalize(x)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(n), axis=-1),
+                               1.0, rtol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1.0), st.lists(finite_f, min_size=1, max_size=8),
+       st.lists(finite_f, min_size=1, max_size=8))
+def test_update_u_is_convex_combination(gamma, us, gs):
+    n = min(len(us), len(gs))
+    u = jnp.asarray(us[:n])
+    g = jnp.abs(jnp.asarray(gs[:n]))
+    un = LS.update_u(u, g, gamma)
+    lo = jnp.minimum(u, g) - 1e-5
+    hi = jnp.maximum(u, g) + 1e-5
+    assert bool(jnp.all(un >= lo)) and bool(jnp.all(un <= hi))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.01, 0.99), st.integers(1, 500), st.integers(1, 50),
+       st.integers(0, 100_000))
+def test_gamma_cosine_in_range(gmin, spe, E, step):
+    fn = SCH.gamma_cosine(gmin, spe, E)
+    v = float(fn(step))
+    assert gmin - 1e-6 <= v <= 1.0 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.integers(0, 10_000))
+def test_row_stats_positive_and_bounded(B, seed):
+    """g estimators are positive; with normalized embeddings and tau>=0.05
+    they are bounded by exp(2/tau)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    e1 = LS.l2_normalize(jax.random.normal(k1, (B, 4)))
+    e2 = LS.l2_normalize(jax.random.normal(k2, (B, 4)))
+    tau = 0.05
+    stt = LS.row_stats(e1, e2, e1, e2, tau, tau)
+    assert bool(jnp.all(stt.g1 > 0)) and bool(jnp.all(stt.g2 > 0))
+    bound = np.exp(2.0 / tau) + 1
+    assert bool(jnp.all(stt.g1 < bound)) and bool(jnp.all(stt.g2 < bound))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 10), st.integers(2, 30), st.integers(0, 1000))
+def test_ce_equals_vocab_parallel_ce(B, V, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    d = 8
+    x = jax.random.normal(ks[0], (B, 3, d))
+    table = jax.random.normal(ks[1], (V, d))
+    labels = jax.random.randint(ks[2], (B, 3), 0, V)
+    logits = L.unembed(table, x, transpose=True)
+    ce1 = L.cross_entropy(logits, labels, vocab_valid=V)
+    ce2 = L.vocab_parallel_ce(x, table, labels, tied=True, vocab_valid=V)
+    np.testing.assert_allclose(ce1, ce2, rtol=2e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 3), st.integers(0, 1000))
+def test_rope_is_rotation(S, Hix, seed):
+    """RoPE preserves vector norms and relative-position inner products."""
+    hd = 8
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, S, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (1, S))
+    r = L.apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-4)
+    # shifting positions by a constant leaves q.k at fixed lag unchanged
+    r2 = L.apply_rope(x, pos + 7, theta=1e4)
+    if S >= 2:
+        d1 = float(jnp.sum(r[0, 0, 0] * r[0, 1, 0]))
+        d2 = float(jnp.sum(r2[0, 0, 0] * r2[0, 1, 0]))
+        np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 500))
+def test_mbcl_nonnegative_lower_bound(B, seed):
+    """InfoNCE >= 0 is not guaranteed, but it's bounded below by
+    -log(B) + ... sanity: loss finite and > -log(B)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    e1 = LS.l2_normalize(jax.random.normal(k1, (B, 6)))
+    e2 = LS.l2_normalize(jax.random.normal(k2, (B, 6)))
+    v = float(LS.mbcl_loss(e1, e2, 0.07))
+    assert np.isfinite(v)
+    assert v > -np.log(B) - 1e-3

@@ -1,0 +1,41 @@
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedules as S
+
+
+def test_gamma_cosine_endpoints():
+    fn = S.gamma_cosine(gamma_min=0.2, steps_per_epoch=100, decay_epochs=10)
+    assert float(fn(0)) == 1.0
+    np.testing.assert_allclose(float(fn(100 * 10)), 0.2, atol=1e-6)
+    np.testing.assert_allclose(float(fn(100 * 50)), 0.2, atol=1e-6)  # clamped
+
+
+def test_gamma_cosine_constant_within_epoch():
+    fn = S.gamma_cosine(0.2, 100, 10)
+    vals = [float(fn(s)) for s in range(100, 200)]
+    assert len(set(np.round(vals, 6))) == 1
+
+
+def test_gamma_cosine_monotone_across_epochs():
+    fn = S.gamma_cosine(0.2, 10, 20)
+    per_epoch = [float(fn(10 * e)) for e in range(25)]
+    assert all(a >= b - 1e-7 for a, b in zip(per_epoch, per_epoch[1:]))
+
+
+def test_gamma_constant():
+    fn = S.gamma_constant(0.6)
+    assert float(fn(0)) == float(fn(12345))
+    np.testing.assert_allclose(float(fn(0)), 0.6, rtol=1e-6)
+
+
+def test_lr_warmup_cosine():
+    fn = S.lr_warmup_cosine(1e-3, warmup_steps=100, total_steps=1000,
+                            min_lr=1e-5)
+    assert float(fn(0)) == 0.0
+    np.testing.assert_allclose(float(fn(50)), 5e-4, rtol=1e-5)
+    np.testing.assert_allclose(float(fn(100)), 1e-3, rtol=1e-5)
+    np.testing.assert_allclose(float(fn(1000)), 1e-5, atol=1e-8)
+    # monotone decreasing after warmup
+    vals = [float(fn(s)) for s in range(100, 1000, 50)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
