@@ -23,10 +23,15 @@ _SCRIPT = textwrap.dedent("""
     mesh = Mesh(np.array(jax.devices()).reshape(K), ("data",))
     b, dim = 128, 512
     B = b * K
+    fcco_op = D.make_fcco_loss_op(("data",), 1e-14, True,
+                                  loss_impl="dense")
     def make(red):
         def inner(e1l, e2l, u1l, u2l):
             sg = jax.lax.stop_gradient
             e1n, e2n = LS.l2_normalize(e1l), LS.l2_normalize(e2l)
+            if red == "fastclip":   # production engine: no stats pre-pass
+                loss, _ = fcco_op(e1n, e2n, u1l, u2l, 0.07, 0.07, 0.5)
+                return loss
             off = jax.lax.axis_index("data") * e1l.shape[0]
             e1a = jax.lax.all_gather(sg(e1n), "data", tiled=True)
             e2a = jax.lax.all_gather(sg(e2n), "data", tiled=True)
@@ -35,12 +40,11 @@ _SCRIPT = textwrap.dedent("""
             w1, w2 = LS.fcco_weights(LS.update_u(u1l, st.g1, .5),
                                      LS.update_u(u2l, st.g2, .5),
                                      0.07, 0.07, 1e-14)
-            f = (D.make_fastclip_pair_loss(("data",)) if red == "fastclip"
-                 else D.make_allgather_ad_pair_loss(("data",)))
+            f = D.make_allgather_ad_pair_loss(("data",))
             loss, _ = f(e1n, e2n, w1, w2, 0.07, 0.07)
             return loss
         def outer(e1, e2, u1, u2):
-            return jax.shard_map(inner, mesh=mesh,
+            return D.shard_map(inner, mesh=mesh,
                                  in_specs=(P("data"),)*4,
                                  out_specs=P())(e1, e2, u1, u2)
         return lambda e1, e2, u1, u2: jax.grad(

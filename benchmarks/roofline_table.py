@@ -1,10 +1,21 @@
 """Deliverable (g): the roofline table from the dry-run JSONs
-(experiments/dryrun/*.json).  One row per (arch x shape), single-pod."""
+(experiments/dryrun/*.json).  One row per (arch x shape), single-pod.
+
+Also reports the loss-layer HBM-traffic model behind the ``loss_impl``
+knob: the dense path moves the (B, B) f32 pair matrix through HBM ~8x
+per step (dense ~= 8*B^2*4 bytes), the fused Pallas path streams it
+through VMEM in tiles (~0 pair-matrix HBM bytes) — see
+benchmarks/kernel_bench.py and repro/kernels/gcl_loss.py."""
 import glob
 import json
 import os
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# global batch sizes the paper's limited-resource setting cares about;
+# the single-device dense traffic 8*B^2*4 reported below scales as
+# ~8*b*B*4 per device when row-sharded over K devices (b = B/K)
+LOSS_TRAFFIC_B = (512, 1024, 2048, 4096)
 
 
 def model_flops(d, shape_kind):
@@ -39,4 +50,11 @@ def run(steps=None, seed=None):
             f"memory_s={r['memory_s']:.4f};"
             f"collective_s={r['collective_s']:.4f};"
             f"useful_flops_ratio={ratio:.3f}"))
+    from benchmarks.kernel_bench import pair_matrix_bytes
+    for B in LOSS_TRAFFIC_B:
+        dense = pair_matrix_bytes(B, "dense")
+        rows.append((
+            f"roofline/loss_pair_traffic/global_B={B}", 0.0,
+            f"dense_hbm_bytes={dense};fused_hbm_bytes=0;"
+            f"model=8*B^2*4_single_device_vs_vmem_tiles"))
     return rows

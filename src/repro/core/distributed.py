@@ -2,6 +2,15 @@
 reduction (Section 4 / Appendix A), expressed as a ``jax.custom_vjp`` used
 inside ``shard_map`` over the data axis.
 
+``make_fcco_loss_op`` is the production loss engine: one custom-vjp op that
+serves both the single-device (``axes=None``) and sharded settings, with a
+``loss_impl`` knob selecting dense jnp math or the tiled Pallas kernels
+(repro.kernels.gcl_loss).  Its forward computes the row stats exactly once
+(stats, u update, FCCO weights and the surrogate all inside the op, so no
+second stats pass survives the custom-vjp boundary) and its backward emits
+the local feature grads in closed form — no collective, and in the fused
+case no (b, B) pair matrix in HBM.
+
 Two reductions are implemented for the same objective:
 
 ``reduction="fastclip"``
@@ -32,8 +41,7 @@ Every term for local p needs only local rows of h, the gathered features
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple
+from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +49,18 @@ import jax.numpy as jnp
 from repro.core import losses as LS
 
 sg = jax.lax.stop_gradient
+
+
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions, with the replication /
+    varying-manual-axes check disabled (our loss islands mix replicated
+    scalars and sharded rows, which the checker rejects)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
 
 
 def _gather(x, axes):
@@ -53,19 +73,74 @@ def _psum(x, axes):
     return jax.lax.psum(x, axes)
 
 
+def axis_size(ax):
+    """``jax.lax.axis_size`` across jax versions (public compat shim,
+    usable from any shard_map body — see also ``shard_map`` above)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)   # folds to the static size
+
+
 def _global_index(axes):
     """Flattened shard index over possibly-multiple mesh axes."""
     idx = 0
     for ax in axes:
-        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+        idx = idx * axis_size(ax) + jax.lax.axis_index(ax)
     return idx
 
 
 def _axis_prod(axes):
     out = 1
     for ax in axes:
-        out *= jax.lax.axis_size(ax)
+        out *= axis_size(ax)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Closed-form local feature grads (Appendix A), dense jnp flavor
+# ---------------------------------------------------------------------------
+
+def _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a,
+                       t1, t2, t1a, t2a, off):
+    """(de1, de2) of L = (1/B) sum_i w1_i g1_i + w2_i g2_i w.r.t. the local
+    rows, from the local (b,)-quantities and the gathered (B,)-quantities.
+    Includes the 1/(B(B-1)) factor; the caller scales by the cotangent.
+    Builds four dense (b, B) matrices — the fused Pallas path avoids them.
+    """
+    b, d = e1.shape
+    B = e1a.shape[0]
+    rows = off + jnp.arange(b)
+    cols = jnp.arange(B)
+    offdiag = (cols[None, :] != rows[:, None]).astype(jnp.float32)
+    kappa = 1.0 / (B * (B - 1.0))
+
+    # local rows of A1, A2: (b, B)
+    s1 = jnp.einsum("bd,Bd->bB", e1, e2a,
+                    preferred_element_type=jnp.float32)
+    s2 = jnp.einsum("bd,Bd->bB", e2, e1a,
+                    preferred_element_type=jnp.float32)
+    cexp = LS.clamped_exp_bwd     # zero where the fwd clamp saturated
+    A1r = (w1 / t1)[:, None] * cexp((s1 - sd[:, None]) / t1[:, None]) \
+        * offdiag
+    A2r = (w2 / t2)[:, None] * cexp((s2 - sd[:, None]) / t2[:, None]) \
+        * offdiag
+    # local columns: M1[p, i] = A1[i, p] (anchors i global, col p local).
+    # A1[i, p] = w1_i/t1_i exp((e1_i.e2_p - sd_i)/t1_i), and e1_i.e2_p is
+    # s2[p, i] (likewise e2_i.e1_p = s1[p, i]) — reuse the A-side matmuls.
+    M1 = (w1a / t1a)[None, :] * cexp((s2 - sda[None, :]) / t1a[None, :]) \
+        * offdiag
+    M2 = (w2a / t2a)[None, :] * cexp((s1 - sda[None, :]) / t2a[None, :]) \
+        * offdiag
+
+    de1 = (jnp.einsum("bB,Bd->bd", A1r, e2a)
+           - jnp.sum(A1r, axis=1, keepdims=True) * e2
+           + jnp.einsum("bB,Bd->bd", M2, e2a)
+           - jnp.sum(A2r, axis=1, keepdims=True) * e2)
+    de2 = (jnp.einsum("bB,Bd->bd", A2r, e1a)
+           - jnp.sum(A2r, axis=1, keepdims=True) * e1
+           + jnp.einsum("bB,Bd->bd", M1, e1a)
+           - jnp.sum(A1r, axis=1, keepdims=True) * e1)
+    return kappa * de1, kappa * de2
 
 
 # ---------------------------------------------------------------------------
@@ -82,25 +157,24 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
 
     @jax.custom_vjp
     def pair_loss(e1, e2, w1, w2, t1, t2):
-        loss, stats, _ = _fwd_compute(e1, e2, w1, w2, t1, t2)
-        return loss, tuple(stats)
+        local, stats, _ = _fwd_compute(e1, e2, w1, w2, t1, t2)
+        return local, tuple(stats)
 
     def _fwd_compute(e1, e2, w1, w2, t1, t2):
         b = e1.shape[0]
-        K = _axis_prod(axes)
-        B = b * K
         off = _global_index(axes) * b
         e1a = _gather(e1, axes)                 # (B, d)  feature gather
         e2a = _gather(e2, axes)
         sd = jnp.sum(e1 * e2, axis=-1)          # (b,) local s_ii
         stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
+        # unreduced local sum: the psum/B runs in ``with_stats`` outside
+        # the custom-vjp (see make_fcco_loss_op for why)
         local = jnp.sum(w1 * stats.g1 + w2 * stats.g2)
-        loss = _psum(local, axes) / B
         res = (e1, e2, e1a, e2a, sd, w1, w2, t1, t2, off)
-        return loss, stats, res
+        return local, stats, res
 
     def fwd(e1, e2, w1, w2, t1, t2):
-        loss, stats, res = _fwd_compute(e1, e2, w1, w2, t1, t2)
+        local, stats, res = _fwd_compute(e1, e2, w1, w2, t1, t2)
         # gather the scalars for the backward (the O(K|B|) communication)
         e1_, e2_, e1a, e2a, sd, w1_, w2_, t1_, t2_, off = res
         sda = _gather(sd, axes)
@@ -108,53 +182,27 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
         w2a = _gather(w2, axes)
         t1a = _gather(t1 * jnp.ones_like(sd), axes)
         t2a = _gather(t2 * jnp.ones_like(sd), axes)
-        return (loss, tuple(stats)), \
-            (e1_, e2_, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off)
+        # rank >= 1 residuals only (shard_map partial-eval requirement)
+        off1 = jnp.reshape(jnp.asarray(off, jnp.int32), (1,))
+        return (local, tuple(stats)), \
+            (e1_, e2_, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off1)
 
     def bwd(res, cts):
         ct, _ = cts   # stats are stop-grad outputs; ignore their cotangents
-        e1, e2, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off = res
-        b, d = e1.shape
-        B = e1a.shape[0]
-        rows = off + jnp.arange(b)
-        cols = jnp.arange(B)
-        offdiag = (cols[None, :] != rows[:, None]).astype(jnp.float32)
+        e1, e2, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off1 = res
+        off = off1[0]
+        b = e1.shape[0]
         w1 = jax.lax.dynamic_slice_in_dim(w1a, off, b)
         w2 = jax.lax.dynamic_slice_in_dim(w2a, off, b)
         t1 = jax.lax.dynamic_slice_in_dim(t1a, off, b)
         t2 = jax.lax.dynamic_slice_in_dim(t2a, off, b)
-        kappa = ct / (B * (B - 1.0))
-
-        # local rows of A1, A2: (b, B)
-        s1 = jnp.einsum("bd,Bd->bB", e1, e2a,
-                        preferred_element_type=jnp.float32)
-        s2 = jnp.einsum("bd,Bd->bB", e2, e1a,
-                        preferred_element_type=jnp.float32)
-        A1r = (w1 / t1)[:, None] * jnp.exp((s1 - sd[:, None]) / t1[:, None]) \
-            * offdiag
-        A2r = (w2 / t2)[:, None] * jnp.exp((s2 - sd[:, None]) / t2[:, None]) \
-            * offdiag
-        # local columns: M1[p, i] = A1[i, p] (anchors i global, col p local)
-        # A1[i, p] = w1_i/t1_i exp((e1_i.e2_p - sd_i)/t1_i)
-        c1 = jnp.einsum("bd,Bd->bB", e2, e1a,
-                        preferred_element_type=jnp.float32)   # e1_i . e2_p
-        c2 = jnp.einsum("bd,Bd->bB", e1, e2a,
-                        preferred_element_type=jnp.float32)   # e2_i . e1_p
-        M1 = (w1a / t1a)[None, :] * jnp.exp((c1 - sda[None, :]) / t1a[None, :]) \
-            * offdiag
-        M2 = (w2a / t2a)[None, :] * jnp.exp((c2 - sda[None, :]) / t2a[None, :]) \
-            * offdiag
-
-        de1 = (jnp.einsum("bB,Bd->bd", A1r, e2a)
-               - jnp.sum(A1r, axis=1, keepdims=True) * e2
-               + jnp.einsum("bB,Bd->bd", M2, e2a)
-               - jnp.sum(A2r, axis=1, keepdims=True) * e2)
-        de2 = (jnp.einsum("bB,Bd->bd", A2r, e1a)
-               - jnp.sum(A2r, axis=1, keepdims=True) * e1
-               + jnp.einsum("bB,Bd->bd", M1, e1a)
-               - jnp.sum(A1r, axis=1, keepdims=True) * e1)
-        de1 = (kappa * de1).astype(e1.dtype)
-        de2 = (kappa * de2).astype(e2.dtype)
+        de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2,
+                                      w1a, w2a, t1, t2, t1a, t2a, off)
+        # de* are grads of the global mean loss; pair_loss returns the
+        # local sum (the with_stats psum/B puts 1/B on ct)
+        B = e1a.shape[0]
+        de1 = (ct * B * de1).astype(e1.dtype)
+        de2 = (ct * B * de2).astype(e2.dtype)
         z = jnp.zeros_like(sd)
         return de1, de2, z, z, z, z
 
@@ -164,10 +212,140 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
         # make every arg axis-varying (w derives from the sharded u state;
         # broadcast taus against it) so the custom-vjp in/out types match.
         ones = jnp.ones_like(w1)
-        loss, stats = pair_loss(e1, e2, w1, w2, t1 * ones, t2 * ones)
+        local, stats = pair_loss(e1, e2, w1, w2, t1 * ones, t2 * ones)
+        B = e1.shape[0] * _axis_prod(axes)
+        loss = _psum(local, axes) / B
         return loss, LS.RowStats(*jax.tree.map(sg, stats))
 
     return with_stats
+
+
+# ---------------------------------------------------------------------------
+# The production loss engine: one custom-vjp op, dense or fused per-device
+# math, single-device (axes=None) or sharded
+# ---------------------------------------------------------------------------
+
+def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
+                      interpret=None):
+    """Returns op(e1n, e2n, u1_rows, u2_rows, t1, t2, gamma) ->
+    (loss, (u1_new_rows, u2_new_rows, (g1, g2, dg1, dg2))).
+
+    The whole FCCO step for one batch lives inside the op's forward —
+    row stats (exactly one pass), the u moving-average update, the FCCO
+    weights w = tau/(eps+u) and the surrogate — so nothing is recomputed
+    across the custom-vjp boundary.  The backward emits the local feature
+    grads in closed form (Appendix A): with ``axes`` it communicates only
+    the O(K|B|) scalars gathered in the forward, never feature gradients.
+
+    ``loss_impl="dense"`` uses jnp math ((b, B) pair matrices in HBM);
+    ``loss_impl="fused"`` streams the pair matrix through VMEM via the
+    tiled Pallas kernels.  ``axes=None`` gives single-device semantics
+    (columns == rows).  ``interpret=None`` auto-selects Pallas interpret
+    mode off-TPU.  t1/t2 may be scalars or (b,) per-row arrays (v2);
+    everything but e1n/e2n gets zero gradients (u, tau updates are
+    closed-form elsewhere)."""
+    axes = tuple(axes) if axes else ()
+    if loss_impl not in ("dense", "fused"):
+        raise ValueError(f"loss_impl must be 'dense' or 'fused', "
+                         f"got {loss_impl!r}")
+    from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
+    from repro.kernels.ops import default_interpret
+
+    def _interp():
+        return default_interpret() if interpret is None else interpret
+
+    # Residuals crossing the shard_map boundary must be rank >= 1 (old-jax
+    # shard_map partial-eval gives them an all-axes spec, which rejects
+    # rank-0 values), so the custom-vjp core only sees (b,)-vectors and the
+    # offset packed as shape (1,); the public wrapper normalizes scalars.
+
+    def _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav):
+        b = e1.shape[0]
+        if axes:
+            off = _global_index(axes) * b
+            e1a = _gather(e1, axes)             # feature gather (fwd only)
+            e2a = _gather(e2, axes)
+        else:
+            off = 0
+            e1a, e2a = e1, e2
+        B = e1a.shape[0]
+        if loss_impl == "fused":
+            stats = LS.RowStats(*gcl_pair_stats(
+                e1, e2, t1v, t2v, e1_all=e1a, e2_all=e2a, row_offset=off,
+                interpret=_interp()))
+        else:
+            stats = LS.row_stats(e1, e2, e1a, e2a, t1v, t2v,
+                                 row_offset=off)
+        u1n = LS.update_u(u1r, stats.g1, gammav[0])
+        u2n = LS.update_u(u2r, stats.g2, gammav[0])
+        w1, w2 = LS.fcco_weights(u1n, u2n, t1v, t2v, eps,
+                                 scale_by_tau=scale_by_tau)
+        # the *unreduced* local contribution: the final psum/B runs outside
+        # the custom-vjp so jax's own psum transpose pairs with its own
+        # replicated-cotangent convention (version-dependent); the bwd
+        # compensates with the B factor.
+        local = jnp.sum(w1 * stats.g1 + w2 * stats.g2)
+        sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32),
+                     axis=-1)
+        return local, (u1n, u2n, tuple(stats)), \
+            (e1, e2, e1a, e2a, sd, w1, w2, off)
+
+    @jax.custom_vjp
+    def core(e1, e2, u1r, u2r, t1v, t2v, gammav):
+        local, aux, _ = _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav)
+        return local, aux
+
+    def fwd(e1, e2, u1r, u2r, t1v, t2v, gammav):
+        local, aux, res = _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav)
+        e1_, e2_, e1a, e2a, sd, w1, w2, off = res
+        if axes:
+            # the O(K|B|) scalar gather for the backward (paper §4)
+            sda = _gather(sd, axes)
+            w1a, w2a = _gather(w1, axes), _gather(w2, axes)
+            t1a, t2a = _gather(t1v, axes), _gather(t2v, axes)
+        else:
+            sda, w1a, w2a, t1a, t2a = sd, w1, w2, t1v, t2v
+        off1 = jnp.reshape(jnp.asarray(off, jnp.int32), (1,))
+        return (local, aux), (e1_, e2_, e1a, e2a, sd, sda, w1, w2, w1a,
+                              w2a, t1v, t2v, t1a, t2a, off1)
+
+    def bwd(res, cts):
+        ct, _ = cts   # aux outputs are stop-grad at every call site
+        (e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a, t1v, t2v, t1a, t2a,
+         off1) = res
+        off = off1[0]
+        B = e1a.shape[0]
+        if loss_impl == "fused":
+            de1, de2 = gcl_pair_grads(
+                e1, e2, w1, w2, t1v, t2v, e1_all=e1a, e2_all=e2a,
+                sd_all=sda, w1_all=w1a, w2_all=w2a, tau1_all=t1a,
+                tau2_all=t2a, row_offset=off, interpret=_interp())
+        else:
+            de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1,
+                                          w2, w1a, w2a, t1v, t2v, t1a,
+                                          t2a, off)
+        # de* are grads of the *global mean* loss; ``core`` returns the
+        # local sum, whose outside psum/B contributes the 1/B on ct.
+        scale = ct * B
+        return ((scale * de1).astype(e1.dtype),
+                (scale * de2).astype(e2.dtype),
+                jnp.zeros_like(w1), jnp.zeros_like(w2),
+                jnp.zeros_like(t1v), jnp.zeros_like(t2v),
+                jnp.zeros_like(t1v[:1]))
+
+    core.defvjp(fwd, bwd)
+
+    def op(e1, e2, u1r, u2r, t1, t2, gamma):
+        b = e1.shape[0]
+        t1v = jnp.broadcast_to(t1, (b,)).astype(jnp.float32)
+        t2v = jnp.broadcast_to(t2, (b,)).astype(jnp.float32)
+        gammav = jnp.reshape(jnp.asarray(gamma, jnp.float32), (1,))
+        local, aux = core(e1, e2, u1r, u2r, sg(t1v), sg(t2v), sg(gammav))
+        B = e1.shape[0] * (_axis_prod(axes) if axes else 1)
+        loss = (_psum(local, axes) if axes else local) / B
+        return loss, aux
+
+    return op
 
 
 # ---------------------------------------------------------------------------

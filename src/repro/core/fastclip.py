@@ -50,6 +50,9 @@ class FastCLIPConfig:
     tau_beta1: float = 0.9
     tau_beta2: float = 0.999
     tau_adam_eps: float = 1e-8
+    # loss-layer math: "dense" (jnp pair matrices) or "fused" (tiled
+    # Pallas kernels streaming the pair matrix through VMEM)
+    loss_impl: str = "dense"
 
     @property
     def uses_fcco(self) -> bool:

@@ -27,6 +27,25 @@ import jax.numpy as jnp
 
 sg = jax.lax.stop_gradient
 
+# The pair exponent (s_ij - s_ii)/tau reaches ~2/tau_min = 200 as tau is
+# learned down to tau_min = 0.01, overflowing f32 (exp caps at ~88.7).
+# Every path (dense jnp, Pallas kernels, distributed backward) clamps the
+# exponent at this value so the implementations stay bit-comparable.
+EXP_CLAMP = 60.0
+
+
+def clamped_exp(z):
+    """exp with the exponent clamped at EXP_CLAMP (identically everywhere)."""
+    return jnp.exp(jnp.minimum(z, EXP_CLAMP))
+
+
+def clamped_exp_bwd(z):
+    """The true d/ds factor of ``clamped_exp``: exp(z) below the clamp,
+    0 where it saturates (so the closed-form backwards stay the exact
+    gradient of the clamped forward, matching autodiff of jnp.minimum)."""
+    return jnp.where(z <= EXP_CLAMP, jnp.exp(jnp.minimum(z, EXP_CLAMP)),
+                     0.0)
+
 
 def l2_normalize(x, axis=-1, eps=1e-8):
     x = x.astype(jnp.float32)
@@ -64,13 +83,17 @@ def row_stats(e1_rows, e2_rows, e1_all, e2_all, tau1_rows, tau2_rows,
                     preferred_element_type=jnp.float32)
     z1 = (s1 - sd[:, None]) / t1[:, None]
     z2 = (s2 - sd[:, None]) / t2[:, None]
-    h1 = jnp.exp(z1) * offdiag
-    h2 = jnp.exp(z2) * offdiag
+    h1 = clamped_exp(z1) * offdiag
+    h2 = clamped_exp(z2) * offdiag
     g1 = jnp.sum(h1, axis=-1) / denom
     g2 = jnp.sum(h2, axis=-1) / denom
-    dg1 = jnp.sum(sg(h1) * sg(-(s1 - sd[:, None])), axis=-1) / (
+    # d g/d tau of the *clamped* estimator: saturated entries are constant
+    # in tau, so they contribute 0 (clamped_exp_bwd), not exp(EXP_CLAMP)
+    hb1 = clamped_exp_bwd(z1) * offdiag
+    hb2 = clamped_exp_bwd(z2) * offdiag
+    dg1 = jnp.sum(sg(hb1) * sg(-(s1 - sd[:, None])), axis=-1) / (
         denom * t1 ** 2)
-    dg2 = jnp.sum(sg(h2) * sg(-(s2 - sd[:, None])), axis=-1) / (
+    dg2 = jnp.sum(sg(hb2) * sg(-(s2 - sd[:, None])), axis=-1) / (
         denom * t2 ** 2)
     return RowStats(g1, g2, dg1, dg2)
 

@@ -36,28 +36,34 @@ sg = jax.lax.stop_gradient
 # ---------------------------------------------------------------------------
 
 def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
-                   reduction: str = "fastclip"):
+                   reduction: str = "fastclip", loss_impl: str = "dense"):
     """Returns loss_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma)
     -> (loss, aux) with aux = {u1_new, u2_new (full arrays), tau stats}.
     Inputs e1n/e2n are the *normalized* global-batch embeddings (sharded
     over mesh_axes in the distributed case); u1/u2 the full (n,) state;
     tau1/tau2 scalars or full (n,) arrays (v2); idx the (B,) global sample
-    indices."""
+    indices.
+
+    Both mesh settings of the ``fastclip`` reduction run through one
+    custom-vjp op (repro.core.distributed.make_fcco_loss_op): the row
+    stats are computed exactly once per step inside the op, and
+    ``loss_impl`` selects the dense jnp math or the fused Pallas kernels.
+    ``reduction="allgather_ad"`` keeps the OpenCLIP-style autodiff
+    baseline (with its extra stats pre-pass) for comparison benches."""
 
     if mesh_axes is None:
+        op = D.make_fcco_loss_op(None, fc.eps, fc.scale_by_tau,
+                                 loss_impl=loss_impl)
+
         def local_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
             t1 = tau1[idx] if jnp.ndim(tau1) else tau1
             t2 = tau2[idx] if jnp.ndim(tau2) else tau2
-            stats = LS.row_stats(e1n, e2n, e1n, e2n, t1, t2)
-            u1_rows = LS.update_u(u1[idx], stats.g1, gamma)
-            u2_rows = LS.update_u(u2[idx], stats.g2, gamma)
-            w1, w2 = LS.fcco_weights(sg(u1_rows), sg(u2_rows), t1, t2,
-                                     fc.eps, scale_by_tau=fc.scale_by_tau)
-            loss = LS.surrogate_loss(stats, w1, w2, e1n.shape[0])
+            loss, (u1_rows, u2_rows, stats) = op(
+                e1n, e2n, u1[idx], u2[idx], t1, t2, gamma)
             aux = {"u1_new": u1.at[idx].set(sg(u1_rows)),
                    "u2_new": u2.at[idx].set(sg(u2_rows)),
                    "u1_rows": sg(u1_rows), "u2_rows": sg(u2_rows),
-                   "stats": jax.tree.map(sg, stats)}
+                   "stats": LS.RowStats(*jax.tree.map(sg, stats))}
             return loss, aux
         return local_core
 
@@ -65,8 +71,32 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
     from jax.sharding import PartitionSpec as P
     pspec = P(axes)
 
-    pair = (D.make_fastclip_pair_loss(axes) if reduction == "fastclip"
-            else D.make_allgather_ad_pair_loss(axes))
+    if reduction == "fastclip":
+        op = D.make_fcco_loss_op(axes, fc.eps, fc.scale_by_tau,
+                                 loss_impl=loss_impl)
+
+        def shard_loss(e1l, e2l, u1rows, u2rows, t1, t2, gamma):
+            loss, (u1r, u2r, stats) = op(e1l, e2l, u1rows, u2rows,
+                                         t1, t2, gamma)
+            return loss, sg(u1r), sg(u2r), tuple(stats)
+    else:
+        pair = D.make_allgather_ad_pair_loss(axes)
+
+        def shard_loss(e1l, e2l, u1rows, u2rows, t1, t2, gamma):
+            # stats pre-pass (stop-grad; gathers CSE with the loss pass)
+            off = D._global_index(axes) * e1l.shape[0]
+            e1a = D._gather(sg(e1l), axes)
+            e2a = D._gather(sg(e2l), axes)
+            st0 = LS.row_stats(sg(e1l), sg(e2l), e1a, e2a, t1, t2,
+                               row_offset=off)
+            u1r = LS.update_u(u1rows, st0.g1, gamma)
+            u2r = LS.update_u(u2rows, st0.g2, gamma)
+            w1, w2 = LS.fcco_weights(u1r, u2r, t1, t2, fc.eps,
+                                     scale_by_tau=fc.scale_by_tau)
+            loss, stats = pair(e1l, e2l, w1, w2,
+                               t1 * jnp.ones_like(w1),
+                               t2 * jnp.ones_like(w2))
+            return loss, u1r, u2r, tuple(stats)
 
     def dist_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
         tau_is_arr = jnp.ndim(tau1) > 0
@@ -74,35 +104,20 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
         def inner(e1l, e2l, u1s, u2s, idxs, t1in, t2in):
             shard = u1s.shape[0]
             rel = idxs - D._global_index(axes) * shard
-            if tau_is_arr:
-                t1 = t1in[rel]
-                t2 = t2in[rel]
-            else:
-                t1, t2 = t1in, t2in
-            # stats pre-pass (stop-grad; gathers CSE with the loss pass)
-            off = D._global_index(axes) * e1l.shape[0]
-            e1a = D._gather(sg(e1l), axes)
-            e2a = D._gather(sg(e2l), axes)
-            st0 = LS.row_stats(sg(e1l), sg(e2l), e1a, e2a, t1, t2,
-                               row_offset=off)
-            u1r = LS.update_u(u1s[rel], st0.g1, gamma)
-            u2r = LS.update_u(u2s[rel], st0.g2, gamma)
-            w1, w2 = LS.fcco_weights(u1r, u2r, t1, t2, fc.eps,
-                                     scale_by_tau=fc.scale_by_tau)
-            loss, stats = pair(e1l, e2l, w1, w2,
-                               t1 * jnp.ones_like(w1),
-                               t2 * jnp.ones_like(w2))
+            t1 = t1in[rel] if tau_is_arr else t1in
+            t2 = t2in[rel] if tau_is_arr else t2in
+            loss, u1r, u2r, stats = shard_loss(
+                e1l, e2l, u1s[rel], u2s[rel], t1, t2, gamma)
             return (loss, u1s.at[rel].set(u1r), u2s.at[rel].set(u2r),
-                    u1r, u2r, tuple(stats))
+                    u1r, u2r, stats)
 
         in_specs = (pspec, pspec, pspec, pspec, pspec,
                     pspec if tau_is_arr else P(),
                     pspec if tau_is_arr else P())
         out_specs = (P(), pspec, pspec, pspec, pspec,
                      (pspec, pspec, pspec, pspec))
-        fn = jax.shard_map(inner, mesh=_current_mesh(),
-                           in_specs=in_specs, out_specs=out_specs,
-                           check_vma=False)
+        fn = D.shard_map(inner, mesh=_current_mesh(),
+                         in_specs=in_specs, out_specs=out_specs)
         loss, u1_new, u2_new, u1r, u2r, stats = fn(
             e1n, e2n, u1, u2, idx, tau1, tau2)
         aux = {"u1_new": sg(u1_new), "u2_new": sg(u2_new),
@@ -142,6 +157,9 @@ class TrainStepConfig:
     mesh_axes: Optional[Sequence[str]] = None
     reduction: str = "fastclip"
     impl: str = "chunked"
+    # loss-layer math: "dense" (jnp pair matrices in HBM) or "fused"
+    # (tiled Pallas kernels); None defers to fc.loss_impl
+    loss_impl: Optional[str] = None
 
 
 def init_train_state(rng, tc: TrainStepConfig):
@@ -158,7 +176,8 @@ def make_train_step(tc: TrainStepConfig):
     fc = tc.fc
     gamma_fn = fc.gamma_fn()
     loss_core = (None if fc.version == "openclip"
-                 else make_loss_core(fc, tc.mesh_axes, tc.reduction))
+                 else make_loss_core(fc, tc.mesh_axes, tc.reduction,
+                                     tc.loss_impl or fc.loss_impl))
     if fc.version == "openclip" and tc.mesh_axes is not None:
         mbcl_dist = None  # built lazily inside (needs mesh at trace time)
 
@@ -181,10 +200,10 @@ def make_train_step(tc: TrainStepConfig):
                     from jax.sharding import PartitionSpec as P
                     axes = tuple(tc.mesh_axes)
                     f = D.make_mbcl_loss(axes)
-                    loss = jax.shard_map(
+                    loss = D.shard_map(
                         f, mesh=_current_mesh(),
-                        in_specs=(P(axes), P(axes), P()), out_specs=P(),
-                        check_vma=False)(e1n, e2n, tau_diff)
+                        in_specs=(P(axes), P(axes), P()),
+                        out_specs=P())(e1n, e2n, tau_diff)
                 return loss, {"e1n": sg(e1n), "e2n": sg(e2n)}
             t1 = fcs["tau1"] if fc.individual_tau else sg(tau_diff)
             t2 = fcs["tau2"] if fc.individual_tau else sg(tau_diff)

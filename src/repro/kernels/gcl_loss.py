@@ -1,16 +1,29 @@
 """Pallas TPU kernels for the FastCLIP contrastive hot-spot.
 
-The loss layer's compute is dominated by the (B x B) pair matrix:
+The loss layer's compute is dominated by the (b x B) pair matrix:
 similarity (MXU) -> exp -> masked row reductions, twice (image/text side),
 plus the same matrix re-weighted in the backward.  These kernels stream the
-matrix through VMEM in (BR x BC) tiles (flash-attention style): the B x B
+matrix through VMEM in (BR x BC) tiles (flash-attention style): the b x B
 matrix never touches HBM.
 
     gcl_pair_stats : forward statistics g1, g2, dg1/dtau, dg2/dtau
     gcl_pair_grads : closed-form backward (de1, de2) of the FCCO surrogate
 
+Both kernels come in the *rectangular sharded* form used by the production
+loss engine (repro.core.distributed.make_fcco_loss_op): the anchor rows are
+the (b, d) local pairs of one device, the columns the (B, d) gathered
+global batch, and ``row_offset`` gives the global index of local row 0 so
+the diagonal is masked correctly on a non-square grid.  The single-device
+case is the square specialization (columns = rows, offset 0).
+
+Row indices are passed in as an int32 vector (padded with -1) rather than
+derived from the grid position because ``row_offset`` is a traced value
+inside shard_map (it comes from ``axis_index``).
+
 Tiles are 128-aligned for the MXU; accumulation in f32; column blocks are
-the innermost grid axis so output rows are revisited sequentially.
+the innermost grid axis so output rows are revisited sequentially.  The
+exponent is clamped at ``losses.EXP_CLAMP`` exactly as in the dense path so
+the two implementations stay bit-comparable as tau approaches tau_min.
 """
 from __future__ import annotations
 
@@ -19,6 +32,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.losses import clamped_exp as _cexp
+from repro.core.losses import clamped_exp_bwd as _cexp_bwd
 
 BR = 128   # row tile
 BC = 128   # col tile
@@ -32,13 +48,18 @@ def _pad_rows(x, m, value=0.0):
     return x
 
 
+def _pad_vec(x, n, m, value=0.0):
+    """Broadcast ``x`` to (n,), cast f32, pad up to a multiple of m."""
+    return _pad_rows(jnp.broadcast_to(x, (n,)).astype(jnp.float32), m, value)
+
+
 # ---------------------------------------------------------------------------
 # Forward stats kernel
 # ---------------------------------------------------------------------------
 
-def _stats_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, t1_ref,
-                  t2_ref, g1_ref, g2_ref, dg1_ref, dg2_ref, *, n_valid):
-    r = pl.program_id(0)
+def _stats_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
+                  t1_ref, t2_ref, g1_ref, g2_ref, dg1_ref, dg2_ref,
+                  *, n_cols):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -56,9 +77,9 @@ def _stats_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, t1_ref,
     t1 = t1_ref[...].astype(jnp.float32)
     t2 = t2_ref[...].astype(jnp.float32)
 
-    rows = r * BR + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 0)
+    rows = rid_ref[...][:, None]                     # (BR, 1) global ids
     cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
-    mask = (rows != cols) & (cols < n_valid) & (rows < n_valid)
+    mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
 
     s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
@@ -66,53 +87,67 @@ def _stats_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, t1_ref,
                              preferred_element_type=jnp.float32)
     z1 = (s1 - sd[:, None]) / t1[:, None]
     z2 = (s2 - sd[:, None]) / t2[:, None]
-    h1 = jnp.where(mask, jnp.exp(z1), 0.0)
-    h2 = jnp.where(mask, jnp.exp(z2), 0.0)
+    h1 = jnp.where(mask, _cexp(z1), 0.0)
+    h2 = jnp.where(mask, _cexp(z2), 0.0)
     g1_ref[...] += jnp.sum(h1, axis=1)
     g2_ref[...] += jnp.sum(h2, axis=1)
-    dg1_ref[...] += jnp.sum(h1 * -(s1 - sd[:, None]), axis=1) / (t1 ** 2)
-    dg2_ref[...] += jnp.sum(h2 * -(s2 - sd[:, None]), axis=1) / (t2 ** 2)
+    # dg/dtau of the clamped estimator: saturated entries contribute 0
+    hb1 = jnp.where(mask, _cexp_bwd(z1), 0.0)
+    hb2 = jnp.where(mask, _cexp_bwd(z2), 0.0)
+    dg1_ref[...] += jnp.sum(hb1 * -(s1 - sd[:, None]), axis=1) / (t1 ** 2)
+    dg2_ref[...] += jnp.sum(hb2 * -(s2 - sd[:, None]), axis=1) / (t2 ** 2)
 
 
-def gcl_pair_stats(e1, e2, tau1, tau2, *, interpret=False):
-    """e1/e2: (B, d) normalized embeddings; tau1/tau2: (B,).
-    Returns (g1, g2, dg1, dg2) each (B,) f32 (means over B-1)."""
-    B, d = e1.shape
+def gcl_pair_stats(e1, e2, tau1, tau2, *, e1_all=None, e2_all=None,
+                   row_offset=0, interpret=False):
+    """e1/e2: (b, d) normalized anchor rows; tau1/tau2: scalar or (b,).
+
+    Square case (default): columns are the rows themselves.  Rectangular
+    sharded case: ``e1_all``/``e2_all`` are the (B, d) gathered batch and
+    ``row_offset`` (may be traced) is the global index of local row 0.
+    Returns (g1, g2, dg1, dg2) each (b,) f32 (means over B-1)."""
+    b, d = e1.shape
+    if e1_all is None:
+        e1_all, e2_all = e1, e2
+    B = e1_all.shape[0]
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
+    rid = row_offset + jnp.arange(b, dtype=jnp.int32)
+    ridp = _pad_rows(rid, BR, value=-1)
     e1p = _pad_rows(e1, BR)
     e2p = _pad_rows(e2, BR)
-    sdp = _pad_rows(sd, BR)
-    t1p = _pad_rows(jnp.broadcast_to(tau1, (B,)).astype(jnp.float32), BR, 1.0)
-    t2p = _pad_rows(jnp.broadcast_to(tau2, (B,)).astype(jnp.float32), BR, 1.0)
-    Bp = e1p.shape[0]
-    grid = (Bp // BR, Bp // BC)
+    e1cp = _pad_rows(e1_all, BC)
+    e2cp = _pad_rows(e2_all, BC)
+    sdp = _pad_vec(sd, b, BR)
+    t1p = _pad_vec(tau1, b, BR, 1.0)
+    t2p = _pad_vec(tau2, b, BR, 1.0)
+    bp, Bp = e1p.shape[0], e1cp.shape[0]
+    grid = (bp // BR, Bp // BC)
 
     row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
     col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
     vec_row = pl.BlockSpec((BR,), lambda r, c: (r,))
 
     out = pl.pallas_call(
-        functools.partial(_stats_kernel, n_valid=B),
+        functools.partial(_stats_kernel, n_cols=B),
         grid=grid,
-        in_specs=[row_spec, row_spec, col_spec, col_spec,
+        in_specs=[vec_row, row_spec, row_spec, col_spec, col_spec,
                   vec_row, vec_row, vec_row],
         out_specs=[vec_row] * 4,
-        out_shape=[jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 4,
+        out_shape=[jax.ShapeDtypeStruct((bp,), jnp.float32)] * 4,
         interpret=interpret,
-    )(e1p, e2p, e1p, e2p, sdp, t1p, t2p)
-    denom = max(B - 1, 1)
-    return tuple(o[:B] / denom for o in out)
+    )(ridp, e1p, e2p, e1cp, e2cp, sdp, t1p, t2p)
+    denom = float(max(B - 1, 1))
+    return tuple(o[:b] / denom for o in out)
 
 
 # ---------------------------------------------------------------------------
 # Backward kernel: de1/de2 of the FCCO surrogate
 # ---------------------------------------------------------------------------
 
-def _grads_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, sdc_ref,
-                  w1r_ref, w2r_ref, w1c_ref, w2c_ref, t1r_ref, t2r_ref,
-                  t1c_ref, t2c_ref, de1_ref, de2_ref, r1_ref, r2_ref,
-                  *, n_valid):
-    r = pl.program_id(0)
+def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
+                  sdc_ref, w1r_ref, w2r_ref, w1c_ref, w2c_ref, t1r_ref,
+                  t2r_ref, t1c_ref, t2c_ref, de1_ref, de2_ref, r1_ref,
+                  r2_ref, *, n_cols):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -129,25 +164,25 @@ def _grads_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, sdc_ref,
     sdr = sdr_ref[...].astype(jnp.float32)
     sdc = sdc_ref[...].astype(jnp.float32)
 
-    rows = r * BR + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 0)
+    rows = rid_ref[...][:, None]                     # (BR, 1) global ids
     cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
-    mask = (rows != cols) & (cols < n_valid) & (rows < n_valid)
+    mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
 
     s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
     s2 = jax.lax.dot_general(e2r, e1c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    a1 = (w1r_ref[...] / t1r_ref[...])[:, None] \
-        * jnp.where(mask, jnp.exp((s1 - sdr[:, None]) / t1r_ref[...][:, None]), 0.0)
-    a2 = (w2r_ref[...] / t2r_ref[...])[:, None] \
-        * jnp.where(mask, jnp.exp((s2 - sdr[:, None]) / t2r_ref[...][:, None]), 0.0)
+    a1 = (w1r_ref[...] / t1r_ref[...])[:, None] * jnp.where(
+        mask, _cexp_bwd((s1 - sdr[:, None]) / t1r_ref[...][:, None]), 0.0)
+    a2 = (w2r_ref[...] / t2r_ref[...])[:, None] * jnp.where(
+        mask, _cexp_bwd((s2 - sdr[:, None]) / t2r_ref[...][:, None]), 0.0)
     # transpose blocks: m1[p, j] = A1[j, p] over column anchors j
     #   A1[j, p] = w1_j/t1_j exp((e1_j.e2_p - sd_j)/t1_j); e1_j.e2_p = s2[p, j]
-    m1 = (w1c_ref[...] / t1c_ref[...])[None, :] \
-        * jnp.where(mask, jnp.exp((s2 - sdc[None, :]) / t1c_ref[...][None, :]), 0.0)
+    m1 = (w1c_ref[...] / t1c_ref[...])[None, :] * jnp.where(
+        mask, _cexp_bwd((s2 - sdc[None, :]) / t1c_ref[...][None, :]), 0.0)
     #   A2[j, p] = w2_j/t2_j exp((e2_j.e1_p - sd_j)/t2_j); e2_j.e1_p = s1[p, j]
-    m2 = (w2c_ref[...] / t2c_ref[...])[None, :] \
-        * jnp.where(mask, jnp.exp((s1 - sdc[None, :]) / t2c_ref[...][None, :]), 0.0)
+    m2 = (w2c_ref[...] / t2c_ref[...])[None, :] * jnp.where(
+        mask, _cexp_bwd((s1 - sdc[None, :]) / t2c_ref[...][None, :]), 0.0)
 
     de1_ref[...] += jax.lax.dot_general(
         a1 + m2, e2c, (((1,), (0,)), ((), ())),
@@ -159,18 +194,37 @@ def _grads_kernel(e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref, sdc_ref,
     r2_ref[...] += jnp.sum(a2, axis=1)
 
 
-def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, interpret=False):
-    """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i."""
-    B, d = e1.shape
+def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, e1_all=None, e2_all=None,
+                   sd_all=None, w1_all=None, w2_all=None, tau1_all=None,
+                   tau2_all=None, row_offset=0, interpret=False):
+    """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i.
+
+    Square case: anchors == columns, all the ``*_all`` args default to the
+    local ones.  Rectangular sharded case: the ``*_all`` args are the
+    gathered (B,)-shaped batch quantities (features, s_ii, FCCO weights,
+    taus) needed for the transpose terms; the returned (b, d) grads are the
+    *local* rows — no collective is required on them."""
+    b, d = e1.shape
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
-    pads = lambda x, v=0.0: _pad_rows(
-        jnp.broadcast_to(x, (B,)).astype(jnp.float32), BR, v)
+    if e1_all is None:
+        e1_all, e2_all = e1, e2
+        sd_all, w1_all, w2_all = sd, w1, w2
+        tau1_all, tau2_all = tau1, tau2
+    B = e1_all.shape[0]
+    rid = row_offset + jnp.arange(b, dtype=jnp.int32)
+
     e1p, e2p = _pad_rows(e1, BR), _pad_rows(e2, BR)
-    sdp = pads(sd)
-    w1p, w2p = pads(w1), pads(w2)
-    t1p, t2p = pads(tau1, 1.0), pads(tau2, 1.0)
-    Bp = e1p.shape[0]
-    grid = (Bp // BR, Bp // BC)
+    e1cp, e2cp = _pad_rows(e1_all, BC), _pad_rows(e2_all, BC)
+    ridp = _pad_rows(rid, BR, value=-1)
+    sdp = _pad_vec(sd, b, BR)
+    sdcp = _pad_vec(sd_all, B, BC)
+    w1p, w2p = _pad_vec(w1, b, BR), _pad_vec(w2, b, BR)
+    w1cp, w2cp = _pad_vec(w1_all, B, BC), _pad_vec(w2_all, B, BC)
+    t1p, t2p = _pad_vec(tau1, b, BR, 1.0), _pad_vec(tau2, b, BR, 1.0)
+    t1cp = _pad_vec(tau1_all, B, BC, 1.0)
+    t2cp = _pad_vec(tau2_all, B, BC, 1.0)
+    bp, Bp = e1p.shape[0], e1cp.shape[0]
+    grid = (bp // BR, Bp // BC)
 
     row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
     col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
@@ -178,18 +232,19 @@ def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, interpret=False):
     vcol = pl.BlockSpec((BC,), lambda r, c: (c,))
 
     de1, de2, r1, r2 = pl.pallas_call(
-        functools.partial(_grads_kernel, n_valid=B),
+        functools.partial(_grads_kernel, n_cols=B),
         grid=grid,
-        in_specs=[row_spec, row_spec, col_spec, col_spec, vrow, vcol,
+        in_specs=[vrow, row_spec, row_spec, col_spec, col_spec, vrow, vcol,
                   vrow, vrow, vcol, vcol, vrow, vrow, vcol, vcol],
         out_specs=[pl.BlockSpec((BR, d), lambda r, c: (r, 0))] * 2
         + [vrow] * 2,
-        out_shape=[jax.ShapeDtypeStruct((Bp, d), jnp.float32)] * 2
-        + [jax.ShapeDtypeStruct((Bp,), jnp.float32)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((bp, d), jnp.float32)] * 2
+        + [jax.ShapeDtypeStruct((bp,), jnp.float32)] * 2,
         interpret=interpret,
-    )(e1p, e2p, e1p, e2p, sdp, sdp, w1p, w2p, w1p, w2p, t1p, t2p, t1p, t2p)
+    )(ridp, e1p, e2p, e1cp, e2cp, sdp, sdcp, w1p, w2p, w1cp, w2cp,
+      t1p, t2p, t1cp, t2cp)
     kappa = 1.0 / (B * max(B - 1.0, 1.0))
-    rsum = (r1 + r2)[:B, None]
-    de1 = kappa * (de1[:B] - rsum * e2.astype(jnp.float32))
-    de2 = kappa * (de2[:B] - rsum * e1.astype(jnp.float32))
+    rsum = (r1 + r2)[:b, None]
+    de1 = kappa * (de1[:b] - rsum * e2.astype(jnp.float32))
+    de2 = kappa * (de2[:b] - rsum * e1.astype(jnp.float32))
     return de1, de2

@@ -1,9 +1,12 @@
 """jit'd wrappers around the Pallas kernels.
 
 ``fused_gcl_loss`` packages the fwd/bwd kernels as a custom-vjp scalar loss
-so the FCCO surrogate can run entirely through the fused kernels on TPU
-(per-device compute of the distributed step, or the whole loss on one
-device).  On CPU the ``interpret=True`` path executes the same kernel body.
+for the *square* (single-device, fixed-weights) case — kept as the minimal
+kernel-level surface for tests and notebooks.  The production path is
+``repro.core.distributed.make_fcco_loss_op`` (``loss_impl="fused"``), which
+drives the same kernels in their rectangular sharded form with the FCCO
+u/weight updates fused into the op.  On CPU the ``interpret=True`` path
+executes the same kernel body.
 """
 from __future__ import annotations
 

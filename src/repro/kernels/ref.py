@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.losses import clamped_exp, clamped_exp_bwd
+
 
 def gcl_pair_stats_ref(e1, e2, tau1, tau2):
     """Fused contrastive inner-estimator statistics over the full pair
@@ -22,13 +24,16 @@ def gcl_pair_stats_ref(e1, e2, tau1, tau2):
     s2 = (e2 @ e1.T).astype(jnp.float32)
     z1 = (s1 - sd[:, None]) / tau1[:, None]
     z2 = (s2 - sd[:, None]) / tau2[:, None]
-    h1 = jnp.exp(z1) * off
-    h2 = jnp.exp(z2) * off
+    h1 = clamped_exp(z1) * off
+    h2 = clamped_exp(z2) * off
     denom = B - 1
     g1 = h1.sum(1) / denom
     g2 = h2.sum(1) / denom
-    dg1 = (h1 * -(s1 - sd[:, None])).sum(1) / (denom * tau1 ** 2)
-    dg2 = (h2 * -(s2 - sd[:, None])).sum(1) / (denom * tau2 ** 2)
+    # dg/dtau of the clamped estimator: saturated entries contribute 0
+    hb1 = clamped_exp_bwd(z1) * off
+    hb2 = clamped_exp_bwd(z2) * off
+    dg1 = (hb1 * -(s1 - sd[:, None])).sum(1) / (denom * tau1 ** 2)
+    dg2 = (hb2 * -(s2 - sd[:, None])).sum(1) / (denom * tau2 ** 2)
     return g1, g2, dg1, dg2
 
 
@@ -41,8 +46,10 @@ def gcl_pair_grads_ref(e1, e2, w1, w2, tau1, tau2):
     off = 1.0 - jnp.eye(B, dtype=jnp.float32)
     s1 = (e1 @ e2.T).astype(jnp.float32)
     s2 = (e2 @ e1.T).astype(jnp.float32)
-    A1 = (w1 / tau1)[:, None] * jnp.exp((s1 - sd[:, None]) / tau1[:, None]) * off
-    A2 = (w2 / tau2)[:, None] * jnp.exp((s2 - sd[:, None]) / tau2[:, None]) * off
+    A1 = (w1 / tau1)[:, None] \
+        * clamped_exp_bwd((s1 - sd[:, None]) / tau1[:, None]) * off
+    A2 = (w2 / tau2)[:, None] \
+        * clamped_exp_bwd((s2 - sd[:, None]) / tau2[:, None]) * off
     kappa = 1.0 / (B * (B - 1.0))
     r1 = A1.sum(1)
     r2 = A2.sum(1)

@@ -58,6 +58,11 @@ def main(argv=None):
     ap.add_argument("--gamma-min", type=float, default=0.2)
     ap.add_argument("--reduction", default="fastclip",
                     choices=["fastclip", "allgather_ad"])
+    ap.add_argument("--loss-impl", default=None,
+                    choices=["dense", "fused"],
+                    help="loss-layer math: dense jnp or fused Pallas "
+                         "kernels (interpret mode off-TPU); unset defers "
+                         "to FastCLIPConfig.loss_impl (dense)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
@@ -96,7 +101,8 @@ def main(argv=None):
             arch=cfg, fc=fc, optimizer=get_optimizer(args.optimizer),
             lr_fn=lr_warmup_cosine(args.lr, min(500, args.steps // 10 + 1),
                                    args.steps),
-            wd=args.wd, reduction=args.reduction)
+            wd=args.wd, reduction=args.reduction,
+            loss_impl=args.loss_impl)
         state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
         jit_step = jax.jit(TS.make_train_step(tc))
 

@@ -25,13 +25,14 @@ wspec = {k: (P("model", None, None) if getattr(v, "ndim", 0) >= 3 else P())
 pspec = {k: (wspec[k] if k in wspec else jax.tree.map(lambda _: P(), v))
          for k, v in params.items()}
 xspec = P(("data","model"), None, None)
-y, aux = jax.shard_map(inner, mesh=mesh, in_specs=(pspec, xspec),
-                       out_specs=(xspec, P()), check_vma=False)(params, x)
+from repro.core.distributed import shard_map
+y, aux = shard_map(inner, mesh=mesh, in_specs=(pspec, xspec),
+                   out_specs=(xspec, P()))(params, x)
 err = float(jnp.max(jnp.abs(y - ref)))
 print("max err", err, "aux_lb", float(aux["moe_lb"]), float(aux_ref["moe_lb"]))
 # gradient flows
-g = jax.grad(lambda p: jnp.sum(jax.shard_map(inner, mesh=mesh, in_specs=(pspec, xspec),
-             out_specs=(xspec, P()), check_vma=False)(p, x)[0]**2))(params)
+g = jax.grad(lambda p: jnp.sum(shard_map(inner, mesh=mesh, in_specs=(pspec, xspec),
+             out_specs=(xspec, P()))(p, x)[0]**2))(params)
 gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
 print("grad norm finite:", np.isfinite(gn), gn > 0)
 assert err < 2e-4, err

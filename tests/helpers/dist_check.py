@@ -56,8 +56,8 @@ def check_vjp_equivalence():
                  else D.make_allgather_ad_pair_loss(("data",)))
             loss, _ = f(e1n, e2n, w1, w2, tau, tau)
             return loss
-        fn = jax.shard_map(inner, mesh=mesh, in_specs=(P("data"),) * 4,
-                           out_specs=P())
+        fn = D.shard_map(inner, mesh=mesh, in_specs=(P("data"),) * 4,
+                         out_specs=P())
         return fn(e1, e2, u1, u2)
 
     ok = True
@@ -72,18 +72,79 @@ def check_vjp_equivalence():
     return ok
 
 
+def check_fused_parity(K=4):
+    """Fused (Pallas) shard_map grads == single-device fcco_reference_step
+    autodiff for v1/v2/v3, incl. the per-row tau (v2) case, on K devices."""
+    mesh = Mesh(np.array(jax.devices()[:K]), ("data",))
+    B, d = 32, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    e1 = jax.random.normal(ks[0], (B, d))
+    e2 = jax.random.normal(ks[1], (B, d))
+    u1 = jax.random.uniform(ks[2], (B,)) + 0.1
+    u2 = jax.random.uniform(ks[3], (B,)) + 0.1
+    gamma, eps = 0.5, 1e-14
+    tau_row = jax.random.uniform(ks[4], (B,)) * 0.05 + 0.03
+
+    # (version, tau, scale_by_tau): v1/v3 share the loss-gradient form
+    cases = [("v1", 0.07, True), ("v2", tau_row, True),
+             ("v3", 0.05, True)]
+    ok = True
+    for name, tau, sbt in cases:
+        def ref(a, b):
+            loss, _ = LS.fcco_reference_step(a, b, u1, u2, tau, tau,
+                                             gamma, eps, scale_by_tau=sbt)
+            return loss
+        g_ref = jax.grad(ref, argnums=(0, 1))(e1, e2)
+
+        for impl in ("dense", "fused"):
+            op = D.make_fcco_loss_op(("data",), eps, sbt, loss_impl=impl,
+                                     interpret=True)
+            tau_is_arr = jnp.ndim(tau) > 0
+
+            def dist(a, b):
+                def inner(e1l, e2l, u1l, u2l, t1l, t2l):
+                    e1n = LS.l2_normalize(e1l)
+                    e2n = LS.l2_normalize(e2l)
+                    t1 = t1l if tau_is_arr else tau
+                    t2 = t2l if tau_is_arr else tau
+                    loss, _ = op(e1n, e2n, u1l, u2l, t1, t2, gamma)
+                    return loss
+                tspec = (P("data"),) * 2 if tau_is_arr else (P(), P())
+                targ = tau if tau_is_arr else jnp.zeros(())
+                fn = D.shard_map(inner, mesh=mesh,
+                                 in_specs=(P("data"),) * 4 + tspec,
+                                 out_specs=P())
+                return fn(a, b, u1, u2, targ, targ)
+
+            g = jax.grad(dist, argnums=(0, 1))(e1, e2)
+            err = max(float(jnp.max(jnp.abs(gd - gr)))
+                      for gd, gr in zip(g, g_ref))
+            ok &= err < 1e-5
+            print(f"K={K} {name} {impl} grad err {err:.2e}")
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
 def check_comm_reduction():
     """FastCLIP reduction emits no feature-grad reduce-scatter and fewer
-    collective bytes than the OpenCLIP-style reduction."""
+    collective bytes than the OpenCLIP-style reduction.  The fastclip side
+    is the production engine (make_fcco_loss_op): stats + u update + loss
+    in one op, no stats pre-pass / duplicated feature gathers."""
     from repro.roofline.analysis import collective_stats
     mesh = mesh1d()
     b, dim = 64, 512
     B = b * 8
 
+    fcco_op = D.make_fcco_loss_op(("data",), 1e-14, True,
+                                  loss_impl="dense")
+
     def make(reduction):
         def inner(e1l, e2l, u1l, u2l):
             sg = jax.lax.stop_gradient
             e1n, e2n = LS.l2_normalize(e1l), LS.l2_normalize(e2l)
+            if reduction == "fastclip":
+                loss, _ = fcco_op(e1n, e2n, u1l, u2l, 0.07, 0.07, 0.5)
+                return loss
             off = jax.lax.axis_index("data") * e1l.shape[0]
             e1a = jax.lax.all_gather(sg(e1n), "data", tiled=True)
             e2a = jax.lax.all_gather(sg(e2n), "data", tiled=True)
@@ -92,15 +153,14 @@ def check_comm_reduction():
             u1n = LS.update_u(u1l, st.g1, 0.5)
             u2n = LS.update_u(u2l, st.g2, 0.5)
             w1, w2 = LS.fcco_weights(u1n, u2n, 0.07, 0.07, 1e-14)
-            f = (D.make_fastclip_pair_loss(("data",))
-                 if reduction == "fastclip"
-                 else D.make_allgather_ad_pair_loss(("data",)))
+            f = D.make_allgather_ad_pair_loss(("data",))
             loss, _ = f(e1n, e2n, w1, w2, 0.07, 0.07)
             return loss
 
         def outer(e1, e2, u1, u2):
-            return jax.shard_map(inner, mesh=mesh, in_specs=(P("data"),) * 4,
-                                 out_specs=P())(e1, e2, u1, u2)
+            return D.shard_map(inner, mesh=mesh,
+                               in_specs=(P("data"),) * 4,
+                               out_specs=P())(e1, e2, u1, u2)
 
         def grad_fn(e1, e2, u1, u2):
             return jax.grad(lambda a, c: outer(a, c, u1, u2),
@@ -173,6 +233,8 @@ CHECKS = {
     "vjp": check_vjp_equivalence,
     "comm": check_comm_reduction,
     "train": check_train_step_equivalence,
+    "fused2": lambda: check_fused_parity(K=2),
+    "fused4": lambda: check_fused_parity(K=4),
 }
 
 if __name__ == "__main__":

@@ -31,6 +31,13 @@ def test_distributed_train_step_equals_single_device():
     _run("train")
 
 
+@pytest.mark.parametrize("K", [2, 4])
+def test_fused_shard_map_grads_match_reference(K):
+    """loss_impl="fused" (Pallas) shard_map grads == single-device
+    fcco_reference_step autodiff, v1/v2/v3 incl. per-row tau, K devices."""
+    _run(f"fused{K}")
+
+
 def test_moe_all_to_all_routing_matches_oracle():
     """§Perf a2a expert router == dense-dispatch oracle on a (2,4) mesh."""
     helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
