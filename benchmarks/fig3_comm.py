@@ -37,11 +37,12 @@ _SCRIPT = textwrap.dedent("""
             e2a = jax.lax.all_gather(sg(e2n), "data", tiled=True)
             st = LS.row_stats(sg(e1n), sg(e2n), e1a, e2a, 0.07, 0.07,
                               row_offset=off)
-            w1, w2 = LS.fcco_weights(LS.update_u(u1l, st.g1, .5),
-                                     LS.update_u(u2l, st.g2, .5),
-                                     0.07, 0.07, 1e-14)
+            lg1, lg2 = LS.log_g(st)
+            lw1, lw2 = LS.fcco_log_weights(
+                LS.update_log_u(u1l, lg1, .5),
+                LS.update_log_u(u2l, lg2, .5), 0.07, 0.07, 1e-14)
             f = D.make_allgather_ad_pair_loss(("data",))
-            loss, _ = f(e1n, e2n, w1, w2, 0.07, 0.07)
+            loss, _ = f(e1n, e2n, lw1, lw2, 0.07, 0.07)
             return loss
         def outer(e1, e2, u1, u2):
             return D.shard_map(inner, mesh=mesh,

@@ -3,11 +3,14 @@
 the pure-jnp dense path.
 
 Per batch size it reports wall time of both paths, a fused-vs-dense
-parity column (max rel err of the stats), and the analytic HBM traffic of
-the pair matrix per training step: the dense path materializes the (B, B)
-f32 matrix ~8x per step (s1/s2 + exp'd h1/h2 in the forward, A1/A2 +
-M1/M2 in the backward), while the fused kernels stream it through VMEM in
-(128, 128) tiles — the pair matrix itself never reaches HBM."""
+parity column (max rel err of the shift-decomposed stats), and the
+analytic HBM traffic of the pair matrix per training step: the dense path
+materializes the (B, B) f32 matrix ~8x per step (s1/s2 + shifted h1/h2 in
+the forward, A1/A2 + M1/M2 in the backward), while the fused kernels
+stream it through VMEM in (128, 128) tiles — the pair matrix itself never
+reaches HBM.  Extra rows cover bf16 inputs (blocks stay bf16 in VMEM:
+half the feature traffic, f32 accumulation) and the d-blocked BlockSpec
+path for wide embeddings (d > VMEM tile budget)."""
 import time
 
 import jax
@@ -33,6 +36,15 @@ def pair_matrix_bytes(B, impl):
     return 0                      # fused: tiles live in VMEM only
 
 
+def feature_tile_bytes(B, d, dtype_bytes):
+    """Analytic HBM->VMEM feature traffic of one stats pass: each of the
+    ceil(B/BR) row tiles re-streams the full (B, d) column set, and the
+    row blocks themselves are read once."""
+    from repro.kernels.gcl_loss import BR
+    n_row_tiles = -(-B // BR)
+    return (n_row_tiles + 1) * B * d * dtype_bytes
+
+
 def run(steps=None, seed=0):
     rows = []
     for B, d in [(512, 512), (1024, 512), (2048, 512)]:
@@ -49,7 +61,7 @@ def run(steps=None, seed=0):
         us_dense = _time(jnp_path, e1, e2)
         us_fused = _time(fused_path, e1, e2, iters=5)
 
-        # fused-vs-dense parity (max rel err over the four stats)
+        # fused-vs-dense parity (max rel err over the six shifted stats)
         out_d = jnp_path(e1, e2)
         out_f = fused_path(e1, e2)
         parity = max(
@@ -65,4 +77,40 @@ def run(steps=None, seed=0):
                      f"gflops_s={flops / us_fused * 1e-3:.1f};"
                      f"pair_hbm_bytes={pair_matrix_bytes(B, 'fused')};"
                      f"parity_max_rel_err={parity:.2e}"))
+
+    # bf16 inputs: same kernel, bf16 blocks in VMEM, f32 accumulators
+    B, d = 1024, 512
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    e1 = l2_normalize(jax.random.normal(k1, (B, d)))
+    e2 = l2_normalize(jax.random.normal(k2, (B, d)))
+    tau = jnp.full((B,), 0.07)
+    f32_path = jax.jit(lambda a, b: tuple(
+        gcl_pair_stats(a, b, tau, tau, interpret=default_interpret())))
+    bf16_path = jax.jit(lambda a, b: tuple(gcl_pair_stats(
+        a.astype(jnp.bfloat16), b.astype(jnp.bfloat16), tau, tau,
+        interpret=default_interpret())))
+    us_bf16 = _time(bf16_path, e1, e2, iters=5)
+    out_32 = f32_path(e1, e2)
+    out_16 = bf16_path(e1, e2)
+    # compare in log domain (m + log g): scale-free across shift choices
+    lg32 = out_32[4] + jnp.log(out_32[0])
+    lg16 = out_16[4] + jnp.log(out_16[0])
+    rows.append((f"gcl_stats/fused_bf16/B={B}", us_bf16,
+                 f"feat_hbm_bytes={feature_tile_bytes(B, d, 2)};"
+                 f"vs_f32_log_g_err={float(jnp.max(jnp.abs(lg16 - lg32))):.2e}"))
+
+    # d-blocked path: wide embeddings, (BR, d_block) feature tiles
+    B, d = 256, 4096
+    e1 = l2_normalize(jax.random.normal(k1, (B, d)))
+    e2 = l2_normalize(jax.random.normal(k2, (B, d)))
+    tau = jnp.full((B,), 0.07)
+    blocked = jax.jit(lambda a, b: tuple(gcl_pair_stats(
+        a, b, tau, tau, interpret=default_interpret())))       # auto-blocks
+    whole = jax.jit(lambda a, b: tuple(gcl_pair_stats(
+        a, b, tau, tau, interpret=default_interpret(), d_block=d)))
+    us_blk = _time(blocked, e1, e2, iters=5)
+    parity = max(float(jnp.max(jnp.abs(a - b) / (jnp.abs(b) + 1e-12)))
+                 for a, b in zip(blocked(e1, e2), whole(e1, e2)))
+    rows.append((f"gcl_stats/fused_dblock/B={B}/d={d}", us_blk,
+                 f"d_block=auto;vs_unblocked_max_rel_err={parity:.2e}"))
     return rows

@@ -11,12 +11,29 @@ second stats pass survives the custom-vjp boundary) and its backward emits
 the local feature grads in closed form — no collective, and in the fused
 case no (b, B) pair matrix in HBM.
 
+Log-domain stats contract (the log-sum-exp shift, see repro.core.losses):
+
+  * the op takes and returns the FCCO u state in **log domain** (lu);
+  * the row stats are shift-decomposed: per-row max ``m`` (stop-grad) +
+    shift-invariant sums, so nothing overflows f32 at tau -> tau_min;
+  * each shard's row maxes are private to its anchor rows (a row's max
+    runs over the already-gathered columns), so no extra collective is
+    needed for the shift — the per-shard maxes enter the backward only
+    through the O(K|B|) scalar gather of ``lwt = lw - log(tau)`` below,
+    and inside the kernels the per-tile maxes combine via the standard
+    streaming-max/rescale recurrence;
+  * the backward exponent is ``z_ij + lwt_i = z_ij - log(eps + u_i)``,
+    bounded above by ``log(B/gamma)`` since ``u_new >= gamma * g`` — the
+    closed form is the exact derivative of the *unclamped* objective
+    (losses.EXP_CLAMP remains only as a last-resort guard, with the
+    ``sat`` aux output counting the rows on which it would fire).
+
 Two reductions are implemented for the same objective:
 
 ``reduction="fastclip"``
     Forward ALL_GATHERs the normalized features (unavoidable: the loss
     contrasts against the global batch, same cost as OpenCLIP's forward)
-    plus O(K|B|) *scalars* (s_ii, the FCCO weights w = tau/(eps+u), taus).
+    plus O(K|B|) *scalars* (s_ii, the log-domain FCCO weights, taus).
     The backward computes the gradient w.r.t. the *local* features in
     closed form from the saved gathered tensors — it emits **no collective
     on feature gradients**.  This is the paper's replacement of OpenCLIP's
@@ -29,14 +46,15 @@ Two reductions are implemented for the same objective:
     pattern the paper improves on.  Kept as the measurable baseline
     (benchmarks/comm_cost.py counts collective bytes of both HLOs).
 
-Gradient math (Appendix A, both sides, per-row taus):
+Gradient math (Appendix A, both sides, per-row taus, log-domain weights):
     L = (1/B) sum_i [w1_i g1_i + w2_i g2_i]
-    A1[i,j] = w1_i h1[i,j] / tau1_i (0 on diag);  A2 likewise
+    A1[i,j] = exp(z1_ij + lwt1_i) (0 on diag), lwt_i = lw_i - log tau_i;
+    A2 likewise
     dL/de1_p = 1/(B(B-1)) [ sum_j A1[p,j](e2_j - e2_p)
                             + sum_i A2[i,p] e2_i - (sum_j A2[p,j]) e2_p ]
     dL/de2_p = 1/(B(B-1)) [ sum_j A2[p,j](e1_j - e1_p)
                             + sum_i A1[i,p] e1_i - (sum_j A1[p,j]) e1_p ]
-Every term for local p needs only local rows of h, the gathered features
+Every term for local p needs only local rows of A, the gathered features
 (forward residuals) and gathered scalars.
 """
 from __future__ import annotations
@@ -100,10 +118,13 @@ def _axis_prod(axes):
 # Closed-form local feature grads (Appendix A), dense jnp flavor
 # ---------------------------------------------------------------------------
 
-def _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a,
+def _dense_local_grads(e1, e2, e1a, e2a, sd, sda, lwt1, lwt2, lwt1a, lwt2a,
                        t1, t2, t1a, t2a, off):
     """(de1, de2) of L = (1/B) sum_i w1_i g1_i + w2_i g2_i w.r.t. the local
     rows, from the local (b,)-quantities and the gathered (B,)-quantities.
+    ``lwt* = log(w*) - log(tau*)`` per row / gathered: every pair enters as
+    ``exp(z + lwt)``, which is bounded by log(B/gamma) above (exact
+    unclamped gradients; ``guarded_exp`` is the last-resort guard).
     Includes the 1/(B(B-1)) factor; the caller scales by the cotangent.
     Builds four dense (b, B) matrices — the fused Pallas path avoids them.
     """
@@ -119,27 +140,25 @@ def _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a,
                     preferred_element_type=jnp.float32)
     s2 = jnp.einsum("bd,Bd->bB", e2, e1a,
                     preferred_element_type=jnp.float32)
-    cexp = LS.clamped_exp_bwd     # zero where the fwd clamp saturated
-    A1r = (w1 / t1)[:, None] * cexp((s1 - sd[:, None]) / t1[:, None]) \
-        * offdiag
-    A2r = (w2 / t2)[:, None] * cexp((s2 - sd[:, None]) / t2[:, None]) \
-        * offdiag
+    gexp = LS.guarded_exp
+    A1r = gexp((s1 - sd[:, None]) / t1[:, None] + lwt1[:, None]) * offdiag
+    A2r = gexp((s2 - sd[:, None]) / t2[:, None] + lwt2[:, None]) * offdiag
     # local columns: M1[p, i] = A1[i, p] (anchors i global, col p local).
-    # A1[i, p] = w1_i/t1_i exp((e1_i.e2_p - sd_i)/t1_i), and e1_i.e2_p is
+    # A1[i, p] = exp((e1_i.e2_p - sd_i)/tau1_i + lwt1_i), and e1_i.e2_p is
     # s2[p, i] (likewise e2_i.e1_p = s1[p, i]) — reuse the A-side matmuls.
-    M1 = (w1a / t1a)[None, :] * cexp((s2 - sda[None, :]) / t1a[None, :]) \
-        * offdiag
-    M2 = (w2a / t2a)[None, :] * cexp((s1 - sda[None, :]) / t2a[None, :]) \
-        * offdiag
+    M1 = gexp((s2 - sda[None, :]) / t1a[None, :] + lwt1a[None, :]) * offdiag
+    M2 = gexp((s1 - sda[None, :]) / t2a[None, :] + lwt2a[None, :]) * offdiag
 
-    de1 = (jnp.einsum("bB,Bd->bd", A1r, e2a)
-           - jnp.sum(A1r, axis=1, keepdims=True) * e2
-           + jnp.einsum("bB,Bd->bd", M2, e2a)
-           - jnp.sum(A2r, axis=1, keepdims=True) * e2)
-    de2 = (jnp.einsum("bB,Bd->bd", A2r, e1a)
-           - jnp.sum(A2r, axis=1, keepdims=True) * e1
-           + jnp.einsum("bB,Bd->bd", M1, e1a)
-           - jnp.sum(A1r, axis=1, keepdims=True) * e1)
+    e1f = e1.astype(jnp.float32)
+    e2f = e2.astype(jnp.float32)
+    de1 = (jnp.einsum("bB,Bd->bd", A1r, e2a.astype(jnp.float32))
+           - jnp.sum(A1r, axis=1, keepdims=True) * e2f
+           + jnp.einsum("bB,Bd->bd", M2, e2a.astype(jnp.float32))
+           - jnp.sum(A2r, axis=1, keepdims=True) * e2f)
+    de2 = (jnp.einsum("bB,Bd->bd", A2r, e1a.astype(jnp.float32))
+           - jnp.sum(A2r, axis=1, keepdims=True) * e1f
+           + jnp.einsum("bB,Bd->bd", M1, e1a.astype(jnp.float32))
+           - jnp.sum(A1r, axis=1, keepdims=True) * e1f)
     return kappa * de1, kappa * de2
 
 
@@ -148,56 +167,60 @@ def _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a,
 # ---------------------------------------------------------------------------
 
 def make_fastclip_pair_loss(axes: Sequence[str]):
-    """Returns f(e1n, e2n, w1, w2, t1, t2) -> (loss, (g1, g2, dg1, dg2))
+    """Returns f(e1n, e2n, lw1, lw2, t1, t2) -> (loss, stats)
     for use *inside* shard_map.  e1n/e2n: (b, d) normalized local features;
-    w1/w2: (b,) stop-grad FCCO weights; t1/t2: (b,) taus.  loss is the
-    global surrogate (replicated).  The row stats are returned for the u
-    and tau updates (stop-grad)."""
+    lw1/lw2: (b,) stop-grad *log-domain* FCCO weights; t1/t2: (b,) taus.
+    loss is the global surrogate (replicated).  The shift-decomposed row
+    stats are returned for the u and tau updates (stop-grad)."""
     axes = tuple(axes)
 
     @jax.custom_vjp
-    def pair_loss(e1, e2, w1, w2, t1, t2):
-        local, stats, _ = _fwd_compute(e1, e2, w1, w2, t1, t2)
+    def pair_loss(e1, e2, lw1, lw2, t1, t2):
+        local, stats, _ = _fwd_compute(e1, e2, lw1, lw2, t1, t2)
         return local, tuple(stats)
 
-    def _fwd_compute(e1, e2, w1, w2, t1, t2):
+    def _fwd_compute(e1, e2, lw1, lw2, t1, t2):
         b = e1.shape[0]
         off = _global_index(axes) * b
         e1a = _gather(e1, axes)                 # (B, d)  feature gather
         e2a = _gather(e2, axes)
-        sd = jnp.sum(e1 * e2, axis=-1)          # (b,) local s_ii
+        sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32),
+                     axis=-1)                   # (b,) local s_ii
         stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
         # unreduced local sum: the psum/B runs in ``with_stats`` outside
         # the custom-vjp (see make_fcco_loss_op for why)
-        local = jnp.sum(w1 * stats.g1 + w2 * stats.g2)
-        res = (e1, e2, e1a, e2a, sd, w1, w2, t1, t2, off)
+        local = LS.surrogate_loss(stats, lw1, lw2, 1.0)
+        res = (e1, e2, e1a, e2a, sd, lw1, lw2, t1, t2, off)
         return local, stats, res
 
-    def fwd(e1, e2, w1, w2, t1, t2):
-        local, stats, res = _fwd_compute(e1, e2, w1, w2, t1, t2)
+    def fwd(e1, e2, lw1, lw2, t1, t2):
+        local, stats, res = _fwd_compute(e1, e2, lw1, lw2, t1, t2)
         # gather the scalars for the backward (the O(K|B|) communication)
-        e1_, e2_, e1a, e2a, sd, w1_, w2_, t1_, t2_, off = res
+        e1_, e2_, e1a, e2a, sd, lw1_, lw2_, t1_, t2_, off = res
+        lwt1 = lw1 - jnp.log(t1)
+        lwt2 = lw2 - jnp.log(t2)
         sda = _gather(sd, axes)
-        w1a = _gather(w1, axes)
-        w2a = _gather(w2, axes)
+        lwt1a = _gather(lwt1, axes)
+        lwt2a = _gather(lwt2, axes)
         t1a = _gather(t1 * jnp.ones_like(sd), axes)
         t2a = _gather(t2 * jnp.ones_like(sd), axes)
         # rank >= 1 residuals only (shard_map partial-eval requirement)
         off1 = jnp.reshape(jnp.asarray(off, jnp.int32), (1,))
         return (local, tuple(stats)), \
-            (e1_, e2_, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off1)
+            (e1_, e2_, e1a, e2a, sd, sda, lwt1a, lwt2a, t1a, t2a, off1)
 
     def bwd(res, cts):
         ct, _ = cts   # stats are stop-grad outputs; ignore their cotangents
-        e1, e2, e1a, e2a, sd, sda, w1a, w2a, t1a, t2a, off1 = res
+        e1, e2, e1a, e2a, sd, sda, lwt1a, lwt2a, t1a, t2a, off1 = res
         off = off1[0]
         b = e1.shape[0]
-        w1 = jax.lax.dynamic_slice_in_dim(w1a, off, b)
-        w2 = jax.lax.dynamic_slice_in_dim(w2a, off, b)
+        lwt1 = jax.lax.dynamic_slice_in_dim(lwt1a, off, b)
+        lwt2 = jax.lax.dynamic_slice_in_dim(lwt2a, off, b)
         t1 = jax.lax.dynamic_slice_in_dim(t1a, off, b)
         t2 = jax.lax.dynamic_slice_in_dim(t2a, off, b)
-        de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1, w2,
-                                      w1a, w2a, t1, t2, t1a, t2a, off)
+        de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, lwt1,
+                                      lwt2, lwt1a, lwt2a, t1, t2, t1a,
+                                      t2a, off)
         # de* are grads of the global mean loss; pair_loss returns the
         # local sum (the with_stats psum/B puts 1/B on ct)
         B = e1a.shape[0]
@@ -208,11 +231,11 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
 
     pair_loss.defvjp(fwd, bwd)
 
-    def with_stats(e1, e2, w1, w2, t1, t2):
-        # make every arg axis-varying (w derives from the sharded u state;
+    def with_stats(e1, e2, lw1, lw2, t1, t2):
+        # make every arg axis-varying (lw derives from the sharded u state;
         # broadcast taus against it) so the custom-vjp in/out types match.
-        ones = jnp.ones_like(w1)
-        local, stats = pair_loss(e1, e2, w1, w2, t1 * ones, t2 * ones)
+        ones = jnp.ones_like(lw1)
+        local, stats = pair_loss(e1, e2, lw1, lw2, t1 * ones, t2 * ones)
         B = e1.shape[0] * _axis_prod(axes)
         loss = _psum(local, axes) / B
         return loss, LS.RowStats(*jax.tree.map(sg, stats))
@@ -227,15 +250,22 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
 
 def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
                       interpret=None):
-    """Returns op(e1n, e2n, u1_rows, u2_rows, t1, t2, gamma) ->
-    (loss, (u1_new_rows, u2_new_rows, (g1, g2, dg1, dg2))).
+    """Returns op(e1n, e2n, lu1_rows, lu2_rows, t1, t2, gamma) ->
+    (loss, (lu1_new_rows, lu2_new_rows,
+            (g1, g2, dg1, dg2, m1, m2), sat)).
 
     The whole FCCO step for one batch lives inside the op's forward —
-    row stats (exactly one pass), the u moving-average update, the FCCO
-    weights w = tau/(eps+u) and the surrogate — so nothing is recomputed
-    across the custom-vjp boundary.  The backward emits the local feature
-    grads in closed form (Appendix A): with ``axes`` it communicates only
-    the O(K|B|) scalars gathered in the forward, never feature gradients.
+    row stats (exactly one pass), the log-domain u moving-average update,
+    the log-domain FCCO weights lw = log tau - log(eps+u) and the
+    surrogate — so nothing is recomputed across the custom-vjp boundary.
+    The backward emits the local feature grads in closed form (Appendix
+    A): with ``axes`` it communicates only the O(K|B|) scalars gathered in
+    the forward, never feature gradients.
+
+    Log-domain contract: ``lu*_rows`` are log(u) (init log(0) = -inf); the
+    returned stats are shift-decomposed (true g = exp(m) * g, see
+    losses.RowStats); ``sat`` is the (b,) per-row last-resort-guard
+    indicator (losses.saturation_rate) — ~0 everywhere on a healthy state.
 
     ``loss_impl="dense"`` uses jnp math ((b, B) pair matrices in HBM);
     ``loss_impl="fused"`` streams the pair matrix through VMEM via the
@@ -259,7 +289,7 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
     # rank-0 values), so the custom-vjp core only sees (b,)-vectors and the
     # offset packed as shape (1,); the public wrapper normalizes scalars.
 
-    def _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav):
+    def _fwd_compute(e1, e2, lu1r, lu2r, t1v, t2v, gammav):
         b = e1.shape[0]
         if axes:
             off = _global_index(axes) * b
@@ -276,71 +306,76 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
         else:
             stats = LS.row_stats(e1, e2, e1a, e2a, t1v, t2v,
                                  row_offset=off)
-        u1n = LS.update_u(u1r, stats.g1, gammav[0])
-        u2n = LS.update_u(u2r, stats.g2, gammav[0])
-        w1, w2 = LS.fcco_weights(u1n, u2n, t1v, t2v, eps,
-                                 scale_by_tau=scale_by_tau)
+        lg1, lg2 = LS.log_g(stats)
+        lu1n = LS.update_log_u(lu1r, lg1, gammav[0])
+        lu2n = LS.update_log_u(lu2r, lg2, gammav[0])
+        lw1, lw2 = LS.fcco_log_weights(lu1n, lu2n, t1v, t2v, eps,
+                                       scale_by_tau=scale_by_tau)
+        sat = LS.saturation_rate(stats, lw1, lw2, t1v, t2v)
         # the *unreduced* local contribution: the final psum/B runs outside
         # the custom-vjp so jax's own psum transpose pairs with its own
         # replicated-cotangent convention (version-dependent); the bwd
         # compensates with the B factor.
-        local = jnp.sum(w1 * stats.g1 + w2 * stats.g2)
+        local = LS.surrogate_loss(stats, lw1, lw2, 1.0)
         sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32),
                      axis=-1)
-        return local, (u1n, u2n, tuple(stats)), \
-            (e1, e2, e1a, e2a, sd, w1, w2, off)
+        lwt1 = lw1 - jnp.log(t1v)
+        lwt2 = lw2 - jnp.log(t2v)
+        return local, (lu1n, lu2n, tuple(stats), sat), \
+            (e1, e2, e1a, e2a, sd, lwt1, lwt2, off)
 
     @jax.custom_vjp
-    def core(e1, e2, u1r, u2r, t1v, t2v, gammav):
-        local, aux, _ = _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav)
+    def core(e1, e2, lu1r, lu2r, t1v, t2v, gammav):
+        local, aux, _ = _fwd_compute(e1, e2, lu1r, lu2r, t1v, t2v, gammav)
         return local, aux
 
-    def fwd(e1, e2, u1r, u2r, t1v, t2v, gammav):
-        local, aux, res = _fwd_compute(e1, e2, u1r, u2r, t1v, t2v, gammav)
-        e1_, e2_, e1a, e2a, sd, w1, w2, off = res
+    def fwd(e1, e2, lu1r, lu2r, t1v, t2v, gammav):
+        local, aux, res = _fwd_compute(e1, e2, lu1r, lu2r, t1v, t2v,
+                                       gammav)
+        e1_, e2_, e1a, e2a, sd, lwt1, lwt2, off = res
         if axes:
             # the O(K|B|) scalar gather for the backward (paper §4)
             sda = _gather(sd, axes)
-            w1a, w2a = _gather(w1, axes), _gather(w2, axes)
+            lwt1a, lwt2a = _gather(lwt1, axes), _gather(lwt2, axes)
             t1a, t2a = _gather(t1v, axes), _gather(t2v, axes)
         else:
-            sda, w1a, w2a, t1a, t2a = sd, w1, w2, t1v, t2v
+            sda, lwt1a, lwt2a, t1a, t2a = sd, lwt1, lwt2, t1v, t2v
         off1 = jnp.reshape(jnp.asarray(off, jnp.int32), (1,))
-        return (local, aux), (e1_, e2_, e1a, e2a, sd, sda, w1, w2, w1a,
-                              w2a, t1v, t2v, t1a, t2a, off1)
+        return (local, aux), (e1_, e2_, e1a, e2a, sd, sda, lwt1, lwt2,
+                              lwt1a, lwt2a, t1v, t2v, t1a, t2a, off1)
 
     def bwd(res, cts):
         ct, _ = cts   # aux outputs are stop-grad at every call site
-        (e1, e2, e1a, e2a, sd, sda, w1, w2, w1a, w2a, t1v, t2v, t1a, t2a,
-         off1) = res
+        (e1, e2, e1a, e2a, sd, sda, lwt1, lwt2, lwt1a, lwt2a, t1v, t2v,
+         t1a, t2a, off1) = res
         off = off1[0]
         B = e1a.shape[0]
         if loss_impl == "fused":
             de1, de2 = gcl_pair_grads(
-                e1, e2, w1, w2, t1v, t2v, e1_all=e1a, e2_all=e2a,
-                sd_all=sda, w1_all=w1a, w2_all=w2a, tau1_all=t1a,
+                e1, e2, lwt1, lwt2, t1v, t2v, e1_all=e1a, e2_all=e2a,
+                sd_all=sda, lwt1_all=lwt1a, lwt2_all=lwt2a, tau1_all=t1a,
                 tau2_all=t2a, row_offset=off, interpret=_interp())
         else:
-            de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, w1,
-                                          w2, w1a, w2a, t1v, t2v, t1a,
-                                          t2a, off)
+            de1, de2 = _dense_local_grads(e1, e2, e1a, e2a, sd, sda, lwt1,
+                                          lwt2, lwt1a, lwt2a, t1v, t2v,
+                                          t1a, t2a, off)
         # de* are grads of the *global mean* loss; ``core`` returns the
         # local sum, whose outside psum/B contributes the 1/B on ct.
         scale = ct * B
         return ((scale * de1).astype(e1.dtype),
                 (scale * de2).astype(e2.dtype),
-                jnp.zeros_like(w1), jnp.zeros_like(w2),
+                jnp.zeros_like(lwt1), jnp.zeros_like(lwt2),
                 jnp.zeros_like(t1v), jnp.zeros_like(t2v),
                 jnp.zeros_like(t1v[:1]))
 
     core.defvjp(fwd, bwd)
 
-    def op(e1, e2, u1r, u2r, t1, t2, gamma):
+    def op(e1, e2, lu1r, lu2r, t1, t2, gamma):
         b = e1.shape[0]
         t1v = jnp.broadcast_to(t1, (b,)).astype(jnp.float32)
         t2v = jnp.broadcast_to(t2, (b,)).astype(jnp.float32)
         gammav = jnp.reshape(jnp.asarray(gamma, jnp.float32), (1,))
-        local, aux = core(e1, e2, u1r, u2r, sg(t1v), sg(t2v), sg(gammav))
+        local, aux = core(e1, e2, lu1r, lu2r, sg(t1v), sg(t2v), sg(gammav))
         B = e1.shape[0] * (_axis_prod(axes) if axes else 1)
         loss = (_psum(local, axes) if axes else local) / B
         return loss, aux
@@ -355,14 +390,14 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
 def make_allgather_ad_pair_loss(axes: Sequence[str]):
     axes = tuple(axes)
 
-    def with_stats(e1, e2, w1, w2, t1, t2):
+    def with_stats(e1, e2, lw1, lw2, t1, t2):
         b = e1.shape[0]
         B = b * _axis_prod(axes)
         off = _global_index(axes) * b
         e1a = _gather(e1, axes)     # differentiated: bwd = psum-scatter
         e2a = _gather(e2, axes)     # of (B, d) feature grads (DDP-style)
         stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
-        local = jnp.sum(sg(w1) * stats.g1 + sg(w2) * stats.g2)
+        local = LS.surrogate_loss(stats, sg(lw1), sg(lw2), 1.0)
         loss = _psum(local, axes) / B
         return loss, jax.tree.map(sg, stats)
 

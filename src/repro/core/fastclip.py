@@ -86,12 +86,18 @@ class FastCLIPConfig:
 
 def init_state(fc: FastCLIPConfig):
     """FCCO + temperature state.  u sharded by sample in the distributed
-    setting (see repro.core.distributed)."""
+    setting (see repro.core.distributed).
+
+    Log-domain contract: the ``u1``/``u2`` buffers store **log(u)** (the
+    exact log-sum-exp-shifted engine never materializes linear u, which
+    overflows f32 as tau -> tau_min; see repro.core.losses).  The paper's
+    u = 0 init is log(0) = -inf, which ``losses.update_log_u`` handles
+    exactly."""
     n = max(fc.n_samples, 1)
     st = {"step": jnp.zeros((), jnp.int32)}
     if fc.uses_fcco:
-        st["u1"] = jnp.zeros((n,), jnp.float32)
-        st["u2"] = jnp.zeros((n,), jnp.float32)
+        st["u1"] = jnp.full((n,), -jnp.inf, jnp.float32)
+        st["u2"] = jnp.full((n,), -jnp.inf, jnp.float32)
     if fc.individual_tau:
         st["tau1"] = jnp.full((n,), fc.tau_init, jnp.float32)
         st["tau2"] = jnp.full((n,), fc.tau_init, jnp.float32)
@@ -117,31 +123,34 @@ def batch_taus(fc: FastCLIPConfig, state, idx):
 # Objective (differentiable wrt embeddings; openclip also wrt tau)
 # ---------------------------------------------------------------------------
 
-def objective(fc: FastCLIPConfig, e1, e2, u1_rows, u2_rows, tau1, tau2,
+def objective(fc: FastCLIPConfig, e1, e2, lu1_rows, lu2_rows, tau1, tau2,
               gamma):
     """Single-device (global-batch view).  Returns (loss_surrogate, aux).
-    aux carries u updates and the stop-grad stats for the tau update."""
+    aux carries the log-domain u updates and the stop-grad shifted stats
+    for the tau update."""
     if fc.version == "openclip":
         e1n, e2n = LS.l2_normalize(e1), LS.l2_normalize(e2)
         loss = LS.mbcl_loss(e1n, e2n, tau1)
         return loss, {"g1": None}
     loss, aux = LS.fcco_reference_step(
-        e1, e2, u1_rows, u2_rows, tau1, tau2, gamma, fc.eps,
+        e1, e2, lu1_rows, lu2_rows, tau1, tau2, gamma, fc.eps,
         scale_by_tau=fc.scale_by_tau)
     return loss, aux
 
 
 def loss_value(fc: FastCLIPConfig, aux, tau1, tau2, mbcl=None):
-    """The reported (batch-estimated) loss value for logging."""
+    """The reported (batch-estimated) loss value for logging, from the
+    log-domain u in ``aux``."""
     v = fc.version
     if v == "openclip":
         return mbcl
-    u1, u2 = aux["u1_new"], aux["u2_new"]
+    lu1, lu2 = aux["lu1_new"], aux["lu2_new"]
     if v in ("sogclr", "v0", "v1"):
-        return LS.gcl_value(u1, u2, jnp.mean(tau1 * jnp.ones_like(u1)), fc.eps)
+        return LS.gcl_value(lu1, lu2, jnp.mean(tau1 * jnp.ones_like(lu1)),
+                            fc.eps)
     if v in ("isogclr", "v2"):
-        return LS.rgcl_value(u1, u2, tau1, tau2, fc.eps, fc.rho)
-    return LS.rgcl_g_value(u1, u2, tau1, fc.eps, fc.rho)
+        return LS.rgcl_value(lu1, lu2, tau1, tau2, fc.eps, fc.rho)
+    return LS.rgcl_g_value(lu1, lu2, tau1, fc.eps, fc.rho)
 
 
 # ---------------------------------------------------------------------------
@@ -149,21 +158,28 @@ def loss_value(fc: FastCLIPConfig, aux, tau1, tau2, mbcl=None):
 # ---------------------------------------------------------------------------
 
 def tau_gradient(fc: FastCLIPConfig, aux, tau1, tau2):
-    """Closed-form tau gradients from the row stats in ``aux`` (all
-    stop-grad).  Returns scalar for global tau, per-row pair for v2."""
+    """Closed-form tau gradients from the shifted row stats in ``aux``
+    (all stop-grad; log-domain u ``lu*_new``, row shifts ``m*`` and
+    *shifted* ``dg*_dtau`` — the true quantity dg/(eps+u) is evaluated as
+    ``exp(m - log(eps+u)) * dg_shifted``, which is bounded like the
+    backward exponents, so nothing overflows at tau -> tau_min).
+    Returns scalar for global tau, per-row pair for v2."""
     eps = fc.eps
-    u1, u2 = aux["u1_new"], aux["u2_new"]
-    dg1, dg2 = aux["dg1_dtau"], aux["dg2_dtau"]
+    L1 = LS.log_eps_u(aux["lu1_new"], eps)           # log(eps + u)
+    L2 = LS.log_eps_u(aux["lu2_new"], eps)
+    # true dg/(eps+u), shift-composed
+    q1 = LS.guarded_exp(aux["m1"] - L1) * aux["dg1_dtau"]
+    q2 = LS.guarded_exp(aux["m2"] - L2) * aux["dg2_dtau"]
     v = fc.version
     if v == "v0":                                    # eq. (8)
-        return jnp.mean(dg1 / (eps + u1) + dg2 / (eps + u2))
+        return jnp.mean(q1 + q2)
     if v in ("isogclr", "v2"):                       # eq. (9), per-row
-        g_t1 = jnp.log(eps + u1) + fc.rho + tau1 * dg1 / (eps + u1)
-        g_t2 = jnp.log(eps + u2) + fc.rho + tau2 * dg2 / (eps + u2)
+        g_t1 = L1 + fc.rho + tau1 * q1
+        g_t2 = L2 + fc.rho + tau2 * q2
         return g_t1, g_t2
     if v == "v3":                                    # eq. (10)
-        return (jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2)) + 2 * fc.rho
-                + tau1 * jnp.mean(dg1 / (eps + u1) + dg2 / (eps + u2)))
+        return (jnp.mean(L1 + L2) + 2 * fc.rho
+                + tau1 * jnp.mean(q1 + q2))
     return None                                      # constant tau
 
 

@@ -15,8 +15,29 @@ gradient estimator is the gradient of the *surrogate*
     w_i = tau_i / (eps + u_i^{t+1})          (v1/v2/v3/sogclr/isogclr)
     w_i = 1 / (eps + u_i^{t+1})              (v0: unscaled GCL)
 
-which reproduces eqs. (2)-(7) of the paper under autodiff.  All statistics
-run in f32.
+Numerics contract (the log-sum-exp shift).  As tau is learned down to
+tau_min = 0.01 the pair exponent reaches ~2/tau_min = 200, far past f32
+``exp`` overflow (~88.7) — and g itself (~e^200) is unrepresentable in
+f32.  Every quantity therefore lives in a *shifted* or *log* domain:
+
+  * ``row_stats`` returns the per-row shift ``m_i = max_{j!=i} z_ij``
+    (stop-grad) together with shift-invariant sums
+    ``g_i = sum_{j!=i} exp(z_ij - m_i) / denom`` — the true estimator is
+    ``exp(m_i) * g_i`` and its log is ``m_i + log(g_i)``;
+  * the FCCO state u is stored as ``log(u)`` (``update_log_u`` is the
+    exact log-domain EMA), so it never overflows;
+  * the weights are log-domain, ``lw_i = log(tau_i) - log(eps + u_i)``,
+    and every backward exponent takes the form ``z_ij + lw_i - log(tau_i)
+    = z_ij - log(eps + u_i)``, which is bounded above by
+    ``log(denom / gamma)`` because ``u_new >= gamma * g >= gamma *
+    exp(m) / denom`` — the gradients of the *unclamped* objective are
+    exact in f32, including for the hardest negatives.
+
+``EXP_CLAMP`` survives only as a last-resort guard inside ``guarded_exp``
+(it cannot fire on any of the shifted paths above unless the u state is
+degenerate, e.g. gamma == 0 with an untouched u row); ``saturation_rate``
+reports how often it would have.  All statistics run in f32 (bf16 inputs
+are accumulated in f32).
 """
 from __future__ import annotations
 
@@ -27,24 +48,20 @@ import jax.numpy as jnp
 
 sg = jax.lax.stop_gradient
 
-# The pair exponent (s_ij - s_ii)/tau reaches ~2/tau_min = 200 as tau is
-# learned down to tau_min = 0.01, overflowing f32 (exp caps at ~88.7).
-# Every path (dense jnp, Pallas kernels, distributed backward) clamps the
-# exponent at this value so the implementations stay bit-comparable.
+# Last-resort exponent guard.  The log-sum-exp shift keeps every exponent
+# bounded (forward: z - m <= 0; backward: z - log(eps+u) <= log(B/gamma)),
+# so this never fires on a healthy state — ``saturation_rate`` counts how
+# often it would have.
 EXP_CLAMP = 60.0
 
+# Mask fill for row maxes (finite so that NEG - NEG == 0, not nan).
+MASK_NEG = -1e30
 
-def clamped_exp(z):
-    """exp with the exponent clamped at EXP_CLAMP (identically everywhere)."""
+
+def guarded_exp(z):
+    """exp with the exponent clamped at EXP_CLAMP (the last-resort guard;
+    identical in every implementation so the paths stay bit-comparable)."""
     return jnp.exp(jnp.minimum(z, EXP_CLAMP))
-
-
-def clamped_exp_bwd(z):
-    """The true d/ds factor of ``clamped_exp``: exp(z) below the clamp,
-    0 where it saturates (so the closed-form backwards stay the exact
-    gradient of the clamped forward, matching autodiff of jnp.minimum)."""
-    return jnp.where(z <= EXP_CLAMP, jnp.exp(jnp.minimum(z, EXP_CLAMP)),
-                     0.0)
 
 
 def l2_normalize(x, axis=-1, eps=1e-8):
@@ -53,89 +70,171 @@ def l2_normalize(x, axis=-1, eps=1e-8):
     return x / jnp.maximum(n, eps)
 
 
+def masked_shift(z, mask):
+    """The one shift primitive: (m, h) with ``m = max_j z[mask]``
+    (stop-grad) and shifted weights ``h = exp(z - m) * mask`` (<= 1
+    entrywise, differentiable through the unmasked entries).  Fully-masked
+    rows return (MASK_NEG, 0); MASK_NEG is finite so MASK_NEG - MASK_NEG
+    stays 0, not nan."""
+    zm = jnp.where(mask, z, MASK_NEG)
+    m = sg(jnp.max(zm, axis=-1))
+    h = jnp.where(mask, jnp.exp(zm - m[..., None]), 0.0)
+    return m, h
+
+
+def lse_shift(z, mask):
+    """Masked row-max shift: (m, G) with ``G = sum_j exp(z - m)[mask]``.
+    The pair represents ``logsumexp = m + log(G)``; adding a constant to
+    ``z`` moves ``m`` and leaves ``G`` unchanged (shift invariance)."""
+    m, h = masked_shift(z, mask)
+    return m, jnp.sum(h, axis=-1)
+
+
 class RowStats(NamedTuple):
-    g1: jnp.ndarray          # (b,)  differentiable batch estimator, image
-    g2: jnp.ndarray          # (b,)  ... text
-    dg1_dtau: jnp.ndarray    # (b,)  d g1 / d tau1  (stop-grad, for eq. 8/10)
+    """Shift-decomposed row statistics.  True estimators:
+        g_i^true   = exp(m_i) * g_i
+        dg_i^true  = exp(m_i) * dg_i_dtau
+    g1/g2 are differentiable w.r.t. the embeddings (m is stop-grad, so
+    autodiff of ``exp(sg(m)) * g`` is the exact unclamped gradient);
+    dg*/m* are stop-grad."""
+    g1: jnp.ndarray          # (b,)  shifted batch estimator, image side
+    g2: jnp.ndarray          # (b,)  ... text side
+    dg1_dtau: jnp.ndarray    # (b,)  shifted d g / d tau (stop-grad)
     dg2_dtau: jnp.ndarray    # (b,)
+    m1: jnp.ndarray          # (b,)  row-max shift, image side (stop-grad)
+    m2: jnp.ndarray          # (b,)
+
+
+def log_g(stats: RowStats):
+    """log of the true estimators: (log g1^true, log g2^true)."""
+    return (stats.m1 + jnp.log(stats.g1), stats.m2 + jnp.log(stats.g2))
 
 
 def row_stats(e1_rows, e2_rows, e1_all, e2_all, tau1_rows, tau2_rows,
               row_offset=0, denom=None) -> RowStats:
-    """Differentiable batch estimators g1/g2 for a block of anchor rows.
+    """Shift-decomposed batch estimators for a block of anchor rows.
 
     e1_rows/e2_rows: (b, d) embeddings of the local pairs; e1_all/e2_all:
     (B, d) the full (gathered) batch; tau*_rows: (b,) or scalar.
     ``row_offset``: global index of local row 0 (diagonal masking).
-    """
+    bf16 inputs are accumulated in f32."""
     b, B = e1_rows.shape[0], e2_all.shape[0]
     denom = float(denom if denom is not None else max(B - 1, 1))
     cols = jnp.arange(B)
     rows = row_offset + jnp.arange(b)
-    offdiag = (cols[None, :] != rows[:, None]).astype(jnp.float32)
+    offdiag = cols[None, :] != rows[:, None]
     t1 = jnp.broadcast_to(jnp.asarray(tau1_rows, jnp.float32), (b,))
     t2 = jnp.broadcast_to(jnp.asarray(tau2_rows, jnp.float32), (b,))
 
-    sd = jnp.sum(e1_rows * e2_rows, axis=-1).astype(jnp.float32)   # s_ii
+    sd = jnp.sum(e1_rows.astype(jnp.float32) * e2_rows.astype(jnp.float32),
+                 axis=-1)                                          # s_ii
     s1 = jnp.einsum("bd,Bd->bB", e1_rows, e2_all,
                     preferred_element_type=jnp.float32)
     s2 = jnp.einsum("bd,Bd->bB", e2_rows, e1_all,
                     preferred_element_type=jnp.float32)
-    z1 = (s1 - sd[:, None]) / t1[:, None]
-    z2 = (s2 - sd[:, None]) / t2[:, None]
-    h1 = clamped_exp(z1) * offdiag
-    h2 = clamped_exp(z2) * offdiag
+    # shifted pair weights exp(z - m) <= 1 never overflow, and every entry
+    # keeps its exact gradient (no saturation dead zone)
+    m1, h1 = masked_shift((s1 - sd[:, None]) / t1[:, None], offdiag)
+    m2, h2 = masked_shift((s2 - sd[:, None]) / t2[:, None], offdiag)
     g1 = jnp.sum(h1, axis=-1) / denom
     g2 = jnp.sum(h2, axis=-1) / denom
-    # d g/d tau of the *clamped* estimator: saturated entries are constant
-    # in tau, so they contribute 0 (clamped_exp_bwd), not exp(EXP_CLAMP)
-    hb1 = clamped_exp_bwd(z1) * offdiag
-    hb2 = clamped_exp_bwd(z2) * offdiag
-    dg1 = jnp.sum(sg(hb1) * sg(-(s1 - sd[:, None])), axis=-1) / (
+    # shifted dg/dtau: true dg = exp(m) * dg
+    dg1 = jnp.sum(sg(h1) * sg(-(s1 - sd[:, None])), axis=-1) / (
         denom * t1 ** 2)
-    dg2 = jnp.sum(sg(hb2) * sg(-(s2 - sd[:, None])), axis=-1) / (
+    dg2 = jnp.sum(sg(h2) * sg(-(s2 - sd[:, None])), axis=-1) / (
         denom * t2 ** 2)
-    return RowStats(g1, g2, dg1, dg2)
+    return RowStats(g1, g2, dg1, dg2, m1, m2)
 
 
 def update_u(u_old, g_batch, gamma):
-    """FCCO moving-average inner estimator (eq. 1).  Not differentiated."""
+    """Linear-domain FCCO moving-average (eq. 1) — reference semantics;
+    overflows f32 once g does.  The engine uses ``update_log_u``."""
     return (1.0 - gamma) * u_old + gamma * sg(g_batch)
 
 
+def update_log_u(lu_old, log_g_batch, gamma):
+    """Exact log-domain FCCO EMA (eq. 1):
+        log u_new = logaddexp(log(1-gamma) + log u_old,
+                              log(gamma) + log g).
+    Handles gamma == 0 / 1 and lu_old == -inf (u == 0 init) exactly.
+    Not differentiated."""
+    gamma = jnp.asarray(gamma, jnp.float32)
+    return jnp.logaddexp(jnp.log1p(-jnp.minimum(gamma, 1.0)) + lu_old,
+                         jnp.log(gamma) + sg(log_g_batch))
+
+
+def log_eps_u(lu, eps):
+    """L = log(eps + u) from log-domain u."""
+    return jnp.logaddexp(jnp.log(eps), lu)
+
+
 def fcco_weights(u1_new, u2_new, tau1, tau2, eps, *, scale_by_tau=True):
-    """w_i = tau_i/(eps+u_i) (or 1/(eps+u_i) for v0)."""
+    """Linear-domain w_i = tau_i/(eps+u_i) (1/(eps+u_i) for v0) —
+    reference semantics; the engine uses ``fcco_log_weights``."""
     t1 = tau1 if scale_by_tau else 1.0
     t2 = tau2 if scale_by_tau else 1.0
     return t1 / (eps + u1_new), t2 / (eps + u2_new)
 
 
-def surrogate_loss(stats: RowStats, w1, w2, batch_denom):
-    """Gradient-matched surrogate: (1/B) sum_i sg(w1_i) g1_i + sg(w2_i) g2_i.
+def fcco_log_weights(lu1_new, lu2_new, tau1, tau2, eps, *,
+                     scale_by_tau=True):
+    """Log-domain FCCO weights: lw_i = log tau_i - log(eps + u_i)
+    (``- log(eps+u_i)`` for v0)."""
+    L1 = log_eps_u(lu1_new, eps)
+    L2 = log_eps_u(lu2_new, eps)
+    if scale_by_tau:
+        return jnp.log(tau1) - L1, jnp.log(tau2) - L2
+    z = jnp.zeros_like(L1)
+    return z - L1, z - L2
+
+
+def surrogate_loss(stats: RowStats, lw1, lw2, batch_denom):
+    """Gradient-matched surrogate with log-domain weights:
+        (1/B) sum_i exp(sg(lw1_i + m1_i)) g1_i + exp(sg(lw2_i + m2_i)) g2_i
+    == (1/B) sum_i sg(w1_i) g1_i^true + sg(w2_i) g2_i^true, evaluated
+    without ever forming the (overflowing) linear-domain factors: when u
+    tracks g the combined exponent lw + m ~ log(tau * denom / gamma).
     ``batch_denom``: global batch size B (the local sum is psum-ed by the
     caller in the distributed setting)."""
-    return jnp.sum(sg(w1) * stats.g1 + sg(w2) * stats.g2) / batch_denom
+    c1 = guarded_exp(sg(lw1 + stats.m1))
+    c2 = guarded_exp(sg(lw2 + stats.m2))
+    return jnp.sum(c1 * stats.g1 + c2 * stats.g2) / batch_denom
+
+
+def saturation_rate(stats: RowStats, lw1, lw2, tau1, tau2):
+    """Per-row indicator (b,) of the last-resort guard firing anywhere in
+    the backward: the largest backward exponent of row i is
+    ``m_i + lw_i - log(tau_i)``, so the indicator is exact at 0 — if the
+    row's worst pair does not saturate, no pair does.  The forward is
+    shift-invariant and never saturates.  Mean it for the ``sat_rate``
+    metric; ~0 everywhere on a healthy (LSE) state."""
+    t1 = jnp.log(jnp.broadcast_to(jnp.asarray(tau1, jnp.float32),
+                                  stats.m1.shape))
+    t2 = jnp.log(jnp.broadcast_to(jnp.asarray(tau2, jnp.float32),
+                                  stats.m2.shape))
+    s1 = (stats.m1 + lw1 - t1 > EXP_CLAMP).astype(jnp.float32)
+    s2 = (stats.m2 + lw2 - t2 > EXP_CLAMP).astype(jnp.float32)
+    return 0.5 * (s1 + s2)
 
 
 # ---------------------------------------------------------------------------
 # Reported loss values (not used for gradients in the FCCO path)
 # ---------------------------------------------------------------------------
 
-def gcl_value(u1, u2, tau, eps):
-    """(GCL) value with u as the inner-function estimate (mean over rows)."""
-    return tau * jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2))
+def gcl_value(lu1, lu2, tau, eps):
+    """(GCL) value from log-domain u (mean over rows)."""
+    return tau * jnp.mean(log_eps_u(lu1, eps) + log_eps_u(lu2, eps))
 
 
-def rgcl_g_value(u1, u2, tau, eps, rho):
+def rgcl_g_value(lu1, lu2, tau, eps, rho):
     """(RGCL-g) value."""
-    return (tau * jnp.mean(jnp.log(eps + u1) + jnp.log(eps + u2))
-            + 2.0 * rho * tau)
+    return gcl_value(lu1, lu2, tau, eps) + 2.0 * rho * tau
 
 
-def rgcl_value(u1, u2, tau1, tau2, eps, rho):
+def rgcl_value(lu1, lu2, tau1, tau2, eps, rho):
     """(RGCL) value (individualized temperatures)."""
-    return jnp.mean(tau1 * (jnp.log(eps + u1) + rho)
-                    + tau2 * (jnp.log(eps + u2) + rho))
+    return jnp.mean(tau1 * (log_eps_u(lu1, eps) + rho)
+                    + tau2 * (log_eps_u(lu2, eps) + rho))
 
 
 # ---------------------------------------------------------------------------
@@ -160,24 +259,26 @@ def mbcl_loss(e1, e2, tau):
 # Single-device (global view) reference of one full FCCO loss step
 # ---------------------------------------------------------------------------
 
-def fcco_reference_step(e1, e2, u1, u2, tau1, tau2, gamma, eps, *,
+def fcco_reference_step(e1, e2, lu1, lu2, tau1, tau2, gamma, eps, *,
                         scale_by_tau=True):
     """Oracle used by tests / the Pallas kernel / the distributed path.
 
-    e1/e2: (B, d) *unnormalized*; u1/u2: (B,) current estimators for these
-    rows; tau1/tau2 scalar or (B,).  Returns (surrogate, aux) where
-    aux = dict(u1_new, u2_new, g1, g2, dg1_dtau, dg2_dtau).
+    e1/e2: (B, d) *unnormalized*; lu1/lu2: (B,) current *log-domain*
+    estimators for these rows; tau1/tau2 scalar or (B,).  Returns
+    (surrogate, aux) where aux = dict(lu1_new, lu2_new, stats fields).
     Differentiate ``surrogate`` wrt e1/e2 to get the FastCLIP estimator.
     """
     e1n = l2_normalize(e1)
     e2n = l2_normalize(e2)
     stats = row_stats(e1n, e2n, e1n, e2n, tau1, tau2)
-    u1n = update_u(u1, stats.g1, gamma)
-    u2n = update_u(u2, stats.g2, gamma)
-    w1, w2 = fcco_weights(u1n, u2n, tau1, tau2, eps,
-                          scale_by_tau=scale_by_tau)
-    loss = surrogate_loss(stats, w1, w2, e1.shape[0])
-    aux = {"u1_new": u1n, "u2_new": u2n, "g1": sg(stats.g1),
+    lg1, lg2 = log_g(stats)
+    lu1n = update_log_u(lu1, lg1, gamma)
+    lu2n = update_log_u(lu2, lg2, gamma)
+    lw1, lw2 = fcco_log_weights(lu1n, lu2n, tau1, tau2, eps,
+                                scale_by_tau=scale_by_tau)
+    loss = surrogate_loss(stats, lw1, lw2, e1.shape[0])
+    aux = {"lu1_new": lu1n, "lu2_new": lu2n, "g1": sg(stats.g1),
            "g2": sg(stats.g2), "dg1_dtau": stats.dg1_dtau,
-           "dg2_dtau": stats.dg2_dtau}
+           "dg2_dtau": stats.dg2_dtau, "m1": stats.m1, "m2": stats.m2,
+           "sat": saturation_rate(stats, lw1, lw2, tau1, tau2)}
     return loss, aux

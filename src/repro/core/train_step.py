@@ -37,12 +37,13 @@ sg = jax.lax.stop_gradient
 
 def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
                    reduction: str = "fastclip", loss_impl: str = "dense"):
-    """Returns loss_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma)
-    -> (loss, aux) with aux = {u1_new, u2_new (full arrays), tau stats}.
-    Inputs e1n/e2n are the *normalized* global-batch embeddings (sharded
-    over mesh_axes in the distributed case); u1/u2 the full (n,) state;
-    tau1/tau2 scalars or full (n,) arrays (v2); idx the (B,) global sample
-    indices.
+    """Returns loss_core(e1n, e2n, lu1, lu2, tau1, tau2, idx, gamma)
+    -> (loss, aux) with aux = {u1_new, u2_new (full log-domain arrays),
+    u1_rows/u2_rows (log-domain batch rows), stats (shifted RowStats),
+    sat (per-row guard indicators)}.  Inputs e1n/e2n are the *normalized*
+    global-batch embeddings (sharded over mesh_axes in the distributed
+    case); lu1/lu2 the full (n,) log-domain state; tau1/tau2 scalars or
+    full (n,) arrays (v2); idx the (B,) global sample indices.
 
     Both mesh settings of the ``fastclip`` reduction run through one
     custom-vjp op (repro.core.distributed.make_fcco_loss_op): the row
@@ -55,15 +56,16 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
         op = D.make_fcco_loss_op(None, fc.eps, fc.scale_by_tau,
                                  loss_impl=loss_impl)
 
-        def local_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
+        def local_core(e1n, e2n, lu1, lu2, tau1, tau2, idx, gamma):
             t1 = tau1[idx] if jnp.ndim(tau1) else tau1
             t2 = tau2[idx] if jnp.ndim(tau2) else tau2
-            loss, (u1_rows, u2_rows, stats) = op(
-                e1n, e2n, u1[idx], u2[idx], t1, t2, gamma)
-            aux = {"u1_new": u1.at[idx].set(sg(u1_rows)),
-                   "u2_new": u2.at[idx].set(sg(u2_rows)),
-                   "u1_rows": sg(u1_rows), "u2_rows": sg(u2_rows),
-                   "stats": LS.RowStats(*jax.tree.map(sg, stats))}
+            loss, (lu1_rows, lu2_rows, stats, sat) = op(
+                e1n, e2n, lu1[idx], lu2[idx], t1, t2, gamma)
+            aux = {"u1_new": lu1.at[idx].set(sg(lu1_rows)),
+                   "u2_new": lu2.at[idx].set(sg(lu2_rows)),
+                   "u1_rows": sg(lu1_rows), "u2_rows": sg(lu2_rows),
+                   "stats": LS.RowStats(*jax.tree.map(sg, stats)),
+                   "sat": sg(sat)}
             return loss, aux
         return local_core
 
@@ -75,30 +77,32 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
         op = D.make_fcco_loss_op(axes, fc.eps, fc.scale_by_tau,
                                  loss_impl=loss_impl)
 
-        def shard_loss(e1l, e2l, u1rows, u2rows, t1, t2, gamma):
-            loss, (u1r, u2r, stats) = op(e1l, e2l, u1rows, u2rows,
-                                         t1, t2, gamma)
-            return loss, sg(u1r), sg(u2r), tuple(stats)
+        def shard_loss(e1l, e2l, lu1rows, lu2rows, t1, t2, gamma):
+            loss, (lu1r, lu2r, stats, sat) = op(e1l, e2l, lu1rows,
+                                                lu2rows, t1, t2, gamma)
+            return loss, sg(lu1r), sg(lu2r), tuple(stats), sat
     else:
         pair = D.make_allgather_ad_pair_loss(axes)
 
-        def shard_loss(e1l, e2l, u1rows, u2rows, t1, t2, gamma):
+        def shard_loss(e1l, e2l, lu1rows, lu2rows, t1, t2, gamma):
             # stats pre-pass (stop-grad; gathers CSE with the loss pass)
             off = D._global_index(axes) * e1l.shape[0]
             e1a = D._gather(sg(e1l), axes)
             e2a = D._gather(sg(e2l), axes)
             st0 = LS.row_stats(sg(e1l), sg(e2l), e1a, e2a, t1, t2,
                                row_offset=off)
-            u1r = LS.update_u(u1rows, st0.g1, gamma)
-            u2r = LS.update_u(u2rows, st0.g2, gamma)
-            w1, w2 = LS.fcco_weights(u1r, u2r, t1, t2, fc.eps,
-                                     scale_by_tau=fc.scale_by_tau)
-            loss, stats = pair(e1l, e2l, w1, w2,
-                               t1 * jnp.ones_like(w1),
-                               t2 * jnp.ones_like(w2))
-            return loss, u1r, u2r, tuple(stats)
+            lg1, lg2 = LS.log_g(st0)
+            lu1r = LS.update_log_u(lu1rows, lg1, gamma)
+            lu2r = LS.update_log_u(lu2rows, lg2, gamma)
+            lw1, lw2 = LS.fcco_log_weights(lu1r, lu2r, t1, t2, fc.eps,
+                                           scale_by_tau=fc.scale_by_tau)
+            sat = LS.saturation_rate(st0, lw1, lw2, t1, t2)
+            loss, stats = pair(e1l, e2l, lw1, lw2,
+                               t1 * jnp.ones_like(lw1),
+                               t2 * jnp.ones_like(lw2))
+            return loss, lu1r, lu2r, tuple(stats), sat
 
-    def dist_core(e1n, e2n, u1, u2, tau1, tau2, idx, gamma):
+    def dist_core(e1n, e2n, lu1, lu2, tau1, tau2, idx, gamma):
         tau_is_arr = jnp.ndim(tau1) > 0
 
         def inner(e1l, e2l, u1s, u2s, idxs, t1in, t2in):
@@ -106,23 +110,24 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
             rel = idxs - D._global_index(axes) * shard
             t1 = t1in[rel] if tau_is_arr else t1in
             t2 = t2in[rel] if tau_is_arr else t2in
-            loss, u1r, u2r, stats = shard_loss(
+            loss, lu1r, lu2r, stats, sat = shard_loss(
                 e1l, e2l, u1s[rel], u2s[rel], t1, t2, gamma)
-            return (loss, u1s.at[rel].set(u1r), u2s.at[rel].set(u2r),
-                    u1r, u2r, stats)
+            return (loss, u1s.at[rel].set(lu1r), u2s.at[rel].set(lu2r),
+                    lu1r, lu2r, stats, sat)
 
         in_specs = (pspec, pspec, pspec, pspec, pspec,
                     pspec if tau_is_arr else P(),
                     pspec if tau_is_arr else P())
         out_specs = (P(), pspec, pspec, pspec, pspec,
-                     (pspec, pspec, pspec, pspec))
+                     (pspec,) * 6, pspec)
         fn = D.shard_map(inner, mesh=_current_mesh(),
                          in_specs=in_specs, out_specs=out_specs)
-        loss, u1_new, u2_new, u1r, u2r, stats = fn(
-            e1n, e2n, u1, u2, idx, tau1, tau2)
-        aux = {"u1_new": sg(u1_new), "u2_new": sg(u2_new),
-               "u1_rows": sg(u1r), "u2_rows": sg(u2r),
-               "stats": LS.RowStats(*jax.tree.map(sg, stats))}
+        loss, lu1_new, lu2_new, lu1r, lu2r, stats, sat = fn(
+            e1n, e2n, lu1, lu2, idx, tau1, tau2)
+        aux = {"u1_new": sg(lu1_new), "u2_new": sg(lu2_new),
+               "u1_rows": sg(lu1r), "u2_rows": sg(lu2r),
+               "stats": LS.RowStats(*jax.tree.map(sg, stats)),
+               "sat": sg(sat)}
         return loss, aux
 
     return dist_core
@@ -235,7 +240,9 @@ def make_train_step(tc: TrainStepConfig):
         else:
             new_fc["u1"] = aux["u1_new"]
             new_fc["u2"] = aux["u2_new"]
-            stats_aux = {"u1_new": aux["u1_rows"], "u2_new": aux["u2_rows"],
+            stats_aux = {"lu1_new": aux["u1_rows"],
+                         "lu2_new": aux["u2_rows"],
+                         "m1": aux["stats"].m1, "m2": aux["stats"].m2,
                          "dg1_dtau": aux["stats"].dg1_dtau,
                          "dg2_dtau": aux["stats"].dg2_dtau}
             t1r = tau1[idx] if fc.individual_tau else tau1
@@ -249,9 +256,15 @@ def make_train_step(tc: TrainStepConfig):
                 metrics["tau"] = new_fc["tau"]
             else:
                 metrics["tau"] = tau1
-            metrics["u_mean"] = jnp.mean(aux["u1_rows"])
+            # u is log-domain; report a display-clamped linear mean
+            metrics["u_mean"] = jnp.mean(
+                jnp.exp(jnp.minimum(aux["u1_rows"], 80.0)))
+            # fraction of rows on which the last-resort EXP_CLAMP guard
+            # would fire (exact 0 <=> no pair clamps; ~0 under the LSE
+            # path on any healthy state)
+            metrics["sat_rate"] = jnp.mean(aux["sat"])
             metrics["loss_value"] = FC.loss_value(
-                fc, {"u1_new": aux["u1_rows"], "u2_new": aux["u2_rows"]},
+                fc, {"lu1_new": aux["u1_rows"], "lu2_new": aux["u2_rows"]},
                 t1r, t2r)
         new_fc["step"] = fcs["step"] + 1
 

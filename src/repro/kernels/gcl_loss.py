@@ -6,8 +6,19 @@ plus the same matrix re-weighted in the backward.  These kernels stream the
 matrix through VMEM in (BR x BC) tiles (flash-attention style): the b x B
 matrix never touches HBM.
 
-    gcl_pair_stats : forward statistics g1, g2, dg1/dtau, dg2/dtau
-    gcl_pair_grads : closed-form backward (de1, de2) of the FCCO surrogate
+    gcl_pair_stats : forward statistics in shift-decomposed form —
+                     per-row max m and shifted sums g, dg/dtau (true
+                     estimator = exp(m) * sum; see losses.RowStats).
+                     Online-softmax recurrence: the running row max is
+                     carried across BC tiles and the accumulators are
+                     rescaled by exp(m_old - m_new) when it grows, so no
+                     exponent ever exceeds 0 — exact at tau -> tau_min.
+    gcl_pair_grads : closed-form backward (de1, de2) of the FCCO
+                     surrogate with log-domain weights: every pair enters
+                     as exp(z + lwt), lwt = log(w) - log(tau), which is
+                     bounded above by log(B/gamma) — no running max is
+                     needed in the backward, and losses.EXP_CLAMP remains
+                     only as the last-resort guard.
 
 Both kernels come in the *rectangular sharded* form used by the production
 loss engine (repro.core.distributed.make_fcco_loss_op): the anchor rows are
@@ -20,10 +31,15 @@ Row indices are passed in as an int32 vector (padded with -1) rather than
 derived from the grid position because ``row_offset`` is a traced value
 inside shard_map (it comes from ``axis_index``).
 
-Tiles are 128-aligned for the MXU; accumulation in f32; column blocks are
-the innermost grid axis so output rows are revisited sequentially.  The
-exponent is clamped at ``losses.EXP_CLAMP`` exactly as in the dense path so
-the two implementations stay bit-comparable as tau approaches tau_min.
+Tiles are 128-aligned for the MXU; inputs may be bf16 (blocks stay bf16 in
+VMEM — half the feature traffic) with all accumulation in f32
+(``preferred_element_type``).  For wide embeddings the stats kernel blocks
+the feature dimension too: with ``d_block`` set (auto above D_BLOCK_MAX)
+the grid gains an inner d axis, the partial similarity tiles accumulate in
+f32 VMEM scratch, and the online-softmax update runs once per (row, col)
+tile on the completed sums — (BR, d)-sized blocks never have to fit VMEM.
+Column blocks are outside the d axis so output rows are still revisited
+sequentially.
 """
 from __future__ import annotations
 
@@ -32,12 +48,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.losses import clamped_exp as _cexp
-from repro.core.losses import clamped_exp_bwd as _cexp_bwd
+from repro.core.losses import EXP_CLAMP, MASK_NEG
 
-BR = 128   # row tile
-BC = 128   # col tile
+BR = 128          # row tile
+BC = 128          # col tile
+D_BLOCK_MAX = 2048   # above this, the stats kernel blocks the feature dim
 
 
 def _pad_rows(x, m, value=0.0):
@@ -48,106 +65,132 @@ def _pad_rows(x, m, value=0.0):
     return x
 
 
+def _pad_cols(x, m):
+    pad = (-x.shape[1]) % m
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x
+
+
 def _pad_vec(x, n, m, value=0.0):
     """Broadcast ``x`` to (n,), cast f32, pad up to a multiple of m."""
     return _pad_rows(jnp.broadcast_to(x, (n,)).astype(jnp.float32), m, value)
 
 
 # ---------------------------------------------------------------------------
-# Forward stats kernel
+# Forward stats kernel (online softmax over column tiles)
 # ---------------------------------------------------------------------------
 
 def _stats_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
                   t1_ref, t2_ref, g1_ref, g2_ref, dg1_ref, dg2_ref,
-                  *, n_cols):
+                  m1_ref, m2_ref, s1_acc, s2_acc, *, n_cols, n_d_blocks):
     c = pl.program_id(1)
+    k = pl.program_id(2)
 
-    @pl.when(c == 0)
+    @pl.when((c == 0) & (k == 0))
     def _init():
         g1_ref[...] = jnp.zeros_like(g1_ref)
         g2_ref[...] = jnp.zeros_like(g2_ref)
         dg1_ref[...] = jnp.zeros_like(dg1_ref)
         dg2_ref[...] = jnp.zeros_like(dg2_ref)
+        m1_ref[...] = jnp.full_like(m1_ref, MASK_NEG)
+        m2_ref[...] = jnp.full_like(m2_ref, MASK_NEG)
 
-    e1r = e1r_ref[...]
-    e2r = e2r_ref[...]
-    e1c = e1c_ref[...]
-    e2c = e2c_ref[...]
-    sd = sdr_ref[...].astype(jnp.float32)            # (BR,)
-    t1 = t1_ref[...].astype(jnp.float32)
-    t2 = t2_ref[...].astype(jnp.float32)
+    @pl.when(k == 0)
+    def _zero_acc():
+        s1_acc[...] = jnp.zeros_like(s1_acc)
+        s2_acc[...] = jnp.zeros_like(s2_acc)
 
-    rows = rid_ref[...][:, None]                     # (BR, 1) global ids
-    cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
-    mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
+    # partial similarity over this d chunk; f32 accumulation in scratch
+    s1_acc[...] += jax.lax.dot_general(
+        e1r_ref[...], e2c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s2_acc[...] += jax.lax.dot_general(
+        e2r_ref[...], e1c_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
 
-    s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    s2 = jax.lax.dot_general(e2r, e1c, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
-    z1 = (s1 - sd[:, None]) / t1[:, None]
-    z2 = (s2 - sd[:, None]) / t2[:, None]
-    h1 = jnp.where(mask, _cexp(z1), 0.0)
-    h2 = jnp.where(mask, _cexp(z2), 0.0)
-    g1_ref[...] += jnp.sum(h1, axis=1)
-    g2_ref[...] += jnp.sum(h2, axis=1)
-    # dg/dtau of the clamped estimator: saturated entries contribute 0
-    hb1 = jnp.where(mask, _cexp_bwd(z1), 0.0)
-    hb2 = jnp.where(mask, _cexp_bwd(z2), 0.0)
-    dg1_ref[...] += jnp.sum(hb1 * -(s1 - sd[:, None]), axis=1) / (t1 ** 2)
-    dg2_ref[...] += jnp.sum(hb2 * -(s2 - sd[:, None]), axis=1) / (t2 ** 2)
+    @pl.when(k == n_d_blocks - 1)
+    def _online_update():
+        sd = sdr_ref[...].astype(jnp.float32)            # (BR,)
+        rows = rid_ref[...][:, None]                     # (BR, 1) global
+        cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+        mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
+        for s, t_ref, g_ref, dg_ref, m_ref in (
+                (s1_acc[...], t1_ref, g1_ref, dg1_ref, m1_ref),
+                (s2_acc[...], t2_ref, g2_ref, dg2_ref, m2_ref)):
+            t = t_ref[...].astype(jnp.float32)
+            z = jnp.where(mask, (s - sd[:, None]) / t[:, None], MASK_NEG)
+            m_new = jnp.maximum(m_ref[...], jnp.max(z, axis=1))
+            # MASK_NEG - MASK_NEG == 0 (finite sentinel), so alpha == 1 on
+            # still-empty rows instead of nan
+            alpha = jnp.exp(m_ref[...] - m_new)
+            p = jnp.where(mask, jnp.exp(z - m_new[:, None]), 0.0)
+            g_ref[...] = g_ref[...] * alpha + jnp.sum(p, axis=1)
+            dg_ref[...] = (dg_ref[...] * alpha
+                           + jnp.sum(p * -(s - sd[:, None]), axis=1)
+                           / (t ** 2))
+            m_ref[...] = m_new
 
 
 def gcl_pair_stats(e1, e2, tau1, tau2, *, e1_all=None, e2_all=None,
-                   row_offset=0, interpret=False):
-    """e1/e2: (b, d) normalized anchor rows; tau1/tau2: scalar or (b,).
+                   row_offset=0, interpret=False, d_block=None):
+    """e1/e2: (b, d) normalized anchor rows (f32 or bf16); tau1/tau2:
+    scalar or (b,).
 
     Square case (default): columns are the rows themselves.  Rectangular
     sharded case: ``e1_all``/``e2_all`` are the (B, d) gathered batch and
     ``row_offset`` (may be traced) is the global index of local row 0.
-    Returns (g1, g2, dg1, dg2) each (b,) f32 (means over B-1)."""
+    ``d_block``: feature-dim block (None = whole d, auto-blocked above
+    D_BLOCK_MAX).  Returns the shift-decomposed stats
+    (g1, g2, dg1, dg2, m1, m2), each (b,) f32, in losses.RowStats order:
+    true g = exp(m) * g (sums already divided by B-1)."""
     b, d = e1.shape
     if e1_all is None:
         e1_all, e2_all = e1, e2
     B = e1_all.shape[0]
+    if d_block is None:
+        d_block = d if d <= D_BLOCK_MAX else D_BLOCK_MAX
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
     rid = row_offset + jnp.arange(b, dtype=jnp.int32)
     ridp = _pad_rows(rid, BR, value=-1)
-    e1p = _pad_rows(e1, BR)
-    e2p = _pad_rows(e2, BR)
-    e1cp = _pad_rows(e1_all, BC)
-    e2cp = _pad_rows(e2_all, BC)
+    e1p = _pad_cols(_pad_rows(e1, BR), d_block)
+    e2p = _pad_cols(_pad_rows(e2, BR), d_block)
+    e1cp = _pad_cols(_pad_rows(e1_all, BC), d_block)
+    e2cp = _pad_cols(_pad_rows(e2_all, BC), d_block)
     sdp = _pad_vec(sd, b, BR)
     t1p = _pad_vec(tau1, b, BR, 1.0)
     t2p = _pad_vec(tau2, b, BR, 1.0)
-    bp, Bp = e1p.shape[0], e1cp.shape[0]
-    grid = (bp // BR, Bp // BC)
+    bp, Bp, dp = e1p.shape[0], e1cp.shape[0], e1p.shape[1]
+    nk = dp // d_block
+    grid = (bp // BR, Bp // BC, nk)
 
-    row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
-    col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
-    vec_row = pl.BlockSpec((BR,), lambda r, c: (r,))
+    row_spec = pl.BlockSpec((BR, d_block), lambda r, c, k: (r, k))
+    col_spec = pl.BlockSpec((BC, d_block), lambda r, c, k: (c, k))
+    vec_row = pl.BlockSpec((BR,), lambda r, c, k: (r,))
 
     out = pl.pallas_call(
-        functools.partial(_stats_kernel, n_cols=B),
+        functools.partial(_stats_kernel, n_cols=B, n_d_blocks=nk),
         grid=grid,
         in_specs=[vec_row, row_spec, row_spec, col_spec, col_spec,
                   vec_row, vec_row, vec_row],
-        out_specs=[vec_row] * 4,
-        out_shape=[jax.ShapeDtypeStruct((bp,), jnp.float32)] * 4,
+        out_specs=[vec_row] * 6,
+        out_shape=[jax.ShapeDtypeStruct((bp,), jnp.float32)] * 6,
+        scratch_shapes=[pltpu.VMEM((BR, BC), jnp.float32)] * 2,
         interpret=interpret,
     )(ridp, e1p, e2p, e1cp, e2cp, sdp, t1p, t2p)
     denom = float(max(B - 1, 1))
-    return tuple(o[:b] / denom for o in out)
+    g1, g2, dg1, dg2, m1, m2 = (o[:b] for o in out)
+    return g1 / denom, g2 / denom, dg1 / denom, dg2 / denom, m1, m2
 
 
 # ---------------------------------------------------------------------------
-# Backward kernel: de1/de2 of the FCCO surrogate
+# Backward kernel: de1/de2 of the FCCO surrogate, log-domain weights
 # ---------------------------------------------------------------------------
 
 def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
-                  sdc_ref, w1r_ref, w2r_ref, w1c_ref, w2c_ref, t1r_ref,
-                  t2r_ref, t1c_ref, t2c_ref, de1_ref, de2_ref, r1_ref,
-                  r2_ref, *, n_cols):
+                  sdc_ref, lwt1r_ref, lwt2r_ref, lwt1c_ref, lwt2c_ref,
+                  t1r_ref, t2r_ref, t1c_ref, t2c_ref, de1_ref, de2_ref,
+                  r1_ref, r2_ref, *, n_cols):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -157,8 +200,6 @@ def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
         r1_ref[...] = jnp.zeros_like(r1_ref)
         r2_ref[...] = jnp.zeros_like(r2_ref)
 
-    e1r = e1r_ref[...]
-    e2r = e2r_ref[...]
     e1c = e1c_ref[...]
     e2c = e2c_ref[...]
     sdr = sdr_ref[...].astype(jnp.float32)
@@ -168,47 +209,57 @@ def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
     cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
     mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
 
-    s1 = jax.lax.dot_general(e1r, e2c, (((1,), (1,)), ((), ())),
+    s1 = jax.lax.dot_general(e1r_ref[...], e2c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    s2 = jax.lax.dot_general(e2r, e1c, (((1,), (1,)), ((), ())),
+    s2 = jax.lax.dot_general(e2r_ref[...], e1c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
-    a1 = (w1r_ref[...] / t1r_ref[...])[:, None] * jnp.where(
-        mask, _cexp_bwd((s1 - sdr[:, None]) / t1r_ref[...][:, None]), 0.0)
-    a2 = (w2r_ref[...] / t2r_ref[...])[:, None] * jnp.where(
-        mask, _cexp_bwd((s2 - sdr[:, None]) / t2r_ref[...][:, None]), 0.0)
+
+    def a(z):
+        # exp(z + lwt) <= B/gamma by the log-domain weight bound; the
+        # EXP_CLAMP min is the shared last-resort guard only
+        return jnp.where(mask, jnp.exp(jnp.minimum(z, EXP_CLAMP)), 0.0)
+
+    a1 = a((s1 - sdr[:, None]) / t1r_ref[...][:, None]
+           + lwt1r_ref[...][:, None])
+    a2 = a((s2 - sdr[:, None]) / t2r_ref[...][:, None]
+           + lwt2r_ref[...][:, None])
     # transpose blocks: m1[p, j] = A1[j, p] over column anchors j
-    #   A1[j, p] = w1_j/t1_j exp((e1_j.e2_p - sd_j)/t1_j); e1_j.e2_p = s2[p, j]
-    m1 = (w1c_ref[...] / t1c_ref[...])[None, :] * jnp.where(
-        mask, _cexp_bwd((s2 - sdc[None, :]) / t1c_ref[...][None, :]), 0.0)
-    #   A2[j, p] = w2_j/t2_j exp((e2_j.e1_p - sd_j)/t2_j); e2_j.e1_p = s1[p, j]
-    m2 = (w2c_ref[...] / t2c_ref[...])[None, :] * jnp.where(
-        mask, _cexp_bwd((s1 - sdc[None, :]) / t2c_ref[...][None, :]), 0.0)
+    #   A1[j, p] = exp((e1_j.e2_p - sd_j)/t1_j + lwt1_j); e1_j.e2_p = s2[p, j]
+    m1 = a((s2 - sdc[None, :]) / t1c_ref[...][None, :]
+           + lwt1c_ref[...][None, :])
+    #   A2[j, p] = exp((e2_j.e1_p - sd_j)/t2_j + lwt2_j); e2_j.e1_p = s1[p, j]
+    m2 = a((s1 - sdc[None, :]) / t2c_ref[...][None, :]
+           + lwt2c_ref[...][None, :])
 
     de1_ref[...] += jax.lax.dot_general(
-        a1 + m2, e2c, (((1,), (0,)), ((), ())),
+        (a1 + m2).astype(e2c.dtype), e2c, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     de2_ref[...] += jax.lax.dot_general(
-        a2 + m1, e1c, (((1,), (0,)), ((), ())),
+        (a2 + m1).astype(e1c.dtype), e1c, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
     r1_ref[...] += jnp.sum(a1, axis=1)
     r2_ref[...] += jnp.sum(a2, axis=1)
 
 
-def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, e1_all=None, e2_all=None,
-                   sd_all=None, w1_all=None, w2_all=None, tau1_all=None,
-                   tau2_all=None, row_offset=0, interpret=False):
-    """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i.
+def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
+                   e2_all=None, sd_all=None, lwt1_all=None, lwt2_all=None,
+                   tau1_all=None, tau2_all=None, row_offset=0,
+                   interpret=False):
+    """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i
+    with log-domain weights: ``lwt* = log(w*) - log(tau*)`` so that
+    A[i, j] = exp(z_ij + lwt_i) — exact unclamped gradients at any tau.
 
     Square case: anchors == columns, all the ``*_all`` args default to the
     local ones.  Rectangular sharded case: the ``*_all`` args are the
-    gathered (B,)-shaped batch quantities (features, s_ii, FCCO weights,
+    gathered (B,)-shaped batch quantities (features, s_ii, log-weights,
     taus) needed for the transpose terms; the returned (b, d) grads are the
-    *local* rows — no collective is required on them."""
+    *local* rows — no collective is required on them.  Inputs may be bf16
+    (f32 accumulation)."""
     b, d = e1.shape
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
     if e1_all is None:
         e1_all, e2_all = e1, e2
-        sd_all, w1_all, w2_all = sd, w1, w2
+        sd_all, lwt1_all, lwt2_all = sd, lwt1, lwt2
         tau1_all, tau2_all = tau1, tau2
     B = e1_all.shape[0]
     rid = row_offset + jnp.arange(b, dtype=jnp.int32)
@@ -218,8 +269,12 @@ def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, e1_all=None, e2_all=None,
     ridp = _pad_rows(rid, BR, value=-1)
     sdp = _pad_vec(sd, b, BR)
     sdcp = _pad_vec(sd_all, B, BC)
-    w1p, w2p = _pad_vec(w1, b, BR), _pad_vec(w2, b, BR)
-    w1cp, w2cp = _pad_vec(w1_all, B, BC), _pad_vec(w2_all, B, BC)
+    # padded rows/cols are masked out via rid/n_cols; MASK_NEG keeps their
+    # exponents at -inf rather than trusting the mask alone
+    lw1p = _pad_vec(lwt1, b, BR, MASK_NEG)
+    lw2p = _pad_vec(lwt2, b, BR, MASK_NEG)
+    lw1cp = _pad_vec(lwt1_all, B, BC, MASK_NEG)
+    lw2cp = _pad_vec(lwt2_all, B, BC, MASK_NEG)
     t1p, t2p = _pad_vec(tau1, b, BR, 1.0), _pad_vec(tau2, b, BR, 1.0)
     t1cp = _pad_vec(tau1_all, B, BC, 1.0)
     t2cp = _pad_vec(tau2_all, B, BC, 1.0)
@@ -241,7 +296,7 @@ def gcl_pair_grads(e1, e2, w1, w2, tau1, tau2, *, e1_all=None, e2_all=None,
         out_shape=[jax.ShapeDtypeStruct((bp, d), jnp.float32)] * 2
         + [jax.ShapeDtypeStruct((bp,), jnp.float32)] * 2,
         interpret=interpret,
-    )(ridp, e1p, e2p, e1cp, e2cp, sdp, sdcp, w1p, w2p, w1cp, w2cp,
+    )(ridp, e1p, e2p, e1cp, e2cp, sdp, sdcp, lw1p, lw2p, lw1cp, lw2cp,
       t1p, t2p, t1cp, t2cp)
     kappa = 1.0 / (B * max(B - 1.0, 1.0))
     rsum = (r1 + r2)[:b, None]

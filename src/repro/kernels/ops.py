@@ -7,6 +7,10 @@ kernel-level surface for tests and notebooks.  The production path is
 drives the same kernels in their rectangular sharded form with the FCCO
 u/weight updates fused into the op.  On CPU the ``interpret=True`` path
 executes the same kernel body.
+
+Log-domain contract: weights are passed as ``lw = log(w)`` and the kernels
+work on the shift-decomposed stats (losses.RowStats) — exact at
+tau -> tau_min, no overflow (see repro.core.losses).
 """
 from __future__ import annotations
 
@@ -24,26 +28,31 @@ def default_interpret() -> bool:
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
-def fused_gcl_loss(e1n, e2n, w1, w2, tau1, tau2, interpret=False):
-    """L = (1/B) sum_i w1_i g1_i + w2_i g2_i via the Pallas kernels.
-    e1n/e2n normalized (B, d); w/tau (B,).  Returns (loss, (g1,g2,dg1,dg2))."""
-    g1, g2, dg1, dg2 = gcl_pair_stats(e1n, e2n, tau1, tau2,
-                                      interpret=interpret)
-    loss = jnp.sum(w1 * g1 + w2 * g2) / e1n.shape[0]
-    return loss, (g1, g2, dg1, dg2)
+def fused_gcl_loss(e1n, e2n, lw1, lw2, tau1, tau2, interpret=False):
+    """L = (1/B) sum_i w1_i g1_i + w2_i g2_i via the Pallas kernels, with
+    log-domain weights lw = log(w).  e1n/e2n normalized (B, d); lw/tau
+    (B,).  Returns (loss, (g1, g2, dg1, dg2, m1, m2)) — shift-decomposed
+    stats (true g = exp(m) * g)."""
+    from repro.core import losses as LS
+    stats = LS.RowStats(*gcl_pair_stats(e1n, e2n, tau1, tau2,
+                                        interpret=interpret))
+    loss = LS.surrogate_loss(stats, lw1, lw2, e1n.shape[0])
+    return loss, tuple(stats)
 
 
-def _fwd(e1n, e2n, w1, w2, tau1, tau2, interpret):
-    out = fused_gcl_loss(e1n, e2n, w1, w2, tau1, tau2, interpret)
-    return out, (e1n, e2n, w1, w2, tau1, tau2)
+def _fwd(e1n, e2n, lw1, lw2, tau1, tau2, interpret):
+    out = fused_gcl_loss(e1n, e2n, lw1, lw2, tau1, tau2, interpret)
+    return out, (e1n, e2n, lw1, lw2, tau1, tau2)
 
 
 def _bwd(interpret, res, cts):
     ct, _ = cts
-    e1n, e2n, w1, w2, tau1, tau2 = res
-    de1, de2 = gcl_pair_grads(e1n, e2n, w1, w2, tau1, tau2,
+    e1n, e2n, lw1, lw2, tau1, tau2 = res
+    lwt1 = lw1 - jnp.log(tau1)
+    lwt2 = lw2 - jnp.log(tau2)
+    de1, de2 = gcl_pair_grads(e1n, e2n, lwt1, lwt2, tau1, tau2,
                               interpret=interpret)
-    z = jnp.zeros_like(w1)
+    z = jnp.zeros_like(lw1)
     return (ct * de1).astype(e1n.dtype), (ct * de2).astype(e2n.dtype), \
         z, z, jnp.zeros_like(tau1), jnp.zeros_like(tau2)
 

@@ -1,61 +1,127 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets), plus a
+NumPy float64 oracle of the whole FCCO step — the linear-domain ground
+truth the shifted f32 engine is checked against (exp(200) is representable
+in f64, so no log-sum-exp shift is needed here)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.losses import clamped_exp, clamped_exp_bwd
+from repro.core.losses import MASK_NEG
 
 
 def gcl_pair_stats_ref(e1, e2, tau1, tau2):
-    """Fused contrastive inner-estimator statistics over the full pair
-    matrix.  e1/e2: (B, d) normalized; tau1/tau2: (B,).
+    """Shift-decomposed contrastive inner-estimator statistics over the
+    full pair matrix.  e1/e2: (B, d) normalized; tau1/tau2: (B,).
 
-    Returns (g1, g2, dg1, dg2), each (B,):
-        g1_i  = mean_{j!=i} exp((e1_i.e2_j - sd_i)/tau1_i)
-        g2_i  = mean_{j!=i} exp((e2_i.e1_j - sd_i)/tau2_i)
-        dg1_i = mean_{j!=i} h1[i,j] * (-(s1_ij - sd_i)) / tau1_i^2
+    Returns (g1, g2, dg1, dg2, m1, m2), each (B,), in losses.RowStats
+    order with m_i = max_{j!=i} z_ij and shifted sums (true estimator =
+    exp(m) * sum):
+        g1_i  = mean_{j!=i} exp(z1_ij - m1_i)
+        dg1_i = mean_{j!=i} exp(z1_ij - m1_i) * (-(s1_ij - sd_i)) / tau1_i^2
     """
     B = e1.shape[0]
+    e1 = e1.astype(jnp.float32)
+    e2 = e2.astype(jnp.float32)
     sd = jnp.sum(e1 * e2, axis=-1)
-    off = 1.0 - jnp.eye(B, dtype=jnp.float32)
+    off = ~jnp.eye(B, dtype=bool)
     s1 = (e1 @ e2.T).astype(jnp.float32)
     s2 = (e2 @ e1.T).astype(jnp.float32)
-    z1 = (s1 - sd[:, None]) / tau1[:, None]
-    z2 = (s2 - sd[:, None]) / tau2[:, None]
-    h1 = clamped_exp(z1) * off
-    h2 = clamped_exp(z2) * off
+    z1 = jnp.where(off, (s1 - sd[:, None]) / tau1[:, None], MASK_NEG)
+    z2 = jnp.where(off, (s2 - sd[:, None]) / tau2[:, None], MASK_NEG)
+    m1 = jnp.max(z1, axis=1)
+    m2 = jnp.max(z2, axis=1)
+    h1 = jnp.where(off, jnp.exp(z1 - m1[:, None]), 0.0)
+    h2 = jnp.where(off, jnp.exp(z2 - m2[:, None]), 0.0)
     denom = B - 1
     g1 = h1.sum(1) / denom
     g2 = h2.sum(1) / denom
-    # dg/dtau of the clamped estimator: saturated entries contribute 0
-    hb1 = clamped_exp_bwd(z1) * off
-    hb2 = clamped_exp_bwd(z2) * off
-    dg1 = (hb1 * -(s1 - sd[:, None])).sum(1) / (denom * tau1 ** 2)
-    dg2 = (hb2 * -(s2 - sd[:, None])).sum(1) / (denom * tau2 ** 2)
-    return g1, g2, dg1, dg2
+    dg1 = (h1 * -(s1 - sd[:, None])).sum(1) / (denom * tau1 ** 2)
+    dg2 = (h2 * -(s2 - sd[:, None])).sum(1) / (denom * tau2 ** 2)
+    return g1, g2, dg1, dg2, m1, m2
 
 
-def gcl_pair_grads_ref(e1, e2, w1, w2, tau1, tau2):
+def gcl_pair_grads_ref(e1, e2, lw1, lw2, tau1, tau2):
     """Closed-form gradient of the FCCO surrogate
         L = (1/B) sum_i w1_i g1_i + w2_i g2_i
-    w.r.t. the normalized embeddings (Appendix A).  Returns (de1, de2)."""
+    w.r.t. the normalized embeddings (Appendix A), with *log-domain*
+    weights lw = log(w): A[i, j] = exp(z_ij + lw_i - log tau_i).
+    Returns (de1, de2)."""
     B = e1.shape[0]
+    e1 = e1.astype(jnp.float32)
+    e2 = e2.astype(jnp.float32)
     sd = jnp.sum(e1 * e2, axis=-1)
-    off = 1.0 - jnp.eye(B, dtype=jnp.float32)
+    off = ~jnp.eye(B, dtype=bool)
     s1 = (e1 @ e2.T).astype(jnp.float32)
     s2 = (e2 @ e1.T).astype(jnp.float32)
-    A1 = (w1 / tau1)[:, None] \
-        * clamped_exp_bwd((s1 - sd[:, None]) / tau1[:, None]) * off
-    A2 = (w2 / tau2)[:, None] \
-        * clamped_exp_bwd((s2 - sd[:, None]) / tau2[:, None]) * off
+    lwt1 = lw1 - jnp.log(tau1)
+    lwt2 = lw2 - jnp.log(tau2)
+    A1 = jnp.where(off, jnp.exp((s1 - sd[:, None]) / tau1[:, None]
+                                + lwt1[:, None]), 0.0)
+    A2 = jnp.where(off, jnp.exp((s2 - sd[:, None]) / tau2[:, None]
+                                + lwt2[:, None]), 0.0)
     kappa = 1.0 / (B * (B - 1.0))
     r1 = A1.sum(1)
     r2 = A2.sum(1)
     de1 = kappa * ((A1 + A2.T) @ e2 - (r1 + r2)[:, None] * e2)
     de2 = kappa * ((A2 + A1.T) @ e1 - (r1 + r2)[:, None] * e1)
     return de1, de2
+
+
+# ---------------------------------------------------------------------------
+# NumPy f64 oracle of the full FCCO step (linear domain, no shift needed)
+# ---------------------------------------------------------------------------
+
+def fcco_step_f64(e1n, e2n, lu1, lu2, tau1, tau2, gamma, eps, *,
+                  scale_by_tau=True):
+    """One exact FCCO step in float64, linear domain: the ground truth for
+    the shifted-f32 engine (golden fixtures, bf16 tolerances, the
+    tau_min acceptance check).
+
+    e1n/e2n: (B, d) *normalized* embeddings; lu1/lu2: (B,) log-domain u.
+    Returns a dict with loss, lu1_new/lu2_new (log domain), the closed-form
+    feature grads de1/de2 of the surrogate w.r.t. e1n/e2n, and the true
+    (unshifted) dg1_dtau/dg2_dtau — everything float64.
+    """
+    e1 = np.asarray(e1n, np.float64)
+    e2 = np.asarray(e2n, np.float64)
+    B = e1.shape[0]
+    t1 = np.broadcast_to(np.asarray(tau1, np.float64), (B,))
+    t2 = np.broadcast_to(np.asarray(tau2, np.float64), (B,))
+    u1 = np.exp(np.asarray(lu1, np.float64))
+    u2 = np.exp(np.asarray(lu2, np.float64))
+    sd = np.sum(e1 * e2, axis=-1)
+    off = ~np.eye(B, dtype=bool)
+    s1 = e1 @ e2.T
+    s2 = e2 @ e1.T
+    h1 = np.where(off, np.exp((s1 - sd[:, None]) / t1[:, None]), 0.0)
+    h2 = np.where(off, np.exp((s2 - sd[:, None]) / t2[:, None]), 0.0)
+    denom = B - 1
+    g1 = h1.sum(1) / denom
+    g2 = h2.sum(1) / denom
+    dg1 = (h1 * -(s1 - sd[:, None])).sum(1) / (denom * t1 ** 2)
+    dg2 = (h2 * -(s2 - sd[:, None])).sum(1) / (denom * t2 ** 2)
+    u1n = (1.0 - gamma) * u1 + gamma * g1
+    u2n = (1.0 - gamma) * u2 + gamma * g2
+    w1 = (t1 if scale_by_tau else 1.0) / (eps + u1n)
+    w2 = (t2 if scale_by_tau else 1.0) / (eps + u2n)
+    loss = float(np.sum(w1 * g1 + w2 * g2) / B)
+    # closed-form grads (Appendix A); identical to autodiff of the
+    # surrogate because w is stop-grad
+    A1 = (w1 / t1)[:, None] * h1
+    A2 = (w2 / t2)[:, None] * h2
+    kappa = 1.0 / (B * (B - 1.0))
+    r1 = A1.sum(1)
+    r2 = A2.sum(1)
+    de1 = kappa * ((A1 + A2.T) @ e2 - (r1 + r2)[:, None] * e2)
+    de2 = kappa * ((A2 + A1.T) @ e1 - (r1 + r2)[:, None] * e1)
+    with np.errstate(divide="ignore"):
+        lu1n = np.log(u1n)
+        lu2n = np.log(u2n)
+    return {"loss": loss, "lu1_new": lu1n, "lu2_new": lu2n,
+            "g1": g1, "g2": g2, "dg1_dtau": dg1, "dg2_dtau": dg2,
+            "de1": de1, "de2": de2, "w1": w1, "w2": w2}
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0):

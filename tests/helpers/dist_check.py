@@ -23,24 +23,26 @@ def mesh1d():
 
 
 def check_vjp_equivalence():
-    """FastCLIP custom-vjp grads == single-device autodiff oracle."""
+    """FastCLIP custom-vjp grads == single-device autodiff oracle.
+    All FCCO quantities in the log-sum-exp-shifted / log-u form."""
     mesh = mesh1d()
     B, d = 32, 16
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     e1 = jax.random.normal(ks[0], (B, d))
     e2 = jax.random.normal(ks[1], (B, d))
-    u1 = jax.random.uniform(ks[2], (B,)) + 0.1
-    u2 = jax.random.uniform(ks[3], (B,)) + 0.1
+    lu1 = jnp.log(jax.random.uniform(ks[2], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[3], (B,)) + 0.1)
     tau, gamma, eps = 0.07, 0.5, 1e-14
 
     def ref(e1, e2):
-        loss, _ = LS.fcco_reference_step(e1, e2, u1, u2, tau, tau, gamma, eps)
+        loss, _ = LS.fcco_reference_step(e1, e2, lu1, lu2, tau, tau,
+                                         gamma, eps)
         return loss
 
     g_ref = jax.grad(ref, argnums=(0, 1))(e1, e2)
 
-    def dist(e1, e2, u1, u2, reduction):
-        def inner(e1l, e2l, u1l, u2l):
+    def dist(e1, e2, lu1, lu2, reduction):
+        def inner(e1l, e2l, lu1l, lu2l):
             e1n, e2n = LS.l2_normalize(e1l), LS.l2_normalize(e2l)
             off = jax.lax.axis_index("data") * e1l.shape[0]
             sg = jax.lax.stop_gradient
@@ -48,21 +50,22 @@ def check_vjp_equivalence():
             e2a = jax.lax.all_gather(sg(e2n), "data", tiled=True)
             st = LS.row_stats(sg(e1n), sg(e2n), e1a, e2a, tau, tau,
                               row_offset=off)
-            u1n = LS.update_u(u1l, st.g1, gamma)
-            u2n = LS.update_u(u2l, st.g2, gamma)
-            w1, w2 = LS.fcco_weights(u1n, u2n, tau, tau, eps)
+            lg1, lg2 = LS.log_g(st)
+            lu1n = LS.update_log_u(lu1l, lg1, gamma)
+            lu2n = LS.update_log_u(lu2l, lg2, gamma)
+            lw1, lw2 = LS.fcco_log_weights(lu1n, lu2n, tau, tau, eps)
             f = (D.make_fastclip_pair_loss(("data",)) if
                  reduction == "fastclip"
                  else D.make_allgather_ad_pair_loss(("data",)))
-            loss, _ = f(e1n, e2n, w1, w2, tau, tau)
+            loss, _ = f(e1n, e2n, lw1, lw2, tau, tau)
             return loss
         fn = D.shard_map(inner, mesh=mesh, in_specs=(P("data"),) * 4,
                          out_specs=P())
-        return fn(e1, e2, u1, u2)
+        return fn(e1, e2, lu1, lu2)
 
     ok = True
     for red in ("fastclip", "allgather_ad"):
-        g = jax.grad(lambda a, b: dist(a, b, u1, u2, red),
+        g = jax.grad(lambda a, b: dist(a, b, lu1, lu2, red),
                      argnums=(0, 1))(e1, e2)
         for gd, gr in zip(g, g_ref):
             err = float(jnp.max(jnp.abs(gd - gr)))
@@ -80,8 +83,8 @@ def check_fused_parity(K=4):
     ks = jax.random.split(jax.random.PRNGKey(0), 5)
     e1 = jax.random.normal(ks[0], (B, d))
     e2 = jax.random.normal(ks[1], (B, d))
-    u1 = jax.random.uniform(ks[2], (B,)) + 0.1
-    u2 = jax.random.uniform(ks[3], (B,)) + 0.1
+    lu1 = jnp.log(jax.random.uniform(ks[2], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[3], (B,)) + 0.1)
     gamma, eps = 0.5, 1e-14
     tau_row = jax.random.uniform(ks[4], (B,)) * 0.05 + 0.03
 
@@ -91,7 +94,7 @@ def check_fused_parity(K=4):
     ok = True
     for name, tau, sbt in cases:
         def ref(a, b):
-            loss, _ = LS.fcco_reference_step(a, b, u1, u2, tau, tau,
+            loss, _ = LS.fcco_reference_step(a, b, lu1, lu2, tau, tau,
                                              gamma, eps, scale_by_tau=sbt)
             return loss
         g_ref = jax.grad(ref, argnums=(0, 1))(e1, e2)
@@ -102,19 +105,19 @@ def check_fused_parity(K=4):
             tau_is_arr = jnp.ndim(tau) > 0
 
             def dist(a, b):
-                def inner(e1l, e2l, u1l, u2l, t1l, t2l):
+                def inner(e1l, e2l, lu1l, lu2l, t1l, t2l):
                     e1n = LS.l2_normalize(e1l)
                     e2n = LS.l2_normalize(e2l)
                     t1 = t1l if tau_is_arr else tau
                     t2 = t2l if tau_is_arr else tau
-                    loss, _ = op(e1n, e2n, u1l, u2l, t1, t2, gamma)
+                    loss, _ = op(e1n, e2n, lu1l, lu2l, t1, t2, gamma)
                     return loss
                 tspec = (P("data"),) * 2 if tau_is_arr else (P(), P())
                 targ = tau if tau_is_arr else jnp.zeros(())
                 fn = D.shard_map(inner, mesh=mesh,
                                  in_specs=(P("data"),) * 4 + tspec,
                                  out_specs=P())
-                return fn(a, b, u1, u2, targ, targ)
+                return fn(a, b, lu1, lu2, targ, targ)
 
             g = jax.grad(dist, argnums=(0, 1))(e1, e2)
             err = max(float(jnp.max(jnp.abs(gd - gr)))
@@ -139,22 +142,23 @@ def check_comm_reduction():
                                   loss_impl="dense")
 
     def make(reduction):
-        def inner(e1l, e2l, u1l, u2l):
+        def inner(e1l, e2l, lu1l, lu2l):
             sg = jax.lax.stop_gradient
             e1n, e2n = LS.l2_normalize(e1l), LS.l2_normalize(e2l)
             if reduction == "fastclip":
-                loss, _ = fcco_op(e1n, e2n, u1l, u2l, 0.07, 0.07, 0.5)
+                loss, _ = fcco_op(e1n, e2n, lu1l, lu2l, 0.07, 0.07, 0.5)
                 return loss
             off = jax.lax.axis_index("data") * e1l.shape[0]
             e1a = jax.lax.all_gather(sg(e1n), "data", tiled=True)
             e2a = jax.lax.all_gather(sg(e2n), "data", tiled=True)
             st = LS.row_stats(sg(e1n), sg(e2n), e1a, e2a, 0.07, 0.07,
                               row_offset=off)
-            u1n = LS.update_u(u1l, st.g1, 0.5)
-            u2n = LS.update_u(u2l, st.g2, 0.5)
-            w1, w2 = LS.fcco_weights(u1n, u2n, 0.07, 0.07, 1e-14)
+            lg1, lg2 = LS.log_g(st)
+            lu1n = LS.update_log_u(lu1l, lg1, 0.5)
+            lu2n = LS.update_log_u(lu2l, lg2, 0.5)
+            lw1, lw2 = LS.fcco_log_weights(lu1n, lu2n, 0.07, 0.07, 1e-14)
             f = D.make_allgather_ad_pair_loss(("data",))
-            loss, _ = f(e1n, e2n, w1, w2, 0.07, 0.07)
+            loss, _ = f(e1n, e2n, lw1, lw2, 0.07, 0.07)
             return loss
 
         def outer(e1, e2, u1, u2):

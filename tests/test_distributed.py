@@ -38,6 +38,20 @@ def test_fused_shard_map_grads_match_reference(K):
     _run(f"fused{K}")
 
 
+def test_lse_exact_at_tau_min_vs_f64_autodiff():
+    """Acceptance for the log-sum-exp-shifted engine: at tau = tau_min
+    with a similarity gap of 1.0 (raw exponent 100), the hardest-negative
+    gradient is nonzero, matches a JAX_ENABLE_X64 f64 autodiff reference
+    at 1e-4, and sat_rate is 0 — dense and fused, K=1 and K=4 forced-host
+    shard_map (subprocess: needs x64 + 8 host devices)."""
+    helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "helpers", "lse_check.py")
+    p = subprocess.run([sys.executable, helper], capture_output=True,
+                       text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
+
+
 def test_moe_all_to_all_routing_matches_oracle():
     """§Perf a2a expert router == dense-dispatch oracle on a (2,4) mesh."""
     helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),

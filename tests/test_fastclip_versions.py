@@ -61,26 +61,37 @@ def test_gamma_fn_per_version():
     np.testing.assert_allclose(float(g(4 * 4)), 0.2, atol=1e-6)
 
 
+def _tau_aux(u=0.5, dg=1.0, m=0.0, n=2):
+    """tau_gradient aux in the shifted/log-domain contract: log-u, row
+    shifts m and *shifted* dg (true dg = exp(m) * dg)."""
+    return {"lu1_new": jnp.full((n,), np.log(u)),
+            "lu2_new": jnp.full((n,), np.log(u)),
+            "m1": jnp.full((n,), m), "m2": jnp.full((n,), m),
+            "dg1_dtau": jnp.full((n,), dg),
+            "dg2_dtau": jnp.full((n,), dg)}
+
+
 def test_tau_gradient_v3_formula():
     fc = _mkcfg("v3", rho=2.0, eps=1e-14)
-    aux = {"u1_new": jnp.asarray([0.5, 0.5]),
-           "u2_new": jnp.asarray([0.5, 0.5]),
-           "dg1_dtau": jnp.asarray([1.0, 1.0]),
-           "dg2_dtau": jnp.asarray([1.0, 1.0])}
     tau = 0.1
-    g = FC.tau_gradient(fc, aux, tau, tau)
+    g = FC.tau_gradient(fc, _tau_aux(u=0.5, dg=1.0), tau, tau)
     expect = (2 * np.log(0.5) + 2 * 2.0) + 0.1 * (2 * (1.0 / 0.5))
     np.testing.assert_allclose(g, expect, rtol=1e-5)
+
+
+def test_tau_gradient_shift_recomposition():
+    """A nonzero row shift recomposes exactly: dg/(eps+u) is evaluated as
+    exp(m - log(eps+u)) * dg_shifted."""
+    fc = _mkcfg("v0", eps=1e-14)
+    m, dg, u = 3.0, 0.25, 2.0
+    g = FC.tau_gradient(fc, _tau_aux(u=u, dg=dg, m=m), 0.1, 0.1)
+    np.testing.assert_allclose(g, 2 * np.exp(m) * dg / u, rtol=1e-5)
 
 
 def test_tau_gradient_constant_versions_none():
     for v in ("v1", "sogclr"):
         fc = _mkcfg(v)
-        assert FC.tau_gradient(fc, {"u1_new": jnp.ones(2),
-                                    "u2_new": jnp.ones(2),
-                                    "dg1_dtau": jnp.ones(2),
-                                    "dg2_dtau": jnp.ones(2)}, 0.07, 0.07) \
-            is None
+        assert FC.tau_gradient(fc, _tau_aux(), 0.07, 0.07) is None
 
 
 def test_scale_by_tau_only_v0_differs():

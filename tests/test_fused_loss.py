@@ -1,6 +1,6 @@
 """The fused loss engine (make_fcco_loss_op): dense/fused parity, the
-tau -> tau_min overflow clamp, HBM-traffic shape of the lowered HLO, and
-the one-stats-pass-per-step guarantee."""
+exact log-sum-exp-shifted numerics at tau -> tau_min, HBM-traffic shape of
+the lowered HLO, and the one-stats-pass-per-step guarantee."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -16,16 +16,16 @@ def _problem(B=96, d=48, seed=0):
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)
     e1 = LS.l2_normalize(jax.random.normal(ks[0], (B, d)))
     e2 = LS.l2_normalize(jax.random.normal(ks[1], (B, d)))
-    u1 = jax.random.uniform(ks[2], (B,)) + 0.1
-    u2 = jax.random.uniform(ks[3], (B,)) + 0.1
-    return e1, e2, u1, u2
+    lu1 = jnp.log(jax.random.uniform(ks[2], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[3], (B,)) + 0.1)
+    return e1, e2, lu1, lu2
 
 
 @pytest.mark.parametrize("tau", [0.07, "per_row"])
 @pytest.mark.parametrize("scale_by_tau", [True, False])
 def test_fused_matches_dense_single_device(tau, scale_by_tau):
     B = 96
-    e1, e2, u1, u2 = _problem(B)
+    e1, e2, lu1, lu2 = _problem(B)
     if tau == "per_row":
         tau = jax.random.uniform(jax.random.PRNGKey(7), (B,)) * 0.05 + 0.03
 
@@ -35,71 +35,81 @@ def test_fused_matches_dense_single_device(tau, scale_by_tau):
                                  interpret=True)
 
         def f(a, b):
-            loss, _ = op(a, b, u1, u2, tau, tau, GAMMA)
+            loss, _ = op(a, b, lu1, lu2, tau, tau, GAMMA)
             return loss
 
         loss, grads = jax.value_and_grad(f, argnums=(0, 1))(e1, e2)
-        _, (u1n, u2n, stats) = op(e1, e2, u1, u2, tau, tau, GAMMA)
-        outs[impl] = (loss, grads, u1n, u2n, stats)
+        _, (lu1n, lu2n, stats, sat) = op(e1, e2, lu1, lu2, tau, tau,
+                                         GAMMA)
+        outs[impl] = (loss, grads, lu1n, lu2n, stats, sat)
 
-    ld, gd, u1d, u2d, std = outs["dense"]
-    lf, gf, u1f, u2f, stf = outs["fused"]
+    ld, gd, lu1d, lu2d, std, satd = outs["dense"]
+    lf, gf, lu1f, lu2f, stf, satf = outs["fused"]
     np.testing.assert_allclose(lf, ld, rtol=1e-5)
     for a, b in zip(gf, gd):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
-    np.testing.assert_allclose(u1f, u1d, rtol=1e-5)
-    np.testing.assert_allclose(u2f, u2d, rtol=1e-5)
+    np.testing.assert_allclose(lu1f, lu1d, rtol=1e-5)
+    np.testing.assert_allclose(lu2f, lu2d, rtol=1e-5)
     for a, b in zip(stf, std):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(satf, satd)
 
 
 @pytest.mark.parametrize("tau", [0.07, 0.01])
 def test_dense_op_matches_surrogate_autodiff(tau):
-    """The custom-vjp closed form == autodiff of the surrogate (the
-    pre-engine semantics of the single-device path).  tau = 0.01 puts
-    part of the pair matrix past EXP_CLAMP: the closed-form backward must
-    zero exactly the entries autodiff of the clamped forward zeroes."""
+    """The custom-vjp closed form == autodiff of the log-domain surrogate.
+    tau = 0.01 puts raw exponents far past the old EXP_CLAMP — under the
+    LSE shift both sides keep the exact unclamped gradients and still
+    agree."""
     B = 64
-    e1, e2, u1, u2 = _problem(B, seed=3)
+    e1, e2, lu1, lu2 = _problem(B, seed=3)
 
     def ref(a, b):
         st = LS.row_stats(a, b, a, b, tau, tau)
-        u1n = LS.update_u(u1, st.g1, GAMMA)
-        u2n = LS.update_u(u2, st.g2, GAMMA)
-        w1, w2 = LS.fcco_weights(u1n, u2n, tau, tau, EPS)
-        return LS.surrogate_loss(st, w1, w2, B)
+        lg1, lg2 = LS.log_g(st)
+        lu1n = LS.update_log_u(lu1, lg1, GAMMA)
+        lu2n = LS.update_log_u(lu2, lg2, GAMMA)
+        lw1, lw2 = LS.fcco_log_weights(lu1n, lu2n, tau, tau, EPS)
+        return LS.surrogate_loss(st, lw1, lw2, B)
 
     lr, gr = jax.value_and_grad(ref, argnums=(0, 1))(e1, e2)
     op = D.make_fcco_loss_op(None, EPS, True, loss_impl="dense")
     lo, go = jax.value_and_grad(
-        lambda a, b: op(a, b, u1, u2, tau, tau, GAMMA)[0],
+        lambda a, b: op(a, b, lu1, lu2, tau, tau, GAMMA)[0],
         argnums=(0, 1))(e1, e2)
     np.testing.assert_allclose(lo, lr, rtol=1e-6)
     for a, b in zip(go, gr):
         np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
 
 
-def test_tau_min_no_overflow_and_paths_agree():
+def test_tau_min_exact_and_paths_agree():
     """At tau = tau_min = 0.01 the raw exponent reaches ~200 (f32 exp
-    overflows at ~88.7); the shared clamp keeps every path finite and the
-    dense/fused implementations bit-comparable."""
+    overflows at ~88.7); the log-sum-exp shift keeps every path finite,
+    *exact* (matches the f64 linear-domain oracle — the old clamp zeroed
+    these gradients) and the dense/fused implementations comparable."""
+    from repro.kernels.ref import fcco_step_f64
     B = 64
-    e1, e2, u1, u2 = _problem(B, seed=5)
+    e1, e2, lu1, lu2 = _problem(B, seed=5)
     tau = 0.01
 
+    ref = fcco_step_f64(np.asarray(e1), np.asarray(e2), np.asarray(lu1),
+                        np.asarray(lu2), tau, tau, GAMMA, EPS)
     outs = {}
     for impl in ("dense", "fused"):
         op = D.make_fcco_loss_op(None, EPS, True, loss_impl=impl,
                                  interpret=True)
 
         def f(a, b):
-            loss, _ = op(a, b, u1, u2, tau, tau, GAMMA)
+            loss, _ = op(a, b, lu1, lu2, tau, tau, GAMMA)
             return loss
 
         loss, grads = jax.value_and_grad(f, argnums=(0, 1))(e1, e2)
         assert np.isfinite(float(loss)), impl
-        for g in grads:
+        np.testing.assert_allclose(float(loss), ref["loss"], rtol=1e-5)
+        for g, r in zip(grads, (ref["de1"], ref["de2"])):
             assert np.isfinite(np.asarray(g)).all(), impl
+            np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-6,
+                                       err_msg=impl)
         outs[impl] = (loss, grads)
 
     np.testing.assert_allclose(outs["fused"][0], outs["dense"][0],
@@ -107,7 +117,7 @@ def test_tau_min_no_overflow_and_paths_agree():
     for a, b in zip(outs["fused"][1], outs["dense"][1]):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
 
-    # the kernel-level oracle stays finite too
+    # the kernel-level oracle stays finite too (shifted domain)
     from repro.kernels.ref import gcl_pair_stats_ref
     t = jnp.full((B,), tau)
     for o in gcl_pair_stats_ref(e1, e2, t, t):
@@ -115,20 +125,26 @@ def test_tau_min_no_overflow_and_paths_agree():
 
 
 @pytest.mark.parametrize("tau", [0.07, 0.01])
-def test_dg_dtau_is_derivative_of_clamped_estimator(tau):
-    """The closed-form dg/dtau == autodiff of the clamped g wrt tau —
-    in particular, entries past EXP_CLAMP (tau=0.01) contribute zero."""
+def test_dg_dtau_is_derivative_of_estimator(tau):
+    """The closed-form shifted dg/dtau recomposes (exp(m) * dg) to the
+    autodiff derivative of the true estimator w.r.t. tau — including at
+    tau = 0.01, where the old clamped path dropped the saturated entries.
+    The comparison runs on log-derivatives (d log g/d tau = exp(m - lg) *
+    dg) to stay in f32 range."""
     B = 48
     e1, e2, _, _ = _problem(B, seed=8)
 
-    def g_sum(t):
+    def log_g_sum(t):
         st = LS.row_stats(e1, e2, e1, e2, t, t)
-        return jnp.sum(st.g1) + jnp.sum(st.g2)
+        lg1, lg2 = LS.log_g(st)
+        return jnp.sum(lg1) + jnp.sum(lg2)
 
-    auto = jax.grad(g_sum)(jnp.asarray(tau))
+    auto = jax.grad(log_g_sum)(jnp.asarray(tau))
     st = LS.row_stats(e1, e2, e1, e2, tau, tau)
-    closed = jnp.sum(st.dg1_dtau) + jnp.sum(st.dg2_dtau)
-    np.testing.assert_allclose(closed, auto, rtol=1e-5)
+    lg1, lg2 = LS.log_g(st)
+    closed = (jnp.sum(jnp.exp(st.m1 - lg1) * st.dg1_dtau)
+              + jnp.sum(jnp.exp(st.m2 - lg2) * st.dg2_dtau))
+    np.testing.assert_allclose(closed, auto, rtol=1e-4)
 
 
 def _count_primitives(jaxpr, name):
@@ -153,15 +169,16 @@ def test_fused_step_runs_one_stats_kernel():
     backward (grads): no duplicated stats pre-pass survives the
     custom-vjp boundary."""
     B = 64
-    e1, e2, u1, u2 = _problem(B, seed=6)
+    e1, e2, lu1, lu2 = _problem(B, seed=6)
     op = D.make_fcco_loss_op(None, EPS, True, loss_impl="fused",
                              interpret=True)
 
     def f(a, b):
-        loss, (u1n, u2n, stats) = op(a, b, u1, u2, 0.07, 0.07, GAMMA)
+        loss, (lu1n, lu2n, stats, sat) = op(a, b, lu1, lu2, 0.07, 0.07,
+                                            GAMMA)
         # consume the aux like the train step does (stop-grad)
         sg = jax.lax.stop_gradient
-        return loss + 0.0 * jnp.sum(sg(u1n) + sg(u2n))
+        return loss + 0.0 * jnp.sum(sg(lu1n) + sg(lu2n) + sg(sat))
 
     jaxpr = jax.make_jaxpr(
         lambda a, b: jax.value_and_grad(f, argnums=(0, 1))(a, b))(e1, e2)
@@ -174,7 +191,7 @@ def test_fused_hlo_has_no_dense_pair_matrix():
     """Acceptance: the lowered fused HLO materializes no (B, B) f32 pair
     matrix; the dense lowering does (the positive control)."""
     B, d = 256, 128
-    e1, e2, u1, u2 = _problem(B, d)
+    e1, e2, lu1, lu2 = _problem(B, d)
     marker = f"f32[{B},{B}]"
 
     def grad_of(impl):
@@ -182,7 +199,7 @@ def test_fused_hlo_has_no_dense_pair_matrix():
                                  interpret=True)
 
         def f(a, b):
-            loss, _ = op(a, b, u1, u2, 0.07, 0.07, GAMMA)
+            loss, _ = op(a, b, lu1, lu2, 0.07, 0.07, GAMMA)
             return loss
 
         return jax.jit(jax.grad(f, argnums=(0, 1)))
@@ -192,6 +209,37 @@ def test_fused_hlo_has_no_dense_pair_matrix():
     assert marker in dense_hlo          # positive control
     assert marker not in fused_hlo, \
         "fused path materialized the (B, B) pair matrix"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fcco_op_bf16_matches_f64_reference(dtype):
+    """bf16 embeddings with f32 accumulation: dense and fused paths land
+    within 1e-2 of the f64 linear-domain oracle (loss, grads, log-u)."""
+    from repro.kernels.ref import fcco_step_f64
+    B, d = 64, 256
+    e1, e2, lu1, lu2 = _problem(B, d, seed=9)
+    e1c = e1.astype(dtype)
+    e2c = e2.astype(dtype)
+    tau = 0.05
+    ref = fcco_step_f64(np.asarray(e1c, np.float32),
+                        np.asarray(e2c, np.float32), np.asarray(lu1),
+                        np.asarray(lu2), tau, tau, GAMMA, EPS)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    for impl in ("dense", "fused"):
+        op = D.make_fcco_loss_op(None, EPS, True, loss_impl=impl,
+                                 interpret=True)
+        loss, grads = jax.value_and_grad(
+            lambda a, b: op(a, b, lu1, lu2, tau, tau, GAMMA)[0],
+            argnums=(0, 1))(e1c, e2c)
+        _, (lu1n, lu2n, _, sat) = op(e1c, e2c, lu1, lu2, tau, tau, GAMMA)
+        np.testing.assert_allclose(float(loss), ref["loss"], rtol=tol)
+        np.testing.assert_allclose(lu1n, ref["lu1_new"], atol=tol)
+        for g, r in zip(grads, (ref["de1"], ref["de2"])):
+            assert g.dtype == dtype
+            np.testing.assert_allclose(np.asarray(g, np.float64), r,
+                                       atol=tol * np.abs(r).max(),
+                                       err_msg=f"{impl} {dtype}")
+        assert float(jnp.max(sat)) == 0.0
 
 
 def test_train_step_loss_impl_knob():
@@ -228,8 +276,11 @@ def test_train_step_loss_impl_knob():
     sd, md = results["dense"]
     sf, mf = results["fused"]
     np.testing.assert_allclose(mf["loss"], md["loss"], rtol=1e-5)
+    np.testing.assert_allclose(mf["sat_rate"], 0.0)
     for a, b in zip(jax.tree.leaves(sf["params"]),
                     jax.tree.leaves(sd["params"])):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
-    np.testing.assert_allclose(sf["fc"]["u1"], sd["fc"]["u1"], rtol=1e-5,
-                               atol=1e-7)
+    # u state is log-domain: compare only the rows this batch touched
+    # (untouched rows are -inf on both sides)
+    np.testing.assert_allclose(sf["fc"]["u1"][idx], sd["fc"]["u1"][idx],
+                               rtol=1e-5, atol=1e-7)

@@ -1,0 +1,62 @@
+"""Golden-value regression: the loss engine must reproduce the checked-in
+fixtures (tests/golden/, see regen.py there) — future kernel tuning can't
+silently drift numerics.  Both loss_impls are pinned, and the fixtures
+themselves are cross-checked against the f64 linear-domain oracle."""
+import importlib.util
+import json
+import os
+
+import numpy as np
+import pytest
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+_spec = importlib.util.spec_from_file_location(
+    "golden_regen", os.path.join(GOLDEN_DIR, "regen.py"))
+regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(regen)
+
+CASE_NAMES = [c[0] for c in regen.CASES]
+
+
+def _load(case):
+    fp = os.path.join(GOLDEN_DIR, f"fcco_{case}.json")
+    with open(fp) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("case", CASE_NAMES)
+@pytest.mark.parametrize("loss_impl", ["dense", "fused"])
+def test_engine_matches_golden(case, loss_impl):
+    want = _load(case)
+    got = regen.compute(case, loss_impl=loss_impl)
+    assert got.keys() == want.keys()
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), rtol=1e-5, atol=1e-6,
+            err_msg=f"{case}/{loss_impl}/{k} drifted from golden fixture")
+
+
+@pytest.mark.parametrize("case", CASE_NAMES)
+def test_golden_fixtures_match_f64_oracle(case):
+    """The fixtures themselves are exact: the stored f32 engine outputs
+    sit within f32 rounding of the f64 linear-domain reference — also at
+    tau_min, where raw exponents are far past the old clamp (the pre-LSE
+    engine would have produced different, wrong values here)."""
+    from repro.kernels.ref import fcco_step_f64
+    want = _load(case)
+    scale_by_tau = dict((c[0], c[2]) for c in regen.CASES)[case]
+    e1, e2, lu1, lu2, tau = regen.inputs(case)
+    ref = fcco_step_f64(np.asarray(e1), np.asarray(e2), np.asarray(lu1),
+                        np.asarray(lu2), np.asarray(tau), np.asarray(tau),
+                        regen.GAMMA, regen.EPS, scale_by_tau=scale_by_tau)
+    np.testing.assert_allclose(want["loss"], ref["loss"], rtol=1e-5)
+    np.testing.assert_allclose(want["lu1_new"], ref["lu1_new"], atol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(want["de1"]).reshape(regen.B, regen.D), ref["de1"],
+        rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(want["de2"]).reshape(regen.B, regen.D), ref["de2"],
+        rtol=1e-4, atol=1e-6)
+    assert float(np.max(want["sat"])) == 0.0

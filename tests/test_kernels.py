@@ -22,30 +22,80 @@ def _emb(B, d, dtype, seed=0):
 @pytest.mark.parametrize("B,d", [(32, 16), (128, 64), (200, 128), (256, 512)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_gcl_pair_stats_sweep(B, d, dtype):
+    """Kernel == oracle on the shift-decomposed stats (g, dg, m).  bf16
+    inputs keep their dtype in VMEM and accumulate in f32: compared in
+    log domain (m + log g) against the f32 oracle, since bf16 rounds the
+    row max itself."""
+    from repro.core import losses as LS
     e1, e2 = _emb(B, d, dtype)
     t1 = jnp.full((B,), 0.07)
     t2 = jnp.full((B,), 0.05)
-    out_k = gcl_pair_stats(e1.astype(jnp.float32), e2.astype(jnp.float32),
-                           t1, t2, interpret=True)
-    out_r = R.gcl_pair_stats_ref(e1.astype(jnp.float32),
-                                 e2.astype(jnp.float32), t1, t2)
-    tol = 1e-5 if dtype == jnp.float32 else 1e-5
-    for a, b in zip(out_k, out_r):
-        np.testing.assert_allclose(a, b, rtol=tol, atol=tol)
+    out_k = LS.RowStats(*gcl_pair_stats(e1, e2, t1, t2, interpret=True))
+    out_r = LS.RowStats(*R.gcl_pair_stats_ref(e1.astype(jnp.float32),
+                                              e2.astype(jnp.float32),
+                                              t1, t2))
+    if dtype == jnp.float32:
+        for a, b in zip(out_k, out_r):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    else:
+        for lk, lr in zip(LS.log_g(out_k), LS.log_g(out_r)):
+            np.testing.assert_allclose(lk, lr, atol=1e-2)
 
 
 @pytest.mark.parametrize("B,d", [(64, 32), (192, 128), (130, 64)])
 def test_gcl_pair_grads_sweep(B, d):
     e1, e2 = _emb(B, d, jnp.float32, seed=1)
     k = jax.random.PRNGKey(2)
-    w1 = jax.random.uniform(k, (B,)) + 0.5
-    w2 = jax.random.uniform(k, (B,)) + 0.2
+    lw1 = jnp.log(jax.random.uniform(k, (B,)) + 0.5)
+    lw2 = jnp.log(jax.random.uniform(k, (B,)) + 0.2)
     t1 = jnp.full((B,), 0.08)
     t2 = jnp.full((B,), 0.06)
-    gk = gcl_pair_grads(e1, e2, w1, w2, t1, t2, interpret=True)
-    gr = R.gcl_pair_grads_ref(e1, e2, w1, w2, t1, t2)
+    gk = gcl_pair_grads(e1, e2, lw1 - jnp.log(t1), lw2 - jnp.log(t2),
+                        t1, t2, interpret=True)
+    gr = R.gcl_pair_grads_ref(e1, e2, lw1, lw2, t1, t2)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("d,d_block", [(3072, None), (3072, 512),
+                                       (384, 128)])
+def test_gcl_pair_stats_d_blocked_matches_unblocked(d, d_block):
+    """The d-blocked BlockSpec path (partial similarity accumulation in
+    VMEM scratch) reproduces the unblocked kernel at d = 3072 — including
+    the auto-enabled block above D_BLOCK_MAX — and the oracle."""
+    from repro.kernels.gcl_loss import D_BLOCK_MAX
+    B = 48
+    e1, e2 = _emb(B, d, jnp.float32, seed=5)
+    t1 = jnp.full((B,), 0.06)
+    t2 = jnp.full((B,), 0.05)
+    blocked = gcl_pair_stats(e1, e2, t1, t2, interpret=True,
+                             d_block=d_block)
+    unblocked = gcl_pair_stats(e1, e2, t1, t2, interpret=True, d_block=d)
+    if d_block is None:
+        assert d > D_BLOCK_MAX   # the auto-block path was exercised
+    # identical up to f32 summation-order roundoff of the partial dots
+    for a, b in zip(blocked, unblocked):
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-5)
+    for a, b in zip(blocked, R.gcl_pair_stats_ref(e1, e2, t1, t2)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_gcl_pair_grads_bf16_close_to_f32():
+    """bf16-in/f32-accumulate backward lands within 1e-2 (abs, grads are
+    O(1e-2)) of the f32 kernel."""
+    B, d = 96, 256
+    e1, e2 = _emb(B, d, jnp.float32, seed=6)
+    k = jax.random.PRNGKey(7)
+    lwt1 = jnp.log(jax.random.uniform(k, (B,)) + 0.5)
+    lwt2 = jnp.log(jax.random.uniform(k, (B,)) + 0.2)
+    t1 = jnp.full((B,), 0.08)
+    t2 = jnp.full((B,), 0.06)
+    g32 = gcl_pair_grads(e1, e2, lwt1, lwt2, t1, t2, interpret=True)
+    g16 = gcl_pair_grads(e1.astype(jnp.bfloat16),
+                         e2.astype(jnp.bfloat16), lwt1, lwt2, t1, t2,
+                         interpret=True)
+    for a, b in zip(g16, g32):
+        np.testing.assert_allclose(a, b, atol=1e-2)
 
 
 def test_fused_gcl_loss_custom_vjp_matches_autodiff():
@@ -53,16 +103,16 @@ def test_fused_gcl_loss_custom_vjp_matches_autodiff():
     B, d = 96, 48
     e1, e2 = _emb(B, d, jnp.float32, seed=3)
     tau = jnp.full((B,), 0.07)
-    w1 = jnp.full((B,), 1.3)
-    w2 = jnp.full((B,), 0.9)
+    lw1 = jnp.log(jnp.full((B,), 1.3))
+    lw2 = jnp.log(jnp.full((B,), 0.9))
 
     def via_kernel(a, b):
-        loss, _ = fused_gcl_loss(a, b, w1, w2, tau, tau, True)
+        loss, _ = fused_gcl_loss(a, b, lw1, lw2, tau, tau, True)
         return loss
 
     def via_ref(a, b):
         st = LS.row_stats(a, b, a, b, tau, tau)
-        return LS.surrogate_loss(st, w1, w2, B)
+        return LS.surrogate_loss(st, lw1, lw2, B)
 
     lk, gk = jax.value_and_grad(via_kernel, argnums=(0, 1))(e1, e2)
     lr, gr = jax.value_and_grad(via_ref, argnums=(0, 1))(e1, e2)

@@ -1,4 +1,5 @@
-"""Unit tests for the contrastive losses and the FCCO machinery."""
+"""Unit tests for the contrastive losses and the FCCO machinery
+(log-sum-exp-shifted form: see repro.core.losses)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,51 +15,80 @@ def _pairs(B=16, d=8, seed=0):
     return e1, e2
 
 
-def manual_stats(e1, e2, tau):
+def _hard_negative_pairs(B=16, d=8, seed=1, gap=1.0):
+    """Embeddings where row 0's hardest negative (col 1) sits ``gap``
+    above its diagonal similarity: s[0,1] - s[0,0] == gap exactly."""
+    e1, e2 = _pairs(B, d, seed)
+    e1 = np.array(e1)
+    e2 = np.array(e2)
+    c = gap / 2.0
+    s = np.sqrt(1.0 - c * c)
+    e1[0] = 0.0
+    e1[0, 0] = 1.0
+    e2[0] = 0.0
+    e2[0, 0], e2[0, 1] = -c, s
+    e2[1] = 0.0
+    e2[1, 0], e2[1, 1] = c, s
+    return jnp.asarray(e1), jnp.asarray(e2)
+
+
+def manual_log_stats(e1, e2, tau):
+    """f64 log-domain oracle: log g1/g2 via numpy logsumexp."""
     B = e1.shape[0]
     s = np.asarray(e1 @ e2.T, np.float64)
-    sd = np.diag(s)
-    g1 = np.zeros(B)
-    g2 = np.zeros(B)
+    lg1 = np.zeros(B)
+    lg2 = np.zeros(B)
     for i in range(B):
-        for j in range(B):
-            if j == i:
-                continue
-            g1[i] += np.exp((s[i, j] - s[i, i]) / tau)
-            g2[i] += np.exp((s[j, i] - s[i, i]) / tau)
-    return g1 / (B - 1), g2 / (B - 1)
+        z1 = [(s[i, j] - s[i, i]) / tau for j in range(B) if j != i]
+        z2 = [(s[j, i] - s[i, i]) / tau for j in range(B) if j != i]
+        m1, m2 = max(z1), max(z2)
+        lg1[i] = m1 + np.log(sum(np.exp(np.array(z1) - m1)) / (B - 1))
+        lg2[i] = m2 + np.log(sum(np.exp(np.array(z2) - m2)) / (B - 1))
+    return lg1, lg2
 
 
-def test_row_stats_matches_manual():
+@pytest.mark.parametrize("tau", [0.1, 0.01])
+def test_row_stats_matches_manual_log_domain(tau):
+    """m + log(g) == f64 logsumexp — including tau = tau_min, where the
+    linear-domain g would overflow f32."""
     e1, e2 = _pairs()
-    tau = 0.1
     st = LS.row_stats(e1, e2, e1, e2, tau, tau)
-    g1m, g2m = manual_stats(e1, e2, tau)
-    np.testing.assert_allclose(st.g1, g1m, rtol=1e-5)
-    np.testing.assert_allclose(st.g2, g2m, rtol=1e-5)
+    lg1, lg2 = LS.log_g(st)
+    lg1m, lg2m = manual_log_stats(e1, e2, tau)
+    np.testing.assert_allclose(lg1, lg1m, atol=5e-4)
+    np.testing.assert_allclose(lg2, lg2m, atol=5e-4)
+    # shifted sums themselves stay O(B) — never overflow
+    assert float(jnp.max(st.g1)) <= e1.shape[0]
+    assert float(jnp.max(st.g2)) <= e1.shape[0]
 
 
 def test_row_stats_block_equals_full():
-    """Row blocks with offsets reproduce the full computation."""
+    """Row blocks with offsets reproduce the full computation (the row
+    max runs over the same gathered columns, so m matches too)."""
     e1, e2 = _pairs(B=12)
     tau = 0.07
     full = LS.row_stats(e1, e2, e1, e2, tau, tau)
     for lo, hi in [(0, 4), (4, 8), (8, 12)]:
         blk = LS.row_stats(e1[lo:hi], e2[lo:hi], e1, e2, tau, tau,
                            row_offset=lo)
-        np.testing.assert_allclose(blk.g1, full.g1[lo:hi], rtol=1e-6)
-        np.testing.assert_allclose(blk.g2, full.g2[lo:hi], rtol=1e-6)
+        for a, b in zip(blk, full):
+            np.testing.assert_allclose(a, b[lo:hi], rtol=1e-6)
 
 
 def test_dg_dtau_matches_finite_diff():
+    """True dg/dtau = exp(m) * shifted dg."""
     e1, e2 = _pairs(B=10)
     tau = 0.08
     eps = 1e-4
+
+    def true_g1(t):
+        st = LS.row_stats(e1, e2, e1, e2, t, t)
+        return jnp.exp(st.m1) * st.g1
+
     st = LS.row_stats(e1, e2, e1, e2, tau, tau)
-    hi = LS.row_stats(e1, e2, e1, e2, tau + eps, tau + eps)
-    lo = LS.row_stats(e1, e2, e1, e2, tau - eps, tau - eps)
-    fd1 = (hi.g1 - lo.g1) / (2 * eps)
-    np.testing.assert_allclose(st.dg1_dtau, fd1, rtol=2e-2)
+    fd1 = (true_g1(tau + eps) - true_g1(tau - eps)) / (2 * eps)
+    np.testing.assert_allclose(jnp.exp(st.m1) * st.dg1_dtau, fd1,
+                               rtol=2e-2)
 
 
 def test_update_u_bounds():
@@ -70,6 +100,37 @@ def test_update_u_bounds():
         assert jnp.all(un <= jnp.maximum(u, g) + 1e-7)
     np.testing.assert_allclose(LS.update_u(u, g, 1.0), g)
     np.testing.assert_allclose(LS.update_u(u, g, 0.0), u)
+
+
+def test_update_log_u_matches_linear():
+    """exp(update_log_u(log u, log g)) == update_u(u, g) where linear is
+    representable; -inf (u = 0 init) and gamma in {0, 1} are exact."""
+    u = jnp.asarray([0.1, 0.5, 2.0])
+    g = jnp.asarray([0.9, 0.1, 3.0])
+    for gamma in [0.0, 0.3, 0.7, 1.0]:
+        lin = LS.update_u(u, g, gamma)
+        log = LS.update_log_u(jnp.log(u), jnp.log(g), gamma)
+        np.testing.assert_allclose(jnp.exp(log), lin, rtol=1e-6)
+    # u = 0 init: u_new = gamma * g exactly
+    log0 = LS.update_log_u(jnp.full((3,), -jnp.inf), jnp.log(g), 0.4)
+    np.testing.assert_allclose(jnp.exp(log0), 0.4 * g, rtol=1e-6)
+    # gamma = 0 keeps -inf untouched and finite values finite
+    keep = LS.update_log_u(jnp.asarray([-jnp.inf, 1.5]),
+                           jnp.asarray([3.0, 3.0]), 0.0)
+    assert float(keep[0]) == -np.inf
+    np.testing.assert_allclose(keep[1], 1.5, rtol=1e-6)
+
+
+def test_fcco_log_weights_match_linear():
+    u = jnp.asarray([0.3, 1.7])
+    tau = jnp.asarray([0.07, 0.05])
+    eps = 1e-14
+    for sbt in (True, False):
+        w1, w2 = LS.fcco_weights(u, u, tau, tau, eps, scale_by_tau=sbt)
+        lw1, lw2 = LS.fcco_log_weights(jnp.log(u), jnp.log(u), tau, tau,
+                                       eps, scale_by_tau=sbt)
+        np.testing.assert_allclose(jnp.exp(lw1), w1, rtol=1e-6)
+        np.testing.assert_allclose(jnp.exp(lw2), w2, rtol=1e-6)
 
 
 def test_mbcl_matches_manual_infonce():
@@ -84,33 +145,35 @@ def test_mbcl_matches_manual_infonce():
 
 def test_surrogate_grad_is_fcco_estimator():
     """The surrogate's autodiff gradient equals the closed-form estimator
-    computed by the kernel reference (Appendix A)."""
+    computed by the kernel reference (Appendix A), in the log-weight
+    form."""
     from repro.kernels.ref import gcl_pair_grads_ref
     e1, e2 = _pairs(B=14, d=6)
     tau = jnp.full((14,), 0.09)
-    u1 = jnp.full((14,), 0.4)
-    u2 = jnp.full((14,), 0.6)
+    lu1 = jnp.log(jnp.full((14,), 0.4))
+    lu2 = jnp.log(jnp.full((14,), 0.6))
     gamma, eps = 0.7, 1e-14
 
     def f(e1n, e2n):
         st = LS.row_stats(e1n, e2n, e1n, e2n, tau, tau)
-        u1n = LS.update_u(u1, st.g1, gamma)
-        u2n = LS.update_u(u2, st.g2, gamma)
-        w1, w2 = LS.fcco_weights(u1n, u2n, tau, tau, eps)
-        return LS.surrogate_loss(st, w1, w2, 14), (w1, w2)
+        lg1, lg2 = LS.log_g(st)
+        lu1n = LS.update_log_u(lu1, lg1, gamma)
+        lu2n = LS.update_log_u(lu2, lg2, gamma)
+        lw1, lw2 = LS.fcco_log_weights(lu1n, lu2n, tau, tau, eps)
+        return LS.surrogate_loss(st, lw1, lw2, 14), (lw1, lw2)
 
-    (_, (w1, w2)), (de1, de2) = jax.value_and_grad(
+    (_, (lw1, lw2)), (de1, de2) = jax.value_and_grad(
         f, argnums=(0, 1), has_aux=True)(e1, e2)
-    de1_ref, de2_ref = gcl_pair_grads_ref(e1, e2, w1, w2, tau, tau)
+    de1_ref, de2_ref = gcl_pair_grads_ref(e1, e2, lw1, lw2, tau, tau)
     np.testing.assert_allclose(de1, de1_ref, atol=1e-6)
     np.testing.assert_allclose(de2, de2_ref, atol=1e-6)
 
 
 def test_loss_values_finite_and_ordered():
-    u1 = jnp.asarray([0.5, 1.0])
-    u2 = jnp.asarray([0.5, 1.0])
-    v_gcl = LS.gcl_value(u1, u2, 0.07, 1e-14)
-    v_rg = LS.rgcl_g_value(u1, u2, 0.07, 1e-14, rho=6.5)
+    lu1 = jnp.log(jnp.asarray([0.5, 1.0]))
+    lu2 = jnp.log(jnp.asarray([0.5, 1.0]))
+    v_gcl = LS.gcl_value(lu1, lu2, 0.07, 1e-14)
+    v_rg = LS.rgcl_g_value(lu1, lu2, 0.07, 1e-14, rho=6.5)
     assert np.isfinite(v_gcl) and np.isfinite(v_rg)
     assert v_rg > v_gcl  # + 2 rho tau
 
@@ -119,3 +182,96 @@ def test_l2_normalize():
     x = jax.random.normal(jax.random.PRNGKey(0), (5, 7)) * 10
     n = LS.l2_normalize(x)
     np.testing.assert_allclose(jnp.linalg.norm(n, axis=-1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# The LSE path at tau = tau_min: exactness + the sat_rate counter
+# ---------------------------------------------------------------------------
+
+TAU_MIN = 0.01
+
+
+def test_hardest_negative_gradient_alive_at_tau_min():
+    """Acceptance: at tau = tau_min with a similarity gap of 1.0 (raw
+    exponent 100 — past both f32 exp overflow and the old EXP_CLAMP), the
+    hardest-negative feature gradient is nonzero and matches the f64
+    reference at 1e-4, dense and fused."""
+    from repro.core import distributed as D
+    from repro.kernels.ref import fcco_step_f64
+    B = 16
+    e1, e2 = _hard_negative_pairs(B=B, gap=1.0)
+    ks = jax.random.split(jax.random.PRNGKey(2), 2)
+    lu1 = jnp.log(jax.random.uniform(ks[0], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[1], (B,)) + 0.1)
+    gamma, eps = 0.5, 1e-14
+
+    ref = fcco_step_f64(np.asarray(e1), np.asarray(e2), np.asarray(lu1),
+                        np.asarray(lu2), TAU_MIN, TAU_MIN, gamma, eps)
+    assert np.linalg.norm(ref["de1"][0]) > 1e-2   # the pair repels in f64
+
+    for impl in ("dense", "fused"):
+        op = D.make_fcco_loss_op(None, eps, True, loss_impl=impl,
+                                 interpret=True)
+        grads = jax.grad(
+            lambda a, b: op(a, b, lu1, lu2, TAU_MIN, TAU_MIN, gamma)[0],
+            argnums=(0, 1))(e1, e2)
+        assert float(jnp.linalg.norm(grads[0][0])) > 1e-2, impl
+        np.testing.assert_allclose(grads[0], ref["de1"], rtol=1e-4,
+                                   atol=1e-6, err_msg=impl)
+        np.testing.assert_allclose(grads[1], ref["de2"], rtol=1e-4,
+                                   atol=1e-6, err_msg=impl)
+        _, (lu1n, lu2n, _, sat) = op(e1, e2, lu1, lu2, TAU_MIN, TAU_MIN,
+                                     gamma)
+        np.testing.assert_allclose(lu1n, ref["lu1_new"], atol=1e-4)
+        assert float(jnp.max(sat)) == 0.0, impl
+
+
+def test_sat_rate_metric_in_train_step():
+    """sat_rate is wired into train_step metrics and reports ~0 under the
+    LSE path even at tau = tau_min (where the old clamp-based path
+    silently zeroed the hardest-negative gradients)."""
+    from repro.configs import get_arch
+    from repro.core import fastclip as FC
+    from repro.core import train_step as TS
+    from repro.core.schedules import lr_warmup_cosine
+    from repro.optim import adamw
+
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    n = 32
+    rng = jax.random.PRNGKey(0)
+    c = cfg.clip
+    batch = {
+        "images": jax.random.normal(rng, (16, c.image_size, c.image_size,
+                                          3)),
+        "texts": jax.random.randint(rng, (16, c.context_length), 0,
+                                    cfg.vocab_size),
+    }
+    idx = jnp.arange(16)
+    fc = FC.FastCLIPConfig(version="v1", n_samples=n, tau_init=TAU_MIN,
+                           steps_per_epoch=2, gamma_decay_epochs=2)
+    tc = TS.TrainStepConfig(arch=cfg, fc=fc, optimizer=adamw(),
+                            lr_fn=lr_warmup_cosine(1e-3, 2, 10), wd=0.1)
+    state = TS.init_train_state(jax.random.PRNGKey(1), tc)
+    state, m = jax.jit(TS.make_train_step(tc))(state, batch, idx)
+    assert "sat_rate" in m
+    assert float(m["sat_rate"]) == 0.0
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_sat_rate_fires_only_when_guard_would():
+    """Positive control for the counter: with gamma = 0 and an untouched
+    (u = 0) state, the backward exponent is unbounded — the last-resort
+    guard region is entered and sat_rate reports it.  With any gamma > 0
+    the log-domain bound exp(z - log(eps+u)) <= B/gamma holds and
+    sat_rate is 0."""
+    from repro.core import distributed as D
+    B = 16
+    e1, e2 = _hard_negative_pairs(B=B, gap=1.8)
+    lu0 = jnp.full((B,), -jnp.inf)      # u = 0, never updated
+    op = D.make_fcco_loss_op(None, 1e-14, True, loss_impl="dense")
+    # gamma = 0: u stays 0, weights ~ 1/eps, exponent ~ 180 + log(1/eps)
+    _, (_, _, _, sat0) = op(e1, e2, lu0, lu0, TAU_MIN, TAU_MIN, 0.0)
+    assert float(jnp.max(sat0)) > 0.0
+    # gamma > 0: u_new tracks g and the bound kicks in
+    _, (_, _, _, sat1) = op(e1, e2, lu0, lu0, TAU_MIN, TAU_MIN, 0.5)
+    assert float(jnp.max(sat1)) == 0.0

@@ -52,16 +52,108 @@ def test_gamma_cosine_in_range(gmin, spe, E, step):
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 12), st.integers(0, 10_000))
 def test_row_stats_positive_and_bounded(B, seed):
-    """g estimators are positive; with normalized embeddings and tau>=0.05
-    they are bounded by exp(2/tau)."""
+    """Shifted g estimators are positive and bounded by B-1 (each shifted
+    term is <= 1) for *any* tau — the point of the LSE shift."""
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     e1 = LS.l2_normalize(jax.random.normal(k1, (B, 4)))
     e2 = LS.l2_normalize(jax.random.normal(k2, (B, 4)))
-    tau = 0.05
-    stt = LS.row_stats(e1, e2, e1, e2, tau, tau)
-    assert bool(jnp.all(stt.g1 > 0)) and bool(jnp.all(stt.g2 > 0))
-    bound = np.exp(2.0 / tau) + 1
-    assert bool(jnp.all(stt.g1 < bound)) and bool(jnp.all(stt.g2 < bound))
+    for tau in (0.05, 0.01):
+        stt = LS.row_stats(e1, e2, e1, e2, tau, tau)
+        assert bool(jnp.all(stt.g1 > 0)) and bool(jnp.all(stt.g2 > 0))
+        assert bool(jnp.all(stt.g1 <= 1.0 + 1e-6))
+        assert bool(jnp.all(stt.g2 <= 1.0 + 1e-6))
+        assert bool(jnp.all(stt.m1 <= 2.0 / tau + 1e-4))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.integers(4, 24),
+       st.floats(-90.0, 90.0, allow_nan=False, width=32),
+       st.integers(0, 10_000))
+def test_lse_shift_invariance(rows, cols, c, seed):
+    """Adding a constant to all logits moves the shift m by that constant
+    and leaves the shifted sums (hence loss and grads, which consume only
+    exp(z - m)) unchanged."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    z = jax.random.normal(k1, (rows, cols)) * 50.0
+    mask = jax.random.bernoulli(k2, 0.7, (rows, cols))
+    mask = mask.at[:, 0].set(True)      # no fully-masked rows
+    m0, G0 = LS.lse_shift(z, mask)
+    m1, G1 = LS.lse_shift(z + c, mask)
+    np.testing.assert_allclose(m1, m0 + c, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(G1, G0, rtol=1e-4, atol=1e-5)
+    # and the recomposed logsumexp matches f64 numpy
+    z64 = np.where(np.asarray(mask), np.asarray(z, np.float64), -np.inf)
+    lse = np.log(np.sum(np.exp(z64 - z64.max(1, keepdims=True)), axis=1)) \
+        + z64.max(1)
+    np.testing.assert_allclose(m0 + np.log(G0), lse, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 16), st.integers(0, 1000))
+def test_loss_tau_continuity_near_tau_min(B, seed):
+    """The loss engine is continuous in tau at tau_min = 0.01: a 1e-5
+    perturbation moves the loss by O(z_max * delta / tau) relative, with
+    no clamp-induced jump."""
+    from repro.core import distributed as D
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    e1 = LS.l2_normalize(jax.random.normal(ks[0], (B, 8)))
+    e2 = LS.l2_normalize(jax.random.normal(ks[1], (B, 8)))
+    lu1 = jnp.log(jax.random.uniform(ks[2], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[3], (B,)) + 0.1)
+    op = D.make_fcco_loss_op(None, 1e-14, True, loss_impl="dense")
+    tau, delta = 0.01, 1e-5
+    l0 = float(op(e1, e2, lu1, lu2, tau, tau, 0.5)[0])
+    l1 = float(op(e1, e2, lu1, lu2, tau + delta, tau + delta, 0.5)[0])
+    assert np.isfinite(l0) and np.isfinite(l1)
+    # |dL/dtau| <~ L * z_max / tau; z_max <= 2/tau
+    bound = abs(l0) * (2.0 / tau) / tau * delta * 10 + 1e-5
+    assert abs(l1 - l0) < bound
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 4), st.integers(2, 48),
+       st.integers(0, 1000))
+def test_dense_fused_stats_parity_rectangular(b, dmul, B, seed):
+    """Dense row_stats == fused Pallas stats on random rectangular
+    (b, B, d, row_offset) configurations."""
+    from repro.kernels.gcl_loss import gcl_pair_stats
+    b = min(b, B)
+    off = (seed * 7) % (B - b + 1)
+    d = 8 * dmul
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    e1 = LS.l2_normalize(jax.random.normal(ks[0], (B, d)))
+    e2 = LS.l2_normalize(jax.random.normal(ks[1], (B, d)))
+    tau = 0.03 + 0.05 * ((seed % 13) / 13.0)
+    dense = LS.row_stats(e1[off:off + b], e2[off:off + b], e1, e2,
+                         tau, tau, row_offset=off)
+    fused = LS.RowStats(*gcl_pair_stats(
+        e1[off:off + b], e2[off:off + b], tau, tau, e1_all=e1, e2_all=e2,
+        row_offset=off, interpret=True))
+    for a, r in zip(fused, dense):
+        np.testing.assert_allclose(a, r, rtol=2e-5, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 1000))
+def test_dense_fused_grad_parity(B, seed):
+    """Dense and fused backward agree on random problems, including at
+    tau = tau_min."""
+    from repro.core import distributed as D
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    e1 = LS.l2_normalize(jax.random.normal(ks[0], (B, 8)))
+    e2 = LS.l2_normalize(jax.random.normal(ks[1], (B, 8)))
+    lu1 = jnp.log(jax.random.uniform(ks[2], (B,)) + 0.1)
+    lu2 = jnp.log(jax.random.uniform(ks[3], (B,)) + 0.1)
+    tau = 0.01 if seed % 2 else 0.07
+    grads = {}
+    for impl in ("dense", "fused"):
+        op = D.make_fcco_loss_op(None, 1e-14, True, loss_impl=impl,
+                                 interpret=True)
+        grads[impl] = jax.grad(
+            lambda a, b: op(a, b, lu1, lu2, tau, tau, 0.5)[0],
+            argnums=(0, 1))(e1, e2)
+    for a, b in zip(grads["fused"], grads["dense"]):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
 
 
 @settings(max_examples=15, deadline=None)

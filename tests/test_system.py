@@ -44,9 +44,12 @@ def test_every_algorithm_version_trains(version):
 
 def test_u_state_tracks_inner_function():
     state, metrics = _run("v1", steps=6)
-    u1 = np.asarray(state["fc"]["u1"])
-    assert (u1 > 0).sum() > 0          # touched rows moved off init
-    assert np.isfinite(u1).all()
+    lu1 = np.asarray(state["fc"]["u1"])        # log-domain u
+    touched = np.isfinite(lu1)
+    assert touched.sum() > 0           # touched rows moved off log(0)
+    assert (lu1[~touched] == -np.inf).all()    # untouched stay at init
+    assert not np.isnan(lu1).any()
+    assert float(metrics["sat_rate"]) == 0.0   # LSE path: guard never fires
 
 
 def test_v2_individual_taus_update():
