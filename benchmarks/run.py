@@ -7,6 +7,9 @@
     fig3_comm         -> Fig. 3 (communication bytes of the reductions)
     scaling_model     -> Fig. 4 / Tables 15-16 (scaling time model)
     kernel_bench      -> loss-layer micro-bench
+    step_bench        -> end-to-end step throughput (f32-dense vs
+                         bf16-flash-fused; also emits BENCH_step.json via
+                         ``python -m benchmarks.step_bench``)
     roofline_table    -> deliverable (g) table from the dry-run sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
@@ -26,7 +29,7 @@ def main() -> None:
     steps = 40 if args.quick else 120
 
     from benchmarks import (fig3_comm, kernel_bench, roofline_table,
-                            scaling_model, table3_inner_lr,
+                            scaling_model, step_bench, table3_inner_lr,
                             table4_temperature, table5_optimizer)
     benches = [
         ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
@@ -35,6 +38,8 @@ def main() -> None:
         ("fig3_comm", fig3_comm.run),
         ("scaling_model", scaling_model.run),
         ("kernel_bench", kernel_bench.run),
+        ("step_bench", lambda: step_bench.run(steps=5 if args.quick
+                                              else 12)),
         ("roofline_table", roofline_table.run),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,156 @@
+"""End-to-end train-step throughput: the f32 dense baseline vs the bf16
+flash+fused fast path.
+
+Times full optimizer steps (towers fwd/bwd + FCCO loss + AdamW update,
+state donated) of the reduced ViT-B/32-family CLIP on synthetic data and
+emits ``BENCH_step.json`` with one row per variant:
+
+    f32-dense   : precision=f32,  impl=chunked, loss_impl=dense
+    bf16-flash  : precision=bf16, impl=flash,   loss_impl=fused
+
+On CPU the Pallas kernels run in interpret mode, so absolute times measure
+the correctness surface, not TPU speed — the row schema and the loss-parity
+column are the durable part (the ``delta_loss_vs_f32`` field bounds the
+bf16 policy drift after ``steps`` real optimizer steps).
+
+Run: PYTHONPATH=src python -m benchmarks.step_bench [--quick] [--steps N]
+     [--out BENCH_step.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import fastclip as FC
+from repro.core import train_step as TS
+from repro.core.schedules import lr_warmup_cosine
+from repro.data import ContrastiveDataset, ShardedLoader
+from repro.launch.steps import donated_jit
+from repro.optim import adamw
+
+N_SAMPLES = 256
+GLOBAL_BATCH = 64
+
+VARIANTS = [
+    # (name, precision, attention impl, loss impl)
+    ("f32-dense", "f32", "chunked", "dense"),
+    ("bf16-flash", "bf16", "flash", "fused"),
+]
+
+
+def _build(precision, impl, loss_impl, steps, seed=0):
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    ds = ContrastiveDataset(n=N_SAMPLES, image_size=cfg.clip.image_size,
+                            context_length=cfg.clip.context_length,
+                            vocab_size=cfg.vocab_size, n_classes=32,
+                            seed=seed)
+    loader = ShardedLoader(ds, global_batch=GLOBAL_BATCH, seed=seed)
+    fc = FC.FastCLIPConfig(version="v3", n_samples=N_SAMPLES,
+                           steps_per_epoch=loader.steps_per_epoch,
+                           gamma_decay_epochs=2)
+    tc = TS.TrainStepConfig(arch=cfg, fc=fc, optimizer=adamw(),
+                            lr_fn=lr_warmup_cosine(1e-3, 4, max(steps, 8)),
+                            wd=0.1, impl=impl, loss_impl=loss_impl,
+                            precision=precision)
+    return tc, loader
+
+
+def bench_variant(name, precision, impl, loss_impl, steps, seed=0):
+    tc, loader = _build(precision, impl, loss_impl, steps, seed)
+    state = TS.init_train_state(jax.random.PRNGKey(seed), tc)
+    step_fn = donated_jit(TS.make_train_step(tc))
+
+    t_compile = t_steps = 0.0
+    n_timed = 0
+    losses = []
+    for epoch, step, idx, batch in loader.steps(steps):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        state, m = step_fn(state, batch, jnp.asarray(idx))
+        jax.block_until_ready(m["loss"])
+        dt = time.perf_counter() - t0
+        if step == 0:
+            t_compile = dt
+        else:
+            t_steps += dt
+            n_timed += 1
+        losses.append(float(m["loss"]))
+    TS.check_state_dtypes(state)  # f32 masters under any policy
+    s_per_step = t_steps / max(n_timed, 1)
+    return {
+        "name": name,
+        "precision": precision,
+        "impl": impl,
+        "loss_impl": loss_impl,
+        "steps_timed": n_timed,
+        "steps_per_s": round(1.0 / max(s_per_step, 1e-9), 3),
+        "ms_per_step": round(1e3 * s_per_step, 2),
+        "compile_s": round(t_compile, 2),
+        "loss_first": round(losses[0], 6),
+        "loss_final": round(losses[-1], 6),
+        "sat_rate": float(m["sat_rate"]),
+    }
+
+
+def collect(steps=12, seed=0):
+    rows = []
+    for name, precision, impl, loss_impl in VARIANTS:
+        rows.append(bench_variant(name, precision, impl, loss_impl,
+                                  steps, seed))
+    base = rows[0]
+    for r in rows:
+        r["delta_loss_vs_f32"] = round(
+            abs(r["loss_final"] - base["loss_final"]), 6)
+        r["speedup_vs_f32"] = round(
+            base["ms_per_step"] / max(r["ms_per_step"], 1e-9), 3)
+    return rows
+
+
+def run(steps=None, seed=0):
+    """benchmarks.run harness entry: (name, us_per_call, derived) rows."""
+    rows = collect(steps=steps or 12, seed=seed)
+    return [(f"step_bench/{r['name']}", 1e3 * r["ms_per_step"],
+             f"steps_per_s={r['steps_per_s']};"
+             f"delta_loss_vs_f32={r['delta_loss_vs_f32']};"
+             f"sat_rate={r['sat_rate']}") for r in rows]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="4 timed steps (CI smoke)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_step.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    steps = args.steps or (5 if args.quick else 12)
+
+    rows = collect(steps=steps, seed=args.seed)
+    doc = {
+        "bench": "step_bench",
+        "arch": "clip-vitb32-cc12m (reduced)",
+        "global_batch": GLOBAL_BATCH,
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "steps": steps,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    for r in rows:
+        print(f"{r['name']:>11}: {r['ms_per_step']:8.1f} ms/step "
+              f"({r['steps_per_s']:.2f} steps/s)  "
+              f"dloss_vs_f32={r['delta_loss_vs_f32']}")
+    print(f"wrote {args.out}")
+    return doc
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,10 @@ class ArchConfig:
     audio_subsample: int = 4       # encoder frames = seq_len // subsample
     # CLIP two-tower (family == "clip"): the paper's own settings
     clip: Optional["CLIPConfig"] = None
+    # mixed-precision policy for the tower hot loop ("f32" | "bf16",
+    # see repro.models.precision).  Params/optimizer/FCCO-u stay f32
+    # masters under any policy; the loss layer is always f32.
+    precision: str = "f32"
     # citation
     source: str = ""
     notes: str = ""

@@ -101,8 +101,12 @@ def init_state(fc: FastCLIPConfig):
     if fc.individual_tau:
         st["tau1"] = jnp.full((n,), fc.tau_init, jnp.float32)
         st["tau2"] = jnp.full((n,), fc.tau_init, jnp.float32)
-        z = jnp.zeros((n,), jnp.float32)
-        st["tau_opt"] = {"m1": z, "v1": z, "m2": z, "v2": z,
+        # distinct buffers per moment: aliased leaves break buffer
+        # donation of the train state (same buffer donated twice)
+        st["tau_opt"] = {"m1": jnp.zeros((n,), jnp.float32),
+                         "v1": jnp.zeros((n,), jnp.float32),
+                         "m2": jnp.zeros((n,), jnp.float32),
+                         "v2": jnp.zeros((n,), jnp.float32),
                          "t": jnp.zeros((), jnp.int32)}
     else:
         st["tau"] = jnp.asarray(fc.tau_init, jnp.float32)

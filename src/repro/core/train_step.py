@@ -26,6 +26,7 @@ from repro.core import distributed as D
 from repro.core import fastclip as FC
 from repro.core import losses as LS
 from repro.models import backbones as BB
+from repro.models import precision as PR
 from repro.optim import Optimizer, clip_by_global_norm
 
 sg = jax.lax.stop_gradient
@@ -165,6 +166,13 @@ class TrainStepConfig:
     # loss-layer math: "dense" (jnp pair matrices in HBM) or "fused"
     # (tiled Pallas kernels); None defers to fc.loss_impl
     loss_impl: Optional[str] = None
+    # tower mixed-precision policy ("f32" | "bf16"); None defers to
+    # arch.precision.  The loss layer stays f32 under any policy.
+    precision: Optional[str] = None
+
+    @property
+    def resolved_precision(self) -> PR.Precision:
+        return PR.get_precision(self.precision or self.arch.precision)
 
 
 def init_train_state(rng, tc: TrainStepConfig):
@@ -179,6 +187,7 @@ def init_train_state(rng, tc: TrainStepConfig):
 
 def make_train_step(tc: TrainStepConfig):
     fc = tc.fc
+    prec = tc.resolved_precision
     gamma_fn = fc.gamma_fn()
     loss_core = (None if fc.version == "openclip"
                  else make_loss_core(fc, tc.mesh_axes, tc.reduction,
@@ -195,7 +204,8 @@ def make_train_step(tc: TrainStepConfig):
                       else (fcs["tau"], fcs["tau"]))
 
         def loss_fn(params, tau_diff):
-            e1, e2 = BB.encode_pair(params, tc.arch, batch, impl=tc.impl)
+            e1, e2 = BB.encode_pair(params, tc.arch, batch, impl=tc.impl,
+                                    precision=prec)
             e1n = LS.l2_normalize(e1)
             e2n = LS.l2_normalize(e2)
             if fc.version == "openclip":
@@ -273,6 +283,32 @@ def make_train_step(tc: TrainStepConfig):
         return new_state, metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# Post-step dtype invariants
+# ---------------------------------------------------------------------------
+
+def check_state_dtypes(state) -> None:
+    """Assert the master-state dtype contract after a step: every floating
+    leaf of params / optimizer moments / FCCO state (log-u buffers, taus)
+    is f32, under *any* tower precision policy.  Integer leaves (step
+    counters) are exempt.  Raises AssertionError listing offenders."""
+    bad = []
+    for name in ("params", "opt", "fc"):
+        if name not in state:
+            continue
+        flat = jax.tree_util.tree_flatten_with_path(state[name])[0]
+        for path, leaf in flat:
+            if (hasattr(leaf, "dtype")
+                    and jnp.issubdtype(leaf.dtype, jnp.floating)
+                    and leaf.dtype != jnp.float32):
+                keys = "/".join(str(k) for k in path)
+                bad.append(f"{name}/{keys}: {leaf.dtype}")
+    if bad:  # explicit raise: survives python -O (bare assert does not)
+        raise AssertionError(
+            "master state must stay f32 under any precision policy; "
+            "offenders: " + ", ".join(bad))
 
 
 # ---------------------------------------------------------------------------

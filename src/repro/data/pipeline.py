@@ -4,11 +4,18 @@ Each worker owns a contiguous shard of the dataset (samples
 [k*n/K, (k+1)*n/K)), matching the sharding of the FCCO u buffers: a worker
 only ever draws indices it owns, so u updates are shard-local (paper §3
 "S is partitioned evenly across K workers").
+
+``DevicePrefetcher`` wraps any step iterator with a double-buffered
+producer thread that assembles host batches and issues the host->device
+transfer ``depth`` steps ahead, so H2D copy (and the numpy batch gather)
+overlaps the previous step's compute instead of serializing with it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Tuple
+import queue
+import threading
+from typing import Callable, Iterator, Optional, Tuple
 
 import numpy as np
 
@@ -59,3 +66,82 @@ class ShardedLoader:
                 if step >= n_steps:
                     return
             epoch += 1
+
+
+# ---------------------------------------------------------------------------
+# Host->device prefetch
+# ---------------------------------------------------------------------------
+
+_STOP = object()
+
+
+class DevicePrefetcher:
+    """Double-buffered host->device prefetch over any finite iterator.
+
+    A daemon producer thread pulls items, applies ``transform`` (e.g.
+    numpy -> ``jnp.asarray``, which dispatches the async H2D copy), and
+    parks up to ``depth`` transformed items in a bounded queue.  The
+    consumer therefore always finds the next batch already (being)
+    transferred: with ``depth=2`` the copy of step t+1 runs while step t
+    computes.  Producer exceptions are re-raised on the consumer side at
+    the position they occurred.  Iteration order is exactly the wrapped
+    iterator's."""
+
+    def __init__(self, iterator: Iterator, depth: int = 2,
+                 transform: Optional[Callable] = None):
+        assert depth >= 1
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._transform = transform
+        self._stop = threading.Event()   # set by close(): unblocks producer
+        self._done = False               # latched on _STOP: repeated next()
+        #                                  keeps raising StopIteration
+
+        def put(item) -> bool:
+            """Bounded put that aborts when close() is called (otherwise an
+            abandoned consumer would pin depth device batches forever)."""
+            while not self._stop.is_set():
+                try:
+                    self._q.put(item, timeout=0.1)
+                    return True
+                except queue.Full:
+                    continue
+            return False
+
+        def produce():
+            try:
+                for item in iterator:
+                    if not put(self._transform(item)
+                               if self._transform else item):
+                        return
+            except BaseException as e:  # surfaced on the consumer thread
+                if not put(e):
+                    return
+            put(_STOP)  # always terminate: next() after an exception
+            #             raises StopIteration instead of hanging
+
+        self._thread = threading.Thread(target=produce, daemon=True)
+        self._thread.start()
+
+    def close(self):
+        """Release the producer after early loop exit; drops queued items."""
+        self._stop.set()
+        self._done = True
+        while True:          # drain so a mid-put producer can finish
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._done:
+            raise StopIteration
+        item = self._q.get()
+        if item is _STOP:
+            self._done = True
+            raise StopIteration
+        if isinstance(item, BaseException):
+            raise item
+        return item

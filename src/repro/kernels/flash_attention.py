@@ -1,9 +1,17 @@
-"""Pallas TPU flash attention (fwd): causal / sliding-window, online
+"""Pallas TPU flash attention: causal / non-causal / sliding-window, online
 softmax, (BQ x BK) tiles in VMEM, f32 accumulators in scratch.
 
 Layout: q/k/v are (BH, S, hd) — batch*heads flattened to the leading grid
-axis.  The backward is served by the chunked pure-JAX path (remat); this
-kernel is the serving/prefill hot path.
+axis.  Rectangular (Sq != Sk) and non-multiple-of-tile shapes are handled
+by padding (padded k columns are masked inside the kernel; padded q rows
+are computed and sliced off).
+
+``flash_mha`` is the *training* entry point ((B, S, H, hd) layout, matching
+``repro.models.attention``): Pallas forward wrapped in ``jax.custom_vjp``
+with the backward served by re-differentiating the chunked pure-JAX
+online-softmax path (rematerialization — no attention matrix or softmax
+residuals are saved between forward and backward).  Off-TPU the kernel runs
+in interpret mode: the correctness surface, not a CPU speedup.
 """
 from __future__ import annotations
 
@@ -18,6 +26,11 @@ from jax.experimental.pallas import tpu as pltpu
 BQ = 256
 BK = 256
 NEG = -1e30
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU backends."""
+    return jax.default_backend() != "tpu"
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
@@ -98,3 +111,51 @@ def flash_attention(q, k, v, *, causal=True, window=0, interpret=False):
         interpret=interpret,
     )(qf, kf, vf)
     return out[:, :Sq].reshape(B, H, Sq, hd)
+
+
+# ---------------------------------------------------------------------------
+# Training entry point: custom-vjp flash forward + chunked remat backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_mha(q, k, v, causal, window, interpret, q_chunk, kv_chunk):
+    """(B, S, H, hd) layout.  Forward = the Pallas kernel above; backward =
+    autodiff through the chunked online-softmax path (its own remat)."""
+    o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=causal,
+                        window=window, interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_mha_fwd(q, k, v, causal, window, interpret, q_chunk, kv_chunk):
+    return (_flash_mha(q, k, v, causal, window, interpret, q_chunk,
+                       kv_chunk), (q, k, v))
+
+
+def _flash_mha_bwd(causal, window, interpret, q_chunk, kv_chunk, res, ct):
+    # Recompute-based backward: the chunked path streams (q_chunk, kv_chunk)
+    # blocks with its own online softmax + jax.checkpoint, so the (S, S)
+    # matrix is never resident in the backward either.
+    from repro.models.attention import chunked_attention
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda a, b, c: chunked_attention(a, b, c, causal=causal,
+                                          window=window, q_chunk=q_chunk,
+                                          kv_chunk=kv_chunk), q, k, v)
+    return vjp(ct)
+
+
+_flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
+
+
+def flash_mha(q, k, v, *, causal=True, window=0, interpret=None,
+              q_chunk=512, kv_chunk=1024):
+    """Training flash attention.  q: (B, Sq, H, hd), k/v: (B, Sk, H, hd)
+    (GQA heads already repeated), any Sq/Sk.  Returns (B, Sq, H, hd) in the
+    q dtype.  ``interpret=None`` auto-selects interpret mode off-TPU;
+    ``q_chunk``/``kv_chunk`` bound the remat backward's block sizes (the
+    AttnSpec tiles, honored like the chunked path honors them)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_mha(q, k, v, bool(causal), int(window), bool(interpret),
+                      int(q_chunk), int(kv_chunk))

@@ -19,12 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.flash_attention import (  # noqa: F401
+    default_interpret, flash_attention, flash_mha)
 from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(6,))

@@ -93,13 +93,16 @@ def decode_state_specs(cfg: ArchConfig, shape: InputShape,
 # ---------------------------------------------------------------------------
 
 def make_lm_train_step(cfg: ArchConfig, *, lr=1e-4, wd=0.1,
-                       total_steps=10_000, impl="chunked"):
+                       total_steps=10_000, impl="chunked", precision=None):
     opt = adamw()
     lr_fn = lr_warmup_cosine(lr, 500, total_steps)
+    from repro.models.precision import get_precision
+    prec = get_precision(precision or cfg.precision)
 
     def train_step(state, batch):
         def loss_fn(params):
-            return BB.lm_loss(params, cfg, batch, impl=impl)
+            return BB.lm_loss(params, cfg, batch, impl=impl,
+                              precision=prec)
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(state["params"])
         params, opt_state = opt.update(state["params"], grads, state["opt"],
@@ -113,12 +116,22 @@ def make_lm_train_step(cfg: ArchConfig, *, lr=1e-4, wd=0.1,
 def make_contrastive_train_step(cfg: ArchConfig, fc: FCC.FastCLIPConfig,
                                 *, mesh_axes=None, reduction="fastclip",
                                 lr=1e-4, wd=0.1, total_steps=10_000,
-                                impl="chunked"):
+                                impl="chunked", precision=None):
     tc = TS.TrainStepConfig(
         arch=cfg, fc=fc, optimizer=adamw(),
         lr_fn=lr_warmup_cosine(lr, 500, total_steps), wd=wd,
-        mesh_axes=mesh_axes, reduction=reduction, impl=impl)
+        mesh_axes=mesh_axes, reduction=reduction, impl=impl,
+        precision=precision)
     return TS.make_train_step(tc), tc
+
+
+def donated_jit(step_fn):
+    """jit a ``(state, *rest) -> (new_state, metrics)`` step with the state
+    buffers donated: XLA reuses the params/opt/u input allocations for the
+    outputs, halving the steady-state HBM held for the train state.  Safe
+    because every caller rebinds ``state`` to the step's return value (the
+    donated input is invalid after the call)."""
+    return jax.jit(step_fn, donate_argnums=0)
 
 
 def make_prefill_step(cfg: ArchConfig, *, impl="chunked"):

@@ -22,9 +22,11 @@ from repro.configs import INPUT_SHAPES, get_arch
 from repro.core import fastclip as FC
 from repro.core import train_step as TS
 from repro.core.schedules import lr_warmup_cosine
-from repro.data import (ContrastiveDataset, LMDataset,
+from repro.data import (ContrastiveDataset, DevicePrefetcher, LMDataset,
                         PairedEmbeddingDataset, ShardedLoader)
+from repro.launch.steps import donated_jit
 from repro.models import backbones as BB
+from repro.models.precision import POLICIES
 from repro.optim import get_optimizer
 
 
@@ -63,6 +65,17 @@ def main(argv=None):
                     help="loss-layer math: dense jnp or fused Pallas "
                          "kernels (interpret mode off-TPU); unset defers "
                          "to FastCLIPConfig.loss_impl (dense)")
+    ap.add_argument("--precision", default=None, choices=sorted(POLICIES),
+                    help="tower mixed-precision policy (bf16 compute, f32 "
+                         "masters + f32 loss layer); unset defers to "
+                         "ArchConfig.precision (f32)")
+    ap.add_argument("--impl", default="chunked",
+                    choices=["chunked", "flash", "naive"],
+                    help="training attention: pure-JAX chunked online "
+                         "softmax, the Pallas flash kernel (interpret "
+                         "mode off-TPU), or the O(S^2) oracle")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="host->device prefetch depth (0 disables)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
@@ -80,11 +93,13 @@ def main(argv=None):
     if args.objective == "lm" and cfg.family != "clip":
         from repro.launch.steps import make_lm_train_step
         step_fn, opt = make_lm_train_step(cfg, lr=args.lr, wd=args.wd,
-                                          total_steps=args.steps)
+                                          total_steps=args.steps,
+                                          impl=args.impl,
+                                          precision=args.precision)
         params = BB.init_params(jax.random.PRNGKey(args.seed), cfg)
         state = {"params": params, "opt": opt.init(params),
                  "step": jnp.zeros((), jnp.int32)}
-        jit_step = jax.jit(step_fn)
+        jit_step = donated_jit(step_fn)
 
         def run_step(state, idx, batch):
             return jit_step(state, batch)
@@ -102,9 +117,10 @@ def main(argv=None):
             lr_fn=lr_warmup_cosine(args.lr, min(500, args.steps // 10 + 1),
                                    args.steps),
             wd=args.wd, reduction=args.reduction,
-            loss_impl=args.loss_impl)
+            loss_impl=args.loss_impl, impl=args.impl,
+            precision=args.precision)
         state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
-        jit_step = jax.jit(TS.make_train_step(tc))
+        jit_step = donated_jit(TS.make_train_step(tc))
 
         def run_step(state, idx, batch):
             return jit_step(state, batch, jnp.asarray(idx))
@@ -115,19 +131,36 @@ def main(argv=None):
         state, start, _ = CK.restore(args.ckpt_dir, like)
         print(f"resumed from step {start}")
 
+    def to_device(item):
+        epoch, step, idx, batch = item
+        # jnp.asarray dispatches the async H2D copy on the producer thread
+        return (epoch, step, jnp.asarray(idx),
+                {k: jnp.asarray(v) for k, v in batch.items()})
+
+    host_steps = (it for it in loader.steps(args.steps) if it[1] >= start)
+    stream = (DevicePrefetcher(host_steps, depth=args.prefetch,
+                               transform=to_device)
+              if args.prefetch > 0 else map(to_device, host_steps))
+
     t0 = time.time()
-    for epoch, step, idx, batch in loader.steps(args.steps):
-        if step < start:
-            continue
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        state, m = run_step(state, idx, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            msg = {k: round(float(v), 5) for k, v in m.items()}
-            print(f"step {step:5d} epoch {epoch} {json.dumps(msg)}",
-                  flush=True)
-        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
-                    metadata={"arch": args.arch, "version": args.version})
+    first = True
+    try:
+        for epoch, step, idx, batch in stream:
+            state, m = run_step(state, idx, batch)
+            if first:
+                # params/opt/FCCO-u must stay f32 masters under any policy
+                TS.check_state_dtypes(state)
+                first = False
+            if step % args.log_every == 0 or step == args.steps - 1:
+                msg = {k: round(float(v), 5) for k, v in m.items()}
+                print(f"step {step:5d} epoch {epoch} {json.dumps(msg)}",
+                      flush=True)
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
+                        metadata={"arch": args.arch, "version": args.version})
+    finally:
+        if isinstance(stream, DevicePrefetcher):
+            stream.close()  # release the producer on early exit too
     dt = time.time() - t0
     print(f"trained {args.steps - start} steps in {dt:.1f}s "
           f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")

@@ -186,7 +186,9 @@ def naive_attention(q, k, v, *, causal=True, window=0, q_offset=0):
 def attention(params, spec: AttnSpec, x, *, positions=None, kv_x=None,
               impl="chunked"):
     """Self- (kv_x=None) or cross- (kv_x=(B,Skv,d_kv)) attention, training
-    mode (no cache)."""
+    mode (no cache).  ``impl``: "chunked" (pure-JAX online softmax),
+    "flash" (Pallas kernel forward + chunked remat backward; interpret
+    mode off-TPU), or "naive" (O(S^2)-memory oracle)."""
     B, S, _ = x.shape
     q = _project_q(params, spec, x)
     cross = kv_x is not None
@@ -203,8 +205,14 @@ def attention(params, spec: AttnSpec, x, *, positions=None, kv_x=None,
     if impl == "chunked":
         out = chunked_attention(q, k, v, causal=causal, window=window,
                                 q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
-    else:
+    elif impl == "flash":
+        from repro.kernels.flash_attention import flash_mha
+        out = flash_mha(q, k, v, causal=causal, window=window,
+                        q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+    elif impl == "naive":
         out = naive_attention(q, k, v, causal=causal, window=window)
+    else:
+        raise ValueError(f"unknown attention impl {impl!r}")
     out = out.reshape(B, S, spec.n_heads * spec.head_dim)
     return jnp.einsum("bsh,hd->bsd", out, params["wo"].astype(x.dtype))
 

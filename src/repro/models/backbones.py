@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, InputShape
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.models import precision as PR
 from repro.models import sharding as SH
 from repro.models import moe as M
 from repro.models import ssm as SSM
@@ -160,11 +161,14 @@ def init_params(rng, cfg: ArchConfig) -> Dict[str, Any]:
 # ===========================================================================
 
 def forward_hidden(params, cfg: ArchConfig, batch, *, impl="chunked",
-                   window_override=None):
+                   window_override=None, precision=PR.F32):
     """Token path -> final hidden states (B, S, d), pre-final-norm residual
-    stream normalized at the end.  Extra losses (MoE aux) in second output."""
+    stream normalized at the end.  Extra losses (MoE aux) in second output.
+    ``precision``: mixed-precision policy; the residual stream runs in its
+    compute dtype (params stay f32 masters, cast at use sites)."""
     tokens = batch["tokens"]
-    x = L.embed_tokens(params["embed"], tokens)
+    x = L.embed_tokens(params["embed"], tokens,
+                       dtype=precision.compute_dtype)
     x = SH.constrain(x, ("batch", "seq", None))
     aux = {}
     fam = cfg.family
@@ -200,7 +204,8 @@ def forward_hidden(params, cfg: ArchConfig, batch, *, impl="chunked",
         aux = {"moe_lb": lb / n_super, "moe_z": z / n_super}
 
     elif fam == "vlm":
-        img = jnp.einsum("bnv,vd->bnd", batch["image_embeds"],
+        img = jnp.einsum("bnv,vd->bnd",
+                         PR.cast_compute(precision, batch["image_embeds"]),
                          params["img_proj"].astype(x.dtype))
 
         def body(h, p):
@@ -243,7 +248,8 @@ def forward_hidden(params, cfg: ArchConfig, batch, *, impl="chunked",
         x, _ = L.scan_layers(body, x, params["units"], remat=True)
 
     elif fam == "audio":
-        enc = encode_frames(params, cfg, batch["frames"], impl=impl)
+        enc = encode_frames(params, cfg, batch["frames"], impl=impl,
+                            precision=precision)
 
         def body(h, p):
             return T.apply_block(p, cfg, h, spec=spec, kv_x=enc,
@@ -255,9 +261,11 @@ def forward_hidden(params, cfg: ArchConfig, batch, *, impl="chunked",
     return L.rmsnorm(params["final_norm"], x), aux
 
 
-def encode_frames(params, cfg: ArchConfig, frames, *, impl="chunked"):
+def encode_frames(params, cfg: ArchConfig, frames, *, impl="chunked",
+                  precision=PR.F32):
     """Audio encoder over stub frame embeddings (B, S_enc, d_model)."""
     enc_spec = T.attn_spec(cfg, causal=True)  # streaming-friendly encoder
+    frames = PR.cast_compute(precision, frames)
 
     def body(h, p):
         return T.apply_block(p, cfg, h, spec=enc_spec, impl=impl), None
@@ -272,8 +280,10 @@ def logits_from_hidden(params, cfg: ArchConfig, x):
     return L.unembed(params["lm_head"], x)
 
 
-def lm_loss(params, cfg: ArchConfig, batch, *, impl="chunked"):
-    x, aux = forward_hidden(params, cfg, batch, impl=impl)
+def lm_loss(params, cfg: ArchConfig, batch, *, impl="chunked",
+            precision=PR.F32):
+    x, aux = forward_hidden(params, cfg, batch, impl=impl,
+                            precision=precision)
     table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     loss = L.vocab_parallel_ce(x, table, batch["labels"],
                                tied=cfg.tie_embeddings,
@@ -293,26 +303,36 @@ def prefill_logits(params, cfg: ArchConfig, batch, *, impl="chunked"):
 # Contrastive towers (the paper's technique as a first-class objective)
 # ===========================================================================
 
-def encode(params, cfg: ArchConfig, batch, *, impl="chunked"):
+def encode(params, cfg: ArchConfig, batch, *, impl="chunked",
+           precision=PR.F32):
     """Backbone tower -> (B, CONTRASTIVE_DIM) unnormalized embedding."""
     if cfg.family == "audio":
-        x = encode_frames(params, cfg, batch["frames"], impl=impl)
+        x = encode_frames(params, cfg, batch["frames"], impl=impl,
+                          precision=precision)
     else:
-        x, _ = forward_hidden(params, cfg, batch, impl=impl)
+        x, _ = forward_hidden(params, cfg, batch, impl=impl,
+                              precision=precision)
     pooled = jnp.mean(x, axis=1)
-    return jnp.einsum("bd,de->be", pooled, params["ctr_proj"].astype(x.dtype))
+    out = jnp.einsum("bd,de->be", pooled,
+                     params["ctr_proj"].astype(x.dtype))
+    return PR.cast_output(precision, out)
 
 
-def encode_pair(params, cfg: ArchConfig, batch, *, impl="chunked"):
+def encode_pair(params, cfg: ArchConfig, batch, *, impl="chunked",
+                precision=PR.F32):
     """Two towers: backbone over tokens/frames vs. stub paired-modality
-    embeddings (B, PAIR_DIM) through a learned projection."""
+    embeddings (B, PAIR_DIM) through a learned projection.  ``impl`` and
+    ``precision`` reach the CLIP towers too (TrainStepConfig.impl was
+    previously dropped for the clip family)."""
     if cfg.family == "clip":
         from repro.models import clip as C
-        return C.encode_pair(params, cfg, batch)
-    e2 = encode(params, cfg, batch, impl=impl)
-    e1 = jnp.einsum("bp,pe->be", batch["pair_embeds"],
-                    params["pair_proj"].astype(e2.dtype))
-    return e1, e2
+        return C.encode_pair(params, cfg, batch, impl=impl,
+                             precision=precision)
+    e2 = encode(params, cfg, batch, impl=impl, precision=precision)
+    e1 = jnp.einsum("bp,pe->be",
+                    PR.cast_compute(precision, batch["pair_embeds"]),
+                    params["pair_proj"].astype(precision.compute_dtype))
+    return PR.cast_output(precision, e1), e2
 
 
 # ===========================================================================

@@ -4,6 +4,12 @@ Text tower: 12-layer pre-norm transformer (causal, as in CLIP), pooled at
 the last token.  Vision tower: ViT or ResNet50 per config.  Returns
 *unnormalized* embeddings; L2 normalization happens in the loss layer
 (repro.core) so its gradient is part of the contrastive VJP.
+
+Both towers take ``impl`` (attention implementation: "chunked"/"flash"/
+"naive") and ``precision`` (mixed-precision policy, models.precision):
+with ``bf16`` the tower matmuls/activations run in bf16 while params stay
+f32 masters and the embeddings are cast back to f32 at the tower exit —
+the loss layer (l2_normalize + the exact LSE engine) is always f32.
 """
 from __future__ import annotations
 
@@ -12,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as L
+from repro.models import precision as PR
 from repro.models import transformer as T
 from repro.models import vit as V
 from repro.models import resnet as R
@@ -37,26 +44,38 @@ def init_clip(rng, cfg: ArchConfig):
     }
 
 
-def encode_image(params, cfg: ArchConfig, images):
+def encode_image(params, cfg: ArchConfig, images, *, impl="chunked",
+                 precision=PR.F32):
     c = cfg.clip
     if c.vision_arch == "vit":
-        return V.apply_vit(params["vision"], c, images)
-    return R.apply_resnet(params["vision"], c, images)
+        return V.apply_vit(params["vision"], c, images, impl=impl,
+                           precision=precision)
+    # ResNet has no attention; impl is a no-op for it by design.
+    return R.apply_resnet(params["vision"], c, images, precision=precision)
 
 
-def encode_text(params, cfg: ArchConfig, tokens):
+def encode_text(params, cfg: ArchConfig, tokens, *, impl="chunked",
+                precision=PR.F32):
     """tokens: (B, context_length) int32."""
-    x = L.embed_tokens(params["tok_embed"], tokens)
+    x = L.embed_tokens(params["tok_embed"], tokens,
+                       dtype=precision.compute_dtype)
     x = x + params["pos_embed"].astype(x.dtype)
-    x = T.apply_stack(params["text_blocks"], cfg, x, mlp="gelu")
+    x = T.apply_stack(params["text_blocks"], cfg, x, mlp="gelu", impl=impl,
+                      precision=precision)
     x = L.rmsnorm(params["text_norm"], x)
     pooled = x[:, -1]  # last token (synthetic data: fixed-length captions)
-    return jnp.einsum("bd,de->be", pooled, params["text_proj"].astype(x.dtype))
+    out = jnp.einsum("bd,de->be", pooled,
+                     params["text_proj"].astype(x.dtype))
+    return PR.cast_output(precision, out)
 
 
-def encode_pair(params, cfg: ArchConfig, batch):
+def encode_pair(params, cfg: ArchConfig, batch, *, impl="chunked",
+                precision=PR.F32):
     """batch: {"images": (B,H,W,3), "texts": (B,ctx)} ->
-    (e1 (B,E), e2 (B,E)) unnormalized image/text embeddings."""
-    e1 = encode_image(params, cfg, batch["images"])
-    e2 = encode_text(params, cfg, batch["texts"])
+    (e1 (B,E), e2 (B,E)) unnormalized image/text embeddings (cast to the
+    policy output dtype — f32 — at the tower exits)."""
+    e1 = encode_image(params, cfg, batch["images"], impl=impl,
+                      precision=precision)
+    e2 = encode_text(params, cfg, batch["texts"], impl=impl,
+                     precision=precision)
     return e1, e2

@@ -126,8 +126,12 @@ def apply_rope(x, positions, theta):
 # Embedding / unembedding
 # ---------------------------------------------------------------------------
 
-def embed_tokens(table, tokens):
-    return jnp.take(table, tokens, axis=0)
+def embed_tokens(table, tokens, dtype=None):
+    """Token lookup.  ``dtype``: activation (compute) dtype of the returned
+    embeddings — the entry point of a mixed-precision policy; the table
+    itself stays in its storage dtype (f32 master weights)."""
+    x = jnp.take(table, tokens, axis=0)
+    return x if dtype is None else x.astype(dtype)
 
 
 def unembed(table_or_w, x, transpose=False):

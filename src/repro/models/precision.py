@@ -1,0 +1,66 @@
+"""Mixed-precision policy for the model hot loop.
+
+A ``Precision`` fixes the three dtypes of a tower forward/backward:
+
+- ``param_dtype``  — storage dtype of the master weights (always f32 here;
+  the optimizer moments and the FCCO u state mirror it),
+- ``compute_dtype``— activation/matmul dtype inside the towers,
+- ``output_dtype`` — dtype of the tower embeddings handed to the loss layer.
+
+The f32 boundary sits exactly at the tower exit: ``losses.l2_normalize``
+casts to f32 and the whole FCCO loss engine (PR 2's exact log-sum-exp
+contract) runs in f32 regardless of the policy, so bf16 compute never
+touches the log-domain loss numerics.  Norms (rmsnorm/layernorm/groupnorm),
+RoPE and every attention softmax/accumulation already compute internally in
+f32 and cast back, so the ``bf16`` policy only narrows the matmul/activation
+traffic — the paper's resource-limited setting where memory, not math,
+bounds the per-device batch.
+
+Params are *stored* f32 and cast to the activation dtype at use sites
+(``p.astype(x.dtype)``, the repo-wide convention), so casting the block
+input once at the tower entry propagates the policy through every layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Precision:
+    name: str
+    param_dtype: jnp.dtype = jnp.float32
+    compute_dtype: jnp.dtype = jnp.float32
+    output_dtype: jnp.dtype = jnp.float32
+
+
+F32 = Precision("f32")
+BF16 = Precision("bf16", compute_dtype=jnp.bfloat16)
+
+POLICIES = {"f32": F32, "bf16": BF16}
+
+
+def get_precision(p: Optional[Union[str, Precision]]) -> Precision:
+    """None -> f32; str -> registry lookup; Precision -> itself."""
+    if p is None:
+        return F32
+    if isinstance(p, Precision):
+        return p
+    if p not in POLICIES:
+        raise KeyError(f"unknown precision {p!r}; known: {sorted(POLICIES)}")
+    return POLICIES[p]
+
+
+def cast_compute(policy: Precision, x):
+    """Cast a floating activation to the policy compute dtype (tower entry)."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return x.astype(policy.compute_dtype)
+    return x
+
+
+def cast_output(policy: Precision, x):
+    """Cast a tower output to the policy output dtype (tower exit / the
+    f32 loss boundary)."""
+    return x.astype(policy.output_dtype)

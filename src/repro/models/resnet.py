@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.configs.base import CLIPConfig
 from repro.models import layers as L
+from repro.models import precision as PR
 
 BOTTLENECK_COUNTS = {50: (3, 4, 6, 3)}
 
@@ -86,9 +87,11 @@ def init_resnet(rng, c: CLIPConfig):
     return p
 
 
-def apply_resnet(params, c: CLIPConfig, images):
-    """images (B,H,W,3) -> (B, embed_dim)."""
-    x = conv(images, params["stem"], stride=2)
+def apply_resnet(params, c: CLIPConfig, images, *, precision=PR.F32):
+    """images (B,H,W,3) -> (B, embed_dim).  ``precision``: activation dtype
+    policy — convs/matmuls run in its compute dtype (GroupNorm stays f32
+    internally), output cast back at the tower exit."""
+    x = conv(PR.cast_compute(precision, images), params["stem"], stride=2)
     x = jax.nn.relu(groupnorm(params["stem_n"], x))
     x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
                               (1, 2, 2, 1), "SAME")
@@ -98,4 +101,5 @@ def apply_resnet(params, c: CLIPConfig, images):
             stride = 2 if (bi == 0 and si > 0) else 1
             x = apply_bottleneck(params[f"stage{si}"][bi], x, stride)
     pooled = jnp.mean(x, axis=(1, 2))
-    return jnp.einsum("bc,ce->be", pooled, params["proj"].astype(x.dtype))
+    out = jnp.einsum("bc,ce->be", pooled, params["proj"].astype(x.dtype))
+    return PR.cast_output(precision, out)

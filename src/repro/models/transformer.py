@@ -114,7 +114,13 @@ def init_stack(rng, cfg: ArchConfig, n_layers, *, mlp="swiglu"):
 
 
 def apply_stack(stacked, cfg: ArchConfig, x, *, impl="chunked",
-                mlp="swiglu", causal=True, remat=True):
+                mlp="swiglu", causal=True, remat=True, precision=None):
+    """``precision``: optional ``models.precision.Precision`` policy — the
+    input is cast to its compute dtype once here and every block follows
+    (params cast to the activation dtype at use sites)."""
+    if precision is not None:
+        from repro.models import precision as PR
+        x = PR.cast_compute(precision, x)
     spec = attn_spec(cfg, causal=causal)
 
     def body(h, p):

@@ -8,6 +8,7 @@ import numpy as np
 from repro.configs.base import ArchConfig, CLIPConfig
 from repro.models import attention as A
 from repro.models import layers as L
+from repro.models import precision as PR
 
 
 def _vit_spec(c: CLIPConfig) -> A.AttnSpec:
@@ -51,10 +52,14 @@ def patchify(images, patch):
     return x.reshape(B, gh * gw, patch * patch * 3)
 
 
-def apply_vit(params, c: CLIPConfig, images):
-    """images: (B, H, W, 3) -> embeddings (B, embed_dim) (not normalized)."""
+def apply_vit(params, c: CLIPConfig, images, *, impl="chunked",
+              precision=PR.F32):
+    """images: (B, H, W, 3) -> embeddings (B, embed_dim) (not normalized).
+    ``impl`` selects the block attention ("chunked"/"flash"/"naive";
+    the ViT runs it non-causal); ``precision`` the activation dtype policy
+    (entry cast here, exit cast to the f32 loss boundary)."""
     spec = _vit_spec(c)
-    x = patchify(images, c.patch_size)
+    x = PR.cast_compute(precision, patchify(images, c.patch_size))
     x = jnp.einsum("bpd,dw->bpw", x, params["patch"].astype(x.dtype))
     cls = jnp.broadcast_to(params["cls"].astype(x.dtype),
                            (x.shape[0], 1, x.shape[-1]))
@@ -62,7 +67,7 @@ def apply_vit(params, c: CLIPConfig, images):
 
     def body(h, p):
         a = A.attention(p["attn"], spec, L.layernorm(p["n1"], h),
-                        impl="chunked")
+                        impl=impl)
         h = h + a
         h = h + L.gelu_mlp(p["mlp"], L.layernorm(p["n2"], h))
         return h, None
@@ -70,4 +75,5 @@ def apply_vit(params, c: CLIPConfig, images):
     x, _ = L.scan_layers(body, x, params["blocks"], remat=True)
     x = L.layernorm(params["final_norm"], x)
     pooled = x[:, 0]  # CLS token
-    return jnp.einsum("bw,we->be", pooled, params["proj"].astype(x.dtype))
+    out = jnp.einsum("bw,we->be", pooled, params["proj"].astype(x.dtype))
+    return PR.cast_output(precision, out)
