@@ -1,0 +1,62 @@
+"""Eval-engine micro-bench: streaming chunked top-k vs the dense oracle.
+
+Times the retrieval scan of the zero-shot eval engine (repro.eval) at a
+few (N, chunk) points and verifies exact index agreement with the dense
+lexicographic oracle on quantized inputs.  The derived column reports
+the peak similarity-intermediate ratio (chunk / N): the streaming scan's
+live block is (N, k + chunk) vs the oracle's (N, N).
+
+Run: PYTHONPATH=src python -m benchmarks.retrieval_bench
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _quantized(n, d, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(np.round(rng.randn(n, d) * 16) / 64.0, jnp.float32)
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready()           # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    from repro.eval import lex_topk, streaming_topk
+    rows = []
+    k = 10
+    for N, d, chunk in ((1024, 256, 256), (2048, 256, 512),
+                        (4096, 128, 512)):
+        e1 = _quantized(N, d, 0)
+        e2 = _quantized(N, d, 1)
+        stream = jax.jit(lambda a, b, c=chunk: streaming_topk(
+            a, b, k, chunk=c))
+        dense = jax.jit(lambda a, b: lex_topk(
+            jnp.einsum("nd,md->nm", a, b), k))
+        us_s = _time(stream, e1, e2)
+        us_d = _time(dense, e1, e2)
+        _, i_s = stream(e1, e2)
+        _, i_d = dense(e1, e2)
+        exact = bool(np.array_equal(np.asarray(i_s), np.asarray(i_d)))
+        rows.append((f"retrieval_stream_N{N}_c{chunk}", us_s,
+                     f"mem_ratio={(k + chunk) / N:.3f};exact={exact}"))
+        rows.append((f"retrieval_dense_N{N}", us_d, "oracle"))
+        if not exact:
+            raise AssertionError(f"streaming != dense oracle at N={N}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -10,6 +10,7 @@
     step_bench        -> end-to-end step throughput (f32-dense vs
                          bf16-flash-fused; also emits BENCH_step.json via
                          ``python -m benchmarks.step_bench``)
+    retrieval_bench   -> eval-engine streaming top-k vs dense oracle
     roofline_table    -> deliverable (g) table from the dry-run sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
@@ -28,9 +29,10 @@ def main() -> None:
     args = ap.parse_args()
     steps = 40 if args.quick else 120
 
-    from benchmarks import (fig3_comm, kernel_bench, roofline_table,
-                            scaling_model, step_bench, table3_inner_lr,
-                            table4_temperature, table5_optimizer)
+    from benchmarks import (fig3_comm, kernel_bench, retrieval_bench,
+                            roofline_table, scaling_model, step_bench,
+                            table3_inner_lr, table4_temperature,
+                            table5_optimizer)
     benches = [
         ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
         ("table4_temperature", lambda: table4_temperature.run(steps=steps)),
@@ -40,6 +42,7 @@ def main() -> None:
         ("kernel_bench", kernel_bench.run),
         ("step_bench", lambda: step_bench.run(steps=5 if args.quick
                                               else 12)),
+        ("retrieval_bench", retrieval_bench.run),
         ("roofline_table", roofline_table.run),
     ]
     print("name,us_per_call,derived")

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import latest_step, restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    available_steps, latest_step, restore, restore_subtree, save,
+)

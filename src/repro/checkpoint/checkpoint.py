@@ -8,10 +8,13 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Optional, Tuple
+import re
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
 
 
 def _path_str(path) -> str:
@@ -46,32 +49,82 @@ def save(directory: str, tree: Any, step: int,
     return path_npz
 
 
+def _is_complete(directory: str, step: int) -> bool:
+    return (os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+            and os.path.exists(os.path.join(directory,
+                                            f"ckpt_{step:08d}.json")))
+
+
+def available_steps(directory: str) -> List[int]:
+    """All *complete* checkpoint steps in ``directory``, ascending.  A
+    step counts only when both the .npz and the .json sidecar exist —
+    partial writes (a crash between the two) are skipped."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        m = _CKPT_RE.match(name)
+        if m and _is_complete(directory, int(m.group(1))):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
 def latest_step(directory: str) -> Optional[int]:
+    """Newest restorable step.  The ``latest`` marker file is only a
+    hint: it is trusted when it points at a complete (npz + json) pair;
+    when it is missing, corrupt, or stale (e.g. a partially written or
+    deleted step), the directory is scanned and the newest complete pair
+    wins.  Returns None when nothing restorable exists."""
     p = os.path.join(directory, "latest")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return int(f.read().strip())
+    if os.path.exists(p):
+        try:
+            with open(p) as f:
+                step = int(f.read().strip())
+        except ValueError:
+            step = None
+        if step is not None and _is_complete(directory, step):
+            return step
+    steps = available_steps(directory)
+    return steps[-1] if steps else None
 
 
-def restore(directory: str, tree_like: Any,
-            step: Optional[int] = None) -> Tuple[Any, int, Dict]:
-    """Restore into the structure of ``tree_like`` (shapes must match)."""
+def _load(directory: str, step: Optional[int]):
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
     data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
     with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
         meta = json.load(f)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    return data, step, meta
+
+
+def _fill(tree_like: Any, data, key_prefix: str = "") -> Any:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree_like)
     leaves = []
     for path, leaf in flat:
-        key = _path_str(path)
+        key = key_prefix + _path_str(path)
         arr = data[key]
         if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"shape mismatch at {key}: "
                              f"{arr.shape} vs {leaf.shape}")
         leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(
+    return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(tree_like), leaves)
-    return tree, step, meta["metadata"]
+
+
+def restore(directory: str, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    data, step, meta = _load(directory, step)
+    return _fill(tree_like, data), step, meta["metadata"]
+
+
+def restore_subtree(directory: str, tree_like: Any, prefix: str,
+                    step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore only the sub-pytree saved under top-level key ``prefix``
+    (e.g. ``"params"`` out of a full train-state checkpoint), into the
+    structure of ``tree_like``.  Lets the eval launcher restore tower
+    weights without reconstructing the optimizer/FCCO state shapes."""
+    data, step, meta = _load(directory, step)
+    pre = f"{prefix}/" if prefix else ""
+    return _fill(tree_like, data, pre), step, meta["metadata"]

@@ -81,10 +81,20 @@ def shard_map(f, mesh, in_specs, out_specs):
                       check_rep=False)
 
 
-def _gather(x, axes):
+def gather_axes(x, axes):
+    """Tiled ALL_GATHER over possibly-multiple mesh axes, for use inside
+    ``shard_map``.  Public shared helper: the loss engine gathers the
+    global feature columns with it, and the eval engine's streaming
+    retrieval gathers its similarity columns under the *same* axes, so
+    both sides of the rectangular (local-rows x gathered-cols) contract
+    shard identically.  Gather order is axis order, so the result rows
+    are in global (shard-concatenated) order."""
     for ax in axes:
         x = jax.lax.all_gather(x, ax, tiled=True)
     return x
+
+
+_gather = gather_axes
 
 
 def _psum(x, axes):
@@ -112,6 +122,9 @@ def _axis_prod(axes):
     for ax in axes:
         out *= axis_size(ax)
     return out
+
+
+axis_prod = _axis_prod   # public alias (shared with the eval engine)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,5 @@
 from repro.data.pipeline import DevicePrefetcher, ShardedLoader  # noqa: F401
 from repro.data.synthetic import (  # noqa: F401
     ContrastiveDataset, LMDataset, PairedEmbeddingDataset,
+    ZeroShotEvalDataset,
 )

@@ -1,0 +1,30 @@
+"""repro.eval — sharded zero-shot evaluation engine.
+
+Measures what the paper reports: zero-shot classification (prompt-
+ensemble text classifier heads) and exact global image<->text retrieval
+R@k, over embeddings extracted with the training tower fast path.  The
+retrieval scan streams rectangular (local-rows x gathered-cols)
+similarity blocks under the same shard_map axes as the loss engine —
+the (N, N) similarity matrix never materializes in HBM (see
+repro.eval.retrieval for the memory contract, repro.eval.metrics for
+the deterministic tie rule, and repro.eval.planted for the known-answer
+oracle)."""
+from repro.eval.classifier import (  # noqa: F401
+    build_head, classify, zero_shot_metrics,
+)
+from repro.eval.engine import (  # noqa: F401
+    ClipEvaluator, evaluate_embeddings, evaluate_planted,
+)
+from repro.eval.extraction import (  # noqa: F401
+    extract_pair_embeddings, make_extract_fn,
+)
+from repro.eval.metrics import (  # noqa: F401
+    contrastive_eval_loss, lex_topk, recall_at_k, topk_accuracy,
+)
+from repro.eval.retrieval import (  # noqa: F401
+    CHUNK, retrieval_recalls, retrieval_topk, sharded_retrieval_recalls,
+    sharded_retrieval_topk, streaming_topk,
+)
+from repro.eval.templates import (  # noqa: F401
+    DEFAULT_TEMPLATES, PromptTemplate, render_prompt_bank,
+)

@@ -1,0 +1,70 @@
+"""Zero-shot classification via prompt-ensemble text classifier heads.
+
+The head for a class set is built the OpenCLIP way: every (template,
+class) prompt is encoded, each prompt embedding is L2-normalized, the T
+template embeddings of a class are averaged, and the average is
+renormalized — giving a (C, E) unit-row matrix.  Classification of
+normalized image embeddings is then one (N, E) @ (E, C) matmul (C is
+small; no streaming needed on this side) followed by the shared
+deterministic top-k (repro.eval.metrics).
+
+Heads are cached per (cache_key, class set, template bank): pass a
+``cache`` dict plus a ``cache_key`` identifying the parameters (e.g. the
+train step of the checkpoint) — repeated evals over the same class set
+and params reuse the head; the rendered prompt *tokens* are additionally
+memoized globally (repro.eval.templates) across params changes.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as LS
+from repro.eval import metrics as M
+from repro.eval.templates import (DEFAULT_TEMPLATES, PromptTemplate,
+                                  render_prompt_bank,
+                                  template_bank_signature)
+
+
+def build_head(encode_text_fn: Callable, token_bank: np.ndarray, *,
+               context_length: int,
+               templates: Sequence[PromptTemplate] = DEFAULT_TEMPLATES,
+               cache: Optional[dict] = None, cache_key=None) -> jnp.ndarray:
+    """Prompt-ensemble classifier head.
+
+    encode_text_fn: (P, context_length) int32 -> (P, E) unnormalized text
+    embeddings (any text tower: CLIP, planted, ...).  token_bank:
+    (C, token_len) class-token bank.  Returns the (C, E) unit-row head."""
+    token_bank = np.asarray(token_bank, np.int32)
+    if cache is not None:
+        key = (cache_key, token_bank.tobytes(), token_bank.shape,
+               template_bank_signature(templates), context_length)
+        hit = cache.get(key)
+        if hit is not None:
+            return hit
+    prompts = render_prompt_bank(token_bank, templates, context_length)
+    T, C, L = prompts.shape
+    emb = encode_text_fn(jnp.asarray(prompts.reshape(T * C, L)))
+    emb = LS.l2_normalize(emb).reshape(T, C, -1)
+    head = LS.l2_normalize(jnp.mean(emb, axis=0))
+    if cache is not None:
+        cache[key] = head
+    return head
+
+
+def classify(image_emb: jnp.ndarray, head: jnp.ndarray) -> jnp.ndarray:
+    """(N, E) normalized image embeddings x (C, E) head -> (N, C) logits."""
+    return jnp.einsum("ne,ce->nc", image_emb.astype(jnp.float32),
+                      head.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+
+
+def zero_shot_metrics(image_emb: jnp.ndarray, head: jnp.ndarray,
+                      labels: jnp.ndarray,
+                      ks: Sequence[int] = (1, 5)) -> dict:
+    """Zero-shot top-k accuracy: {f"zs_top{k}": scalar}."""
+    acc = M.topk_accuracy(classify(image_emb, head),
+                          jnp.asarray(labels), ks)
+    return {f"zs_{k}": v for k, v in acc.items()}

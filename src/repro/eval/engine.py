@@ -1,0 +1,136 @@
+"""Eval engine assembly: towers -> embeddings -> zero-shot + retrieval.
+
+``ClipEvaluator`` is the reusable evaluator (CLI and the in-training
+periodic hook): it jits the tower forward and the text-head encode once
+at construction (params stay arguments, so per-step evals never
+recompile), memoizes rendered prompt banks per class set, and computes
+
+    zs_top{k}        prompt-ensemble zero-shot classification accuracy
+    i2t_r@{k} / t2i_r@{k}   exact global retrieval recall (streaming
+                            chunked top-k — no (N, N) matrix in HBM)
+    eval_loss        (optional) the GCL batch value at a reference tau,
+                     honoring the training ``loss_impl`` knob
+
+``evaluate_embeddings`` is the tower-independent core shared with the
+planted known-answer path and the sharded parity battery.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.eval import classifier as CL
+from repro.eval import extraction as EX
+from repro.eval import metrics as M
+from repro.eval import retrieval as RT
+from repro.eval.templates import DEFAULT_TEMPLATES
+from repro.models import backbones as BB
+from repro.models import precision as PR
+
+
+def evaluate_embeddings(e1n, e2n, labels=None, head=None, *,
+                        ks: Sequence[int] = (1, 5, 10),
+                        top_ks: Sequence[int] = (1, 5),
+                        chunk: int = RT.CHUNK,
+                        loss_impl: Optional[str] = None, tau: float = 0.07,
+                        mesh=None, axes=None) -> dict:
+    """Metrics from already-normalized (N, E) embeddings.  With ``mesh``
+    + ``axes`` the retrieval scan runs sharded (rows over ``axes``,
+    columns gathered), bit-identical to the single-device scan."""
+    e1n = jnp.asarray(e1n)
+    e2n = jnp.asarray(e2n)
+    out = {}
+    if head is not None:
+        out.update(CL.zero_shot_metrics(e1n, head, jnp.asarray(labels),
+                                        top_ks))
+    if mesh is not None:
+        out.update(RT.sharded_retrieval_recalls(mesh, axes, e1n, e2n, ks,
+                                                chunk=chunk))
+    else:
+        out.update(RT.retrieval_recalls(e1n, e2n, ks, chunk=chunk))
+    if loss_impl is not None:
+        out["eval_loss"] = M.contrastive_eval_loss(e1n, e2n, tau,
+                                                   loss_impl=loss_impl)
+    return {k: float(v) for k, v in out.items()}
+
+
+class ClipEvaluator:
+    """Zero-shot + retrieval evaluator over a class-structured split for
+    the clip family, reusing the tower fast path (``impl``/``precision``
+    consistent with training)."""
+
+    def __init__(self, cfg, dataset, *, impl: str = "chunked",
+                 precision=None, batch_size: int = 64, prefetch: int = 2,
+                 ks: Sequence[int] = (1, 5, 10),
+                 top_ks: Sequence[int] = (1, 5), chunk: int = RT.CHUNK,
+                 templates=DEFAULT_TEMPLATES,
+                 loss_impl: Optional[str] = None, tau: float = 0.07):
+        if cfg.family != "clip":
+            raise ValueError("ClipEvaluator needs a clip-family arch; got "
+                             f"{cfg.family!r}")
+        from repro.models import clip as C
+        prec = PR.get_precision(precision or cfg.precision)
+        self.cfg = cfg
+        self.dataset = dataset
+        self.ks, self.top_ks = tuple(ks), tuple(top_ks)
+        self.chunk = chunk
+        self.templates = templates
+        self.loss_impl, self.tau = loss_impl, tau
+        self.batch_size, self.prefetch = batch_size, prefetch
+        self.head_cache: dict = {}
+        self._head_key = None
+        self._extract = EX.make_extract_fn(
+            lambda p, b: BB.encode_pair(p, cfg, b, impl=impl,
+                                        precision=prec))
+        self._encode_text = jax.jit(
+            lambda p, t: C.encode_text(p, cfg, t, impl=impl,
+                                       precision=prec))
+
+    def evaluate(self, params, *, cache_key=None) -> dict:
+        """Full eval pass.  ``cache_key``: identity of ``params`` (e.g.
+        the train step) — repeated evals at the same key reuse the
+        classifier head for this class set."""
+        e1n, e2n = EX.extract_pair_embeddings(
+            None, params, self.dataset, batch_size=self.batch_size,
+            prefetch=self.prefetch, jit_fn=self._extract)
+        if cache_key != self._head_key:
+            # heads are params-dependent: a new key (new train step) can
+            # never hit old entries — drop them instead of accumulating
+            # one pinned (C, E) array per periodic eval
+            self.head_cache.clear()
+            self._head_key = cache_key
+        head = CL.build_head(
+            lambda t: self._encode_text(params, t),
+            self.dataset.tok_base,
+            context_length=self.dataset.context_length,
+            templates=self.templates,
+            cache=self.head_cache if cache_key is not None else None,
+            cache_key=cache_key)
+        labels = getattr(self.dataset, "labels", None)
+        if labels is None:
+            labels = self.dataset.classes
+        return evaluate_embeddings(
+            e1n, e2n, labels, head, ks=self.ks, top_ks=self.top_ks,
+            chunk=self.chunk, loss_impl=self.loss_impl, tau=self.tau)
+
+
+def evaluate_planted(params, dataset, *, ks: Sequence[int] = (1, 5, 10),
+                     top_ks: Sequence[int] = (1, 5),
+                     chunk: int = RT.CHUNK, batch_size: int = 64,
+                     templates=DEFAULT_TEMPLATES,
+                     loss_impl: Optional[str] = None,
+                     mesh=None, axes=None) -> dict:
+    """End-to-end eval through the planted closed-form towers (params as
+    restored from a ``make_planted_checkpoint`` checkpoint): the metrics
+    must equal ``planted.known_answers(dataset)`` exactly."""
+    from repro.eval import planted as PL
+    e1n, e2n = EX.extract_pair_embeddings(
+        PL.encode_pair, params, dataset, batch_size=batch_size)
+    head = CL.build_head(
+        lambda t: PL.encode_text(params, t), dataset.tok_base,
+        context_length=dataset.context_length, templates=templates)
+    return evaluate_embeddings(
+        e1n, e2n, dataset.labels, head, ks=ks, top_ks=top_ks, chunk=chunk,
+        loss_impl=loss_impl, mesh=mesh, axes=axes)

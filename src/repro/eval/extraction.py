@@ -1,0 +1,77 @@
+"""Sharded embedding extraction over an eval split.
+
+Reuses the tower fast path end to end: the caller supplies an
+``encode_pair_fn(params, batch)`` built on ``backbones.encode_pair`` with
+the training-consistent ``impl`` (flash attention) and ``precision``
+(bf16 policy) knobs, extraction jits it **once** at a fixed padded batch
+shape (params stay an argument, so the in-training eval hook never
+recompiles as they change), and streams host batches through
+``data.pipeline.DevicePrefetcher`` so batch assembly + H2D overlap the
+tower forward.
+
+Ragged tail contract: the last batch is padded up to ``batch_size`` by
+repeating index 0; the padded rows are computed and *discarded* before
+concatenation, so the returned arrays are exactly (n, E) and padding can
+never leak into metrics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses as LS
+from repro.data.pipeline import DevicePrefetcher
+
+
+def extract_pair_embeddings(encode_pair_fn: Callable, params, dataset, *,
+                            batch_size: int = 64, prefetch: int = 2,
+                            jit_fn=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Run the two towers over the whole split.
+
+    encode_pair_fn: (params, batch) -> (e1, e2) unnormalized; dataset:
+    ``.n`` + ``.batch(idx)``.  Returns (e1n, e2n) host f32 (n, E),
+    L2-normalized (the loss layer's own normalization, in f32 under any
+    tower precision policy).  ``jit_fn``: pass a prebuilt jitted fn (see
+    ``make_extract_fn``) to share compilation across calls."""
+    n = int(dataset.n)
+    batch_size = min(batch_size, n)
+    jfn = jit_fn if jit_fn is not None else make_extract_fn(encode_pair_fn)
+
+    def host_batches():
+        for start in range(0, n, batch_size):
+            idx = np.arange(start, min(start + batch_size, n))
+            valid = len(idx)
+            if valid < batch_size:
+                idx = np.concatenate(
+                    [idx, np.zeros(batch_size - valid, idx.dtype)])
+            yield valid, dataset.batch(idx)
+
+    def to_device(item):
+        valid, batch = item
+        return valid, {k: jnp.asarray(v) for k, v in batch.items()}
+
+    stream = (DevicePrefetcher(host_batches(), depth=prefetch,
+                               transform=to_device)
+              if prefetch > 0 else map(to_device, host_batches()))
+    outs1, outs2 = [], []
+    try:
+        for valid, batch in stream:
+            e1n, e2n = jfn(params, batch)
+            outs1.append(np.asarray(e1n[:valid]))
+            outs2.append(np.asarray(e2n[:valid]))
+    finally:
+        if isinstance(stream, DevicePrefetcher):
+            stream.close()
+    return np.concatenate(outs1), np.concatenate(outs2)
+
+
+def make_extract_fn(encode_pair_fn: Callable):
+    """jit the tower pair forward + f32 L2 normalization once; reuse via
+    ``extract_pair_embeddings(..., jit_fn=...)`` across eval calls."""
+    def fwd(params, batch):
+        e1, e2 = encode_pair_fn(params, batch)
+        return LS.l2_normalize(e1), LS.l2_normalize(e2)
+    return jax.jit(fwd)

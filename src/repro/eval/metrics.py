@@ -1,0 +1,91 @@
+"""Metric primitives shared by the zero-shot classifier and retrieval.
+
+Deterministic tie rule (the exactness contract of the whole eval engine):
+every top-k selection orders candidates by **(score descending, index
+ascending)** — implemented as one lexicographic ``jax.lax.sort`` over the
+pair ``(-score, index)`` with ``num_keys=2``.  Because top-k under a fixed
+total order is a *selection* (merge + truncate is exact for any
+comparator), the streaming chunked scan in ``repro.eval.retrieval``
+produces bit-identical results to the dense oracle here, and the K-sharded
+scan matches the single-device one — no tolerance needed anywhere in the
+known-answer test battery.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def lex_topk(scores: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense top-k oracle under the (score desc, index asc) tie rule.
+
+    scores: (b, n) f32.  Returns (top_scores (b, k), top_idx (b, k)).
+    Materializes the full (b, n) score matrix — the streaming scan in
+    ``repro.eval.retrieval`` is the production path; this is the exact
+    reference it is tested against."""
+    b, n = scores.shape
+    k = min(k, n)
+    idx = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    neg, si = jax.lax.sort((-scores.astype(jnp.float32), idx),
+                           dimension=-1, num_keys=2)
+    return -neg[:, :k], si[:, :k]
+
+
+def recall_at_k(top_idx: jnp.ndarray, gold: jnp.ndarray,
+                ks: Sequence[int], valid: Optional[jnp.ndarray] = None,
+                prefix: str = "r@") -> dict:
+    """R@k from ranked candidate indices.
+
+    top_idx: (b, k_max) indices ordered best-first; gold: (b,) the correct
+    index per row; valid: optional (b,) bool mask (padded rows excluded
+    from the mean).  Returns {f"{prefix}{k}": scalar f32}."""
+    hits = top_idx == gold[:, None]                     # (b, k_max)
+    if valid is None:
+        denom = jnp.float32(top_idx.shape[0])
+        w = 1.0
+    else:
+        w = valid.astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(w), 1.0)
+    out = {}
+    for k in ks:
+        kk = min(k, top_idx.shape[1])
+        got = jnp.any(hits[:, :kk], axis=1).astype(jnp.float32)
+        out[f"{prefix}{k}"] = jnp.sum(got * w) / denom
+    return out
+
+
+def topk_accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  ks: Sequence[int] = (1, 5),
+                  valid: Optional[jnp.ndarray] = None) -> dict:
+    """Top-k classification accuracy under the shared tie rule.
+
+    logits: (b, C); labels: (b,) int.  Returns {f"top{k}": scalar}."""
+    _, idx = lex_topk(logits, max(ks))
+    return recall_at_k(idx, labels, ks, valid=valid, prefix="top")
+
+
+def contrastive_eval_loss(e1n, e2n, tau=0.07, *, loss_impl="dense",
+                          interpret=None):
+    """The GCL batch value over an eval set, log-domain (exact at any
+    tau): mean_i tau * log(mean_{j!=i} exp(z_ij)) averaged over both
+    sides.  ``loss_impl`` mirrors the training knob: "dense" builds the
+    (N, N) pair matrix via ``losses.row_stats`` (fine at eval-report
+    scale), "fused" streams it through the Pallas stats kernel."""
+    from repro.core import losses as LS
+    n = e1n.shape[0]
+    t = jnp.broadcast_to(jnp.asarray(tau, jnp.float32), (n,))
+    if loss_impl == "fused":
+        from repro.kernels.gcl_loss import gcl_pair_stats
+        from repro.kernels.ops import default_interpret
+        interp = default_interpret() if interpret is None else interpret
+        stats = LS.RowStats(*gcl_pair_stats(e1n, e2n, t, t,
+                                            interpret=interp))
+    elif loss_impl == "dense":
+        stats = LS.row_stats(e1n, e2n, e1n, e2n, t, t)
+    else:
+        raise ValueError(f"loss_impl must be 'dense' or 'fused', "
+                         f"got {loss_impl!r}")
+    lg1, lg2 = LS.log_g(stats)
+    return 0.5 * (jnp.mean(t * lg1) + jnp.mean(t * lg2))

@@ -1,0 +1,126 @@
+"""Planted closed-form towers: the known-answer anchor of the eval engine.
+
+A tiny parameterized two-tower "model" whose behavior on the
+``ZeroShotEvalDataset`` is *exact* in f32, so every eval metric is
+analytically determined (``known_answers``) — the end-to-end acceptance
+oracle for ``repro.launch.eval`` on a restored checkpoint:
+
+  * image tower: block-mean downsample to the 8x8x3 latent (exact on the
+    constant-block planted images), flatten, and one linear ``img_proj``
+    (the identity in the reference checkpoint) — image i maps to its
+    class's one-hot prototype bit-exactly;
+  * text tower: match every contiguous ``token_len``-gram of the caption
+    against the ``tok_base`` class bank and emit the matched class's row
+    of ``text_table`` (the prototype).  Position-independent matching is
+    what makes prompt templates transparent: every template of class c
+    encodes to the same prototype, so the prompt-ensemble head *is* the
+    prototype matrix.
+
+The params dict {img_proj, text_table, tok_base} round-trips through
+``repro.checkpoint`` (``make_planted_checkpoint``), so the CLI genuinely
+exercises checkpoint restore on its known-answer path.
+
+Closed forms (derivation).  With orthonormal prototypes and zero noise,
+the similarity matrix is the class-equality indicator.  Under the shared
+(score desc, index asc) tie rule and grouped classes:
+
+  * zero-shot: the predicted class is always the planted class (score 1
+    vs 0), so top-1 = 1 - label_flip_frac exactly; a flipped label l is
+    still in the top-k iff l is among the first k-1 class indices after
+    removing the planted class;
+  * retrieval, both directions: for item i of class c, the candidates
+    rank as [same-class indices ascending, then the rest]; the paired
+    index i sits at position rank_i = #{j < i : class_j = c} + 1, so
+    R@k = min(k, n_per_class) / n_per_class exactly.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro import checkpoint as CK
+
+LATENT = 8 * 8 * 3
+
+
+def planted_params(dataset) -> dict:
+    """Reference checkpoint params for a ``ZeroShotEvalDataset``."""
+    return {
+        "img_proj": jnp.eye(LATENT, dtype=jnp.float32),
+        "text_table": jnp.asarray(
+            dataset.protos.reshape(dataset.n_classes, LATENT)),
+        "tok_base": jnp.asarray(dataset.tok_base, jnp.int32),
+    }
+
+
+def encode_image(params, images):
+    """(b, S, S, 3) -> (b, LATENT): block-mean to 8x8x3 (exact on
+    constant blocks), flatten, linear projection."""
+    b, S = images.shape[0], images.shape[1]
+    r = S // 8
+    x = images.astype(jnp.float32).reshape(b, 8, r, 8, r, 3)
+    lat = jnp.mean(x, axis=(2, 4)).reshape(b, LATENT)
+    return lat @ params["img_proj"].astype(jnp.float32)
+
+
+def encode_text(params, tokens):
+    """(b, ctx) int32 -> (b, LATENT): position-independent class n-gram
+    match against ``tok_base``, summing matched ``text_table`` rows (the
+    planted split guarantees exactly one match per caption/prompt)."""
+    bank = params["tok_base"]
+    L = bank.shape[1]
+    ctx = tokens.shape[1]
+    windows = jnp.stack([tokens[:, i:i + L] for i in range(ctx - L + 1)],
+                        axis=1)                       # (b, W, L)
+    eq = windows[:, :, None, :] == bank[None, None]   # (b, W, C, L)
+    hit = jnp.any(jnp.all(eq, axis=-1), axis=1)       # (b, C)
+    return hit.astype(jnp.float32) \
+        @ params["text_table"].astype(jnp.float32)
+
+
+def encode_pair(params, batch):
+    return (encode_image(params, batch["images"]),
+            encode_text(params, batch["texts"]))
+
+
+def make_planted_checkpoint(directory: str, dataset, step: int = 0) -> str:
+    """Save the reference planted params via repro.checkpoint."""
+    import jax
+    return CK.save(directory, jax.device_get(planted_params(dataset)),
+                   step, metadata={"planted": True,
+                                   "n_classes": dataset.n_classes,
+                                   "n_per_class": dataset.n_per_class})
+
+
+def known_answers(dataset, ks=(1, 5, 10), top_ks=(1, 5)) -> dict:
+    """The analytically exact eval metrics for the planted split (numpy
+    closed form, independent of the jax engine — the values
+    ``repro.launch.eval --expect-known-answers`` must reproduce
+    *exactly*, sharded or not).  Every metric is an exact integer count
+    divided in f32 — the engine's own arithmetic — so the comparison is
+    ``==``, not allclose."""
+    n, C, m = dataset.n, dataset.n_classes, dataset.n_per_class
+    classes = dataset.classes
+    labels = dataset.labels
+
+    def frac(count):
+        # the engine computes sum(exact 0/1 hits) / n in f32
+        return float(np.float32(count) / np.float32(n))
+
+    out = {}
+    for k in top_ks:
+        kk = min(k, C)
+        correct = np.zeros(n, bool)
+        for i in range(n):
+            c = int(classes[i])
+            ordered = [c] + [x for x in range(C) if x != c]
+            correct[i] = int(labels[i]) in ordered[:kk]
+        out[f"zs_top{k}"] = frac(np.sum(correct))
+    ranks = np.array([np.sum((classes == classes[i])
+                             & (np.arange(n) < i)) + 1 for i in range(n)])
+    for k in ks:
+        r = frac(np.sum(ranks <= min(k, n)))
+        out[f"i2t_r@{k}"] = r
+        out[f"t2i_r@{k}"] = r
+    return out

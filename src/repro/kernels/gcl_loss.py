@@ -33,13 +33,26 @@ inside shard_map (it comes from ``axis_index``).
 
 Tiles are 128-aligned for the MXU; inputs may be bf16 (blocks stay bf16 in
 VMEM — half the feature traffic) with all accumulation in f32
-(``preferred_element_type``).  For wide embeddings the stats kernel blocks
-the feature dimension too: with ``d_block`` set (auto above D_BLOCK_MAX)
-the grid gains an inner d axis, the partial similarity tiles accumulate in
-f32 VMEM scratch, and the online-softmax update runs once per (row, col)
-tile on the completed sums — (BR, d)-sized blocks never have to fit VMEM.
-Column blocks are outside the d axis so output rows are still revisited
-sequentially.
+(``preferred_element_type``).  For wide embeddings both kernels block the
+feature dimension too (``d_block`` set, or auto above D_BLOCK_MAX):
+
+  * the stats kernel gains an inner grid d axis, the partial similarity
+    tiles accumulate in f32 VMEM scratch, and the online-softmax update
+    runs once per (row, col) tile on the completed sums — (BR, d)-sized
+    blocks never have to fit VMEM.  Column blocks are outside the d axis
+    so output rows are still revisited sequentially.
+  * the grads kernel uses a *two-phase* grid (r, c, phase, k): phase 0
+    sweeps the d chunks accumulating the (BR, BC) similarity tiles in
+    VMEM scratch; phase 1 forms the pair-weight tiles once (k == 0, into
+    scratch) and then sweeps the d chunks again, accumulating each
+    (BR, d_block) slice of de1/de2 against the matching column-feature
+    chunk — so no full-d feature or gradient block is ever resident.
+    The de output blocks are revisited across column tiles
+    (non-consecutively, since k is the fastest grid axis), a pattern
+    Pallas TPU does not guarantee to preserve across grid steps —
+    validated in interpret mode only, so the grads d-blocking is
+    **opt-in** (explicit ``d_block``; no auto threshold like the stats
+    kernel) until the ROADMAP TPU-tuning item validates it on device.
 """
 from __future__ import annotations
 
@@ -241,10 +254,87 @@ def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
     r2_ref[...] += jnp.sum(a2, axis=1)
 
 
+def _grads_kernel_dblocked(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref,
+                           sdr_ref, sdc_ref, lwt1r_ref, lwt2r_ref,
+                           lwt1c_ref, lwt2c_ref, t1r_ref, t2r_ref, t1c_ref,
+                           t2c_ref, de1_ref, de2_ref, r1_ref, r2_ref,
+                           s1_acc, s2_acc, p1_acc, p2_acc, *, n_cols):
+    """d-blocked backward: phase 0 accumulates the (BR, BC) similarity
+    tiles over d chunks; phase 1 forms the combined pair-weight tiles
+    P1 = A1 + M2 and P2 = A2 + M1 once per (row, col) tile and streams
+    the (BR, d_block) gradient chunks.  See the module docstring for the
+    revisit pattern of the de output blocks."""
+    c = pl.program_id(1)
+    ph = pl.program_id(2)
+    k = pl.program_id(3)
+
+    # first visit of the (r, k) de block is (c == 0, phase 0)
+    @pl.when((c == 0) & (ph == 0))
+    def _init_de():
+        de1_ref[...] = jnp.zeros_like(de1_ref)
+        de2_ref[...] = jnp.zeros_like(de2_ref)
+
+    @pl.when((c == 0) & (ph == 0) & (k == 0))
+    def _init_rowsums():
+        r1_ref[...] = jnp.zeros_like(r1_ref)
+        r2_ref[...] = jnp.zeros_like(r2_ref)
+
+    @pl.when(ph == 0)
+    def _accum_similarity():
+        @pl.when(k == 0)
+        def _zero():
+            s1_acc[...] = jnp.zeros_like(s1_acc)
+            s2_acc[...] = jnp.zeros_like(s2_acc)
+
+        s1_acc[...] += jax.lax.dot_general(
+            e1r_ref[...], e2c_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s2_acc[...] += jax.lax.dot_general(
+            e2r_ref[...], e1c_ref[...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((ph == 1) & (k == 0))
+    def _pair_weights():
+        s1 = s1_acc[...]
+        s2 = s2_acc[...]
+        sdr = sdr_ref[...].astype(jnp.float32)
+        sdc = sdc_ref[...].astype(jnp.float32)
+        rows = rid_ref[...][:, None]
+        cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+        mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
+
+        def a(z):
+            return jnp.where(mask, jnp.exp(jnp.minimum(z, EXP_CLAMP)), 0.0)
+
+        a1 = a((s1 - sdr[:, None]) / t1r_ref[...][:, None]
+               + lwt1r_ref[...][:, None])
+        a2 = a((s2 - sdr[:, None]) / t2r_ref[...][:, None]
+               + lwt2r_ref[...][:, None])
+        m1 = a((s2 - sdc[None, :]) / t1c_ref[...][None, :]
+               + lwt1c_ref[...][None, :])
+        m2 = a((s1 - sdc[None, :]) / t2c_ref[...][None, :]
+               + lwt2c_ref[...][None, :])
+        p1_acc[...] = a1 + m2
+        p2_acc[...] = a2 + m1
+        r1_ref[...] += jnp.sum(a1, axis=1)
+        r2_ref[...] += jnp.sum(a2, axis=1)
+
+    @pl.when(ph == 1)
+    def _accum_grads():
+        e1c = e1c_ref[...]
+        e2c = e2c_ref[...]
+        de1_ref[...] += jax.lax.dot_general(
+            p1_acc[...].astype(e2c.dtype), e2c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        de2_ref[...] += jax.lax.dot_general(
+            p2_acc[...].astype(e1c.dtype), e1c, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+
 def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
                    e2_all=None, sd_all=None, lwt1_all=None, lwt2_all=None,
                    tau1_all=None, tau2_all=None, row_offset=0,
-                   interpret=False):
+                   interpret=False, d_block=None):
     """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i
     with log-domain weights: ``lwt* = log(w*) - log(tau*)`` so that
     A[i, j] = exp(z_ij + lwt_i) — exact unclamped gradients at any tau.
@@ -254,7 +344,10 @@ def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
     gathered (B,)-shaped batch quantities (features, s_ii, log-weights,
     taus) needed for the transpose terms; the returned (b, d) grads are the
     *local* rows — no collective is required on them.  Inputs may be bf16
-    (f32 accumulation)."""
+    (f32 accumulation).  ``d_block``: feature-dim block for the two-phase
+    grid — **opt-in** (None = whole d; unlike the stats kernel there is
+    no auto threshold, since the blocked path's output-revisit pattern is
+    interpret-validated only, see module docstring)."""
     b, d = e1.shape
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
     if e1_all is None:
@@ -263,9 +356,15 @@ def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
         tau1_all, tau2_all = tau1, tau2
     B = e1_all.shape[0]
     rid = row_offset + jnp.arange(b, dtype=jnp.int32)
+    if d_block is None:
+        d_block = d
+    blocked = d_block < d
 
     e1p, e2p = _pad_rows(e1, BR), _pad_rows(e2, BR)
     e1cp, e2cp = _pad_rows(e1_all, BC), _pad_rows(e2_all, BC)
+    if blocked:
+        e1p, e2p = _pad_cols(e1p, d_block), _pad_cols(e2p, d_block)
+        e1cp, e2cp = _pad_cols(e1cp, d_block), _pad_cols(e2cp, d_block)
     ridp = _pad_rows(rid, BR, value=-1)
     sdp = _pad_vec(sd, b, BR)
     sdcp = _pad_vec(sd_all, B, BC)
@@ -278,28 +377,42 @@ def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
     t1p, t2p = _pad_vec(tau1, b, BR, 1.0), _pad_vec(tau2, b, BR, 1.0)
     t1cp = _pad_vec(tau1_all, B, BC, 1.0)
     t2cp = _pad_vec(tau2_all, B, BC, 1.0)
-    bp, Bp = e1p.shape[0], e1cp.shape[0]
-    grid = (bp // BR, Bp // BC)
+    bp, Bp, dp = e1p.shape[0], e1cp.shape[0], e1p.shape[1]
 
-    row_spec = pl.BlockSpec((BR, d), lambda r, c: (r, 0))
-    col_spec = pl.BlockSpec((BC, d), lambda r, c: (c, 0))
-    vrow = pl.BlockSpec((BR,), lambda r, c: (r,))
-    vcol = pl.BlockSpec((BC,), lambda r, c: (c,))
+    if blocked:
+        nk = dp // d_block
+        grid = (bp // BR, Bp // BC, 2, nk)
+        row_spec = pl.BlockSpec((BR, d_block), lambda r, c, p, k: (r, k))
+        col_spec = pl.BlockSpec((BC, d_block), lambda r, c, p, k: (c, k))
+        vrow = pl.BlockSpec((BR,), lambda r, c, p, k: (r,))
+        vcol = pl.BlockSpec((BC,), lambda r, c, p, k: (c,))
+        de_spec = pl.BlockSpec((BR, d_block), lambda r, c, p, k: (r, k))
+        kernel = functools.partial(_grads_kernel_dblocked, n_cols=B)
+        scratch = [pltpu.VMEM((BR, BC), jnp.float32)] * 4
+    else:
+        grid = (bp // BR, Bp // BC)
+        row_spec = pl.BlockSpec((BR, dp), lambda r, c: (r, 0))
+        col_spec = pl.BlockSpec((BC, dp), lambda r, c: (c, 0))
+        vrow = pl.BlockSpec((BR,), lambda r, c: (r,))
+        vcol = pl.BlockSpec((BC,), lambda r, c: (c,))
+        de_spec = pl.BlockSpec((BR, dp), lambda r, c: (r, 0))
+        kernel = functools.partial(_grads_kernel, n_cols=B)
+        scratch = []
 
     de1, de2, r1, r2 = pl.pallas_call(
-        functools.partial(_grads_kernel, n_cols=B),
+        kernel,
         grid=grid,
         in_specs=[vrow, row_spec, row_spec, col_spec, col_spec, vrow, vcol,
                   vrow, vrow, vcol, vcol, vrow, vrow, vcol, vcol],
-        out_specs=[pl.BlockSpec((BR, d), lambda r, c: (r, 0))] * 2
-        + [vrow] * 2,
-        out_shape=[jax.ShapeDtypeStruct((bp, d), jnp.float32)] * 2
+        out_specs=[de_spec] * 2 + [vrow] * 2,
+        out_shape=[jax.ShapeDtypeStruct((bp, dp), jnp.float32)] * 2
         + [jax.ShapeDtypeStruct((bp,), jnp.float32)] * 2,
+        scratch_shapes=scratch,
         interpret=interpret,
     )(ridp, e1p, e2p, e1cp, e2cp, sdp, sdcp, lw1p, lw2p, lw1cp, lw2cp,
       t1p, t2p, t1cp, t2cp)
     kappa = 1.0 / (B * max(B - 1.0, 1.0))
     rsum = (r1 + r2)[:b, None]
-    de1 = kappa * (de1[:b] - rsum * e2.astype(jnp.float32))
-    de2 = kappa * (de2[:b] - rsum * e1.astype(jnp.float32))
+    de1 = kappa * (de1[:b, :d] - rsum * e2.astype(jnp.float32))
+    de2 = kappa * (de2[:b, :d] - rsum * e1.astype(jnp.float32))
     return de1, de2

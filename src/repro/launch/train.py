@@ -80,6 +80,13 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=0,
+                    help="run the zero-shot/retrieval eval engine every N "
+                         "steps (clip family; 0 disables).  Uses the same "
+                         "--impl/--precision fast path as training")
+    ap.add_argument("--eval-classes", type=int, default=8)
+    ap.add_argument("--eval-per-class", type=int, default=8)
+    ap.add_argument("--eval-batch", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -131,6 +138,25 @@ def main(argv=None):
         state, start, _ = CK.restore(args.ckpt_dir, like)
         print(f"resumed from step {start}")
 
+    evaluator = None
+    if args.eval_every and cfg.family == "clip":
+        from repro.data import ZeroShotEvalDataset
+        from repro.eval import ClipEvaluator
+        eval_ds = ZeroShotEvalDataset(
+            n_classes=args.eval_classes, n_per_class=args.eval_per_class,
+            image_size=cfg.clip.image_size,
+            context_length=cfg.clip.context_length,
+            vocab_size=cfg.vocab_size, seed=args.seed + 1)
+        evaluator = ClipEvaluator(
+            cfg, eval_ds, impl=args.impl, precision=args.precision,
+            batch_size=args.eval_batch,
+            loss_impl=args.loss_impl or "dense")
+
+    def run_eval(step):
+        em = evaluator.evaluate(state["params"], cache_key=int(step))
+        print(f"eval  {step:5d} " + json.dumps(
+            {k: round(v, 5) for k, v in sorted(em.items())}), flush=True)
+
     def to_device(item):
         epoch, step, idx, batch = item
         # jnp.asarray dispatches the async H2D copy on the producer thread
@@ -155,6 +181,8 @@ def main(argv=None):
                 msg = {k: round(float(v), 5) for k, v in m.items()}
                 print(f"step {step:5d} epoch {epoch} {json.dumps(msg)}",
                       flush=True)
+            if evaluator is not None and (step + 1) % args.eval_every == 0:
+                run_eval(step + 1)
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
                 CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
                         metadata={"arch": args.arch, "version": args.version})
@@ -171,6 +199,8 @@ def main(argv=None):
                           min(128, args.n_samples))).items()}
         acc = float(TS.retrieval_accuracy(state["params"], cfg, eval_batch))
         print(f"retrieval accuracy: {acc:.4f}")
+    if evaluator is not None and args.steps % args.eval_every != 0:
+        run_eval(args.steps)   # final eval unless the loop just ran it
     if args.ckpt_dir:
         CK.save(args.ckpt_dir, jax.device_get(state), args.steps,
                 metadata={"arch": args.arch, "version": args.version})

@@ -88,3 +88,110 @@ def test_checkpoint_latest_and_shape_guard(tmp_path):
     bad = {"w": jnp.ones((4,))}
     with pytest.raises(ValueError):
         CK.restore(str(tmp_path), bad)
+
+
+def test_full_train_state_roundtrip_log_u_and_v2_moments(tmp_path):
+    """Regression: the complete v2 train state survives save/restore —
+    including the log-domain u buffers at their -inf init (log 0) and
+    the per-sample tau-optimizer moments — and the restored state is
+    usable (a step runs identically to the unsaved state)."""
+    from repro.configs import get_arch
+    from repro.core import fastclip as FC
+    from repro.core import train_step as TS
+    from repro.core.schedules import lr_warmup_cosine
+    from repro.optim import adamw
+
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    fc = FC.FastCLIPConfig(version="v2", n_samples=32, steps_per_epoch=2,
+                           gamma_decay_epochs=2)
+    tc = TS.TrainStepConfig(arch=cfg, fc=fc, optimizer=adamw(),
+                            lr_fn=lr_warmup_cosine(1e-3, 2, 10))
+    state = TS.init_train_state(jax.random.PRNGKey(0), tc)
+    # the paper's u = 0 init is log(0) = -inf: must survive npz round-trip
+    assert np.all(np.isneginf(np.asarray(state["fc"]["u1"])))
+    assert set(state["fc"]["tau_opt"]) == {"m1", "v1", "m2", "v2", "t"}
+
+    # one step so u has a mix of finite and -inf rows (untouched samples)
+    rng = jax.random.PRNGKey(1)
+    c = cfg.clip
+    batch = {"images": jax.random.normal(
+                 rng, (8, c.image_size, c.image_size, 3)),
+             "texts": jax.random.randint(rng, (8, c.context_length), 0,
+                                         cfg.vocab_size)}
+    step_fn = jax.jit(TS.make_train_step(tc))
+    state, _ = step_fn(state, batch, jnp.arange(8))
+    u1 = np.asarray(state["fc"]["u1"])
+    assert np.all(np.isfinite(u1[:8])) and np.all(np.isneginf(u1[8:]))
+
+    CK.save(str(tmp_path), jax.device_get(state), step=1)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, step, _ = CK.restore(str(tmp_path), like)
+    assert step == 1
+    flat_a = jax.tree_util.tree_flatten_with_path(restored)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(state)[0]
+    for (pa, a), (pb, b) in zip(flat_a, flat_b):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # restored state steps bit-identically to the in-memory one
+    s_mem, m_mem = step_fn(state, batch, jnp.arange(8, 16))
+    s_res, m_res = step_fn(jax.tree.map(jnp.asarray, restored), batch,
+                           jnp.arange(8, 16))
+    assert float(m_mem["loss"]) == float(m_res["loss"])
+    np.testing.assert_array_equal(np.asarray(s_mem["fc"]["tau1"]),
+                                  np.asarray(s_res["fc"]["tau1"]))
+
+
+def test_latest_step_discovery_with_mixed_partial_dirs(tmp_path):
+    """latest_step scans for *complete* (npz + json) pairs: a stale or
+    missing ``latest`` marker and partially written steps must not break
+    discovery."""
+    import os
+    d = str(tmp_path)
+    tree = {"w": jnp.ones((2,))}
+    assert CK.latest_step(d) is None
+    CK.save(d, tree, step=3)
+    CK.save(d, tree, step=7)
+    CK.save(d, tree, step=12)
+    assert CK.available_steps(d) == [3, 7, 12]
+
+    # partial step: npz without json (crash between the two writes)
+    with open(os.path.join(d, "ckpt_00000020.npz"), "wb") as f:
+        f.write(b"garbage")
+    # partial step: json without npz
+    with open(os.path.join(d, "ckpt_00000030.json"), "w") as f:
+        f.write("{}")
+    assert CK.available_steps(d) == [3, 7, 12]
+
+    # stale marker pointing at a deleted step -> scan fallback
+    os.remove(os.path.join(d, "ckpt_00000012.npz"))
+    with open(os.path.join(d, "latest")) as f:
+        assert f.read().strip() == "12"   # marker is now stale
+    assert CK.latest_step(d) == 7
+
+    # missing marker entirely
+    os.remove(os.path.join(d, "latest"))
+    assert CK.latest_step(d) == 7
+    restored, step, _ = CK.restore(d, jax.tree.map(jnp.zeros_like, tree))
+    assert step == 7
+
+    # corrupt marker
+    with open(os.path.join(d, "latest"), "w") as f:
+        f.write("not-a-number")
+    assert CK.latest_step(d) == 7
+
+
+def test_restore_subtree_pulls_params_only(tmp_path):
+    full = {"params": {"w": jnp.arange(4.0), "b": jnp.ones((2,))},
+            "opt": {"m": jnp.zeros((4,))},
+            "step": jnp.asarray(5, jnp.int32)}
+    CK.save(str(tmp_path), full, step=5)
+    like = jax.eval_shape(lambda: {"w": jnp.zeros((4,)),
+                                   "b": jnp.zeros((2,))})
+    params, step, _ = CK.restore_subtree(str(tmp_path), like, "params")
+    assert step == 5
+    np.testing.assert_array_equal(params["w"], np.arange(4.0))
+    with pytest.raises(ValueError):
+        CK.restore_subtree(str(tmp_path),
+                           {"w": jnp.zeros((9,)), "b": jnp.zeros((2,))},
+                           "params")

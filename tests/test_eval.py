@@ -1,0 +1,299 @@
+"""Known-answer battery for the zero-shot eval engine.
+
+Exactness contracts under test (== / array_equal, no tolerance unless a
+real tower is in the loop):
+
+  * the streaming chunked top-k equals the dense lexicographic oracle
+    bit-for-bit (selection under a fixed total order is exact; inputs are
+    quantized to binary fractions so every f32 dot is exact);
+  * the planted closed-form towers reproduce the analytic metrics of the
+    class-structured split exactly, incl. label flips and padded batches;
+  * K=4 shard_map eval == single-device dense oracle (subprocess with
+    forced host devices);
+  * the streaming retrieval lowering materializes no (N, N) similarity
+    buffer (dense oracle as positive control).
+"""
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import ZeroShotEvalDataset
+from repro.eval import classifier as CL
+from repro.eval import engine as EN
+from repro.eval import metrics as M
+from repro.eval import planted as PL
+from repro.eval import retrieval as RT
+from repro.eval import templates as TP
+from repro.eval import extraction as EX
+
+
+def quantized_emb(n, d, seed):
+    """Entries in multiples of 1/64: every f32 dot product is exact under
+    any summation order, so chunked and dense scores are bit-equal."""
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(np.round(rng.randn(n, d) * 16) / 64.0, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Streaming top-k vs the dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 7, 16, 64, 100])
+def test_streaming_topk_matches_dense_oracle_exact(chunk):
+    """Bit-identical scores and indices for any chunk size (including
+    chunk > N and ragged last chunks), with planted exact ties."""
+    N, d, k = 53, 24, 10
+    e1 = quantized_emb(N, d, 0)
+    e2 = quantized_emb(N, d, 1)
+    e2 = e2.at[10:13].set(e2[3:6])           # exact duplicate columns
+    s, i = RT.streaming_topk(e1, e2, k, chunk=chunk)
+    ds, di = M.lex_topk(e1 @ e2.T, k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ds))
+
+
+def test_lex_topk_tie_rule_prefers_lower_index():
+    scores = jnp.asarray([[1.0, 3.0, 3.0, 0.5, 3.0]])
+    s, i = M.lex_topk(scores, 4)
+    np.testing.assert_array_equal(np.asarray(i[0]), [1, 2, 4, 0])
+    np.testing.assert_array_equal(np.asarray(s[0]), [3.0, 3.0, 3.0, 1.0])
+
+
+def test_streaming_topk_excludes_padded_columns():
+    """Columns past n_cols can never enter the carry, even with huge
+    similarity."""
+    e1 = quantized_emb(8, 16, 2)
+    cols = jnp.concatenate([quantized_emb(20, 16, 3),
+                            100.0 * jnp.ones((12, 16))])
+    s, i = RT.streaming_topk(e1, cols, 5, chunk=6, n_cols=20)
+    assert int(jnp.max(i)) < 20
+    ds, di = M.lex_topk(e1 @ cols[:20].T, 5)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(di))
+
+
+def test_recall_at_k_valid_mask():
+    idx = jnp.asarray([[0, 1], [5, 3], [9, 9]])
+    gold = jnp.asarray([1, 3, 9])
+    full = M.recall_at_k(idx, gold, (1, 2))
+    assert full["r@1"] == pytest.approx(1 / 3)
+    assert full["r@2"] == 1.0
+    masked = M.recall_at_k(idx, gold, (1, 2),
+                           valid=jnp.asarray([True, True, False]))
+    assert masked["r@1"] == 0.0 and masked["r@2"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Known answers: planted split end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("C,m,flip", [(6, 4, 0.0), (8, 3, 0.25),
+                                      (5, 12, 0.4)])
+def test_planted_metrics_equal_known_answers_exactly(C, m, flip):
+    """Zero-shot top-1/top-5 and R@1/5/10 through the full engine
+    (extraction -> prompt-ensemble head -> streaming retrieval) equal
+    the analytic closed forms with ``==``."""
+    ds = ZeroShotEvalDataset(n_classes=C, n_per_class=m,
+                             label_flip_frac=flip, seed=C + m)
+    params = PL.planted_params(ds)
+    got = EN.evaluate_planted(params, ds, chunk=8, batch_size=7)
+    want = PL.known_answers(ds)
+    for key, w in want.items():
+        assert got[key] == w, (key, got[key], w)
+    # spot-check the closed forms themselves on the flip-free case
+    if flip == 0.0:
+        assert want["zs_top1"] == 1.0
+        assert want["i2t_r@5"] == float(np.float32(min(5, m)) /
+                                        np.float32(m))
+
+
+def test_planted_encoders_are_exact():
+    """Image tower recovers the one-hot prototype bit-exactly; text tower
+    maps every template of class c to the prototype of c."""
+    ds = ZeroShotEvalDataset(n_classes=5, n_per_class=2, seed=1)
+    params = PL.planted_params(ds)
+    batch = ds.batch(np.arange(ds.n))
+    img = np.asarray(PL.encode_image(params, jnp.asarray(batch["images"])))
+    protos = ds.protos.reshape(ds.n_classes, -1)
+    np.testing.assert_array_equal(img, protos[ds.classes])
+    prompts = TP.render_prompt_bank(ds.tok_base, TP.DEFAULT_TEMPLATES,
+                                    ds.context_length)
+    for t in range(prompts.shape[0]):
+        txt = np.asarray(PL.encode_text(params, jnp.asarray(prompts[t])))
+        np.testing.assert_array_equal(txt, protos)
+
+
+def test_label_flips_hit_top1_not_retrieval():
+    ds = ZeroShotEvalDataset(n_classes=8, n_per_class=4,
+                             label_flip_frac=0.25, seed=0)
+    want = PL.known_answers(ds)
+    n_flipped = int(np.sum(ds.labels != ds.classes))
+    assert n_flipped == 8    # 0.25 * 32, deterministic
+    assert want["zs_top1"] == float(np.float32(ds.n - n_flipped)
+                                    / np.float32(ds.n))
+    assert want["i2t_r@1"] == 0.25   # 1/m, untouched by label flips
+
+
+# ---------------------------------------------------------------------------
+# Templates + classifier heads
+# ---------------------------------------------------------------------------
+
+def test_template_render_layout_and_truncation():
+    t = TP.PromptTemplate("x", prefix=(3, 7), suffix=(5,))
+    out = t.render(np.asarray([11, 12, 13, 14]), 10)
+    np.testing.assert_array_equal(out, [3, 7, 11, 12, 13, 14, 5, 0, 0, 0])
+    short = t.render(np.asarray([11, 12, 13, 14]), 5)
+    np.testing.assert_array_equal(short, [3, 7, 11, 12, 13])
+
+
+def test_prompt_bank_is_cached_per_class_set():
+    bank = np.asarray([[1, 2], [3, 4]], np.int32)
+    a = TP.render_prompt_bank(bank, TP.DEFAULT_TEMPLATES, 8)
+    b = TP.render_prompt_bank(bank.copy(), TP.DEFAULT_TEMPLATES, 8)
+    assert a is b                      # same class set -> cache hit
+    c = TP.render_prompt_bank(bank + 1, TP.DEFAULT_TEMPLATES, 8)
+    assert c is not a
+
+
+def test_classifier_head_cache_per_params_key():
+    ds = ZeroShotEvalDataset(n_classes=4, n_per_class=2, seed=5)
+    params = PL.planted_params(ds)
+    calls = []
+
+    def enc(toks):
+        calls.append(toks.shape)
+        return PL.encode_text(params, toks)
+
+    cache = {}
+    h1 = CL.build_head(enc, ds.tok_base, context_length=ds.context_length,
+                       cache=cache, cache_key=7)
+    h2 = CL.build_head(enc, ds.tok_base, context_length=ds.context_length,
+                       cache=cache, cache_key=7)
+    assert h2 is h1 and len(calls) == 1          # head memoized
+    CL.build_head(enc, ds.tok_base, context_length=ds.context_length,
+                  cache=cache, cache_key=8)
+    assert len(calls) == 2                       # new params key rebuilds
+
+
+# ---------------------------------------------------------------------------
+# Extraction: ragged last batch / padding
+# ---------------------------------------------------------------------------
+
+def test_extraction_ragged_tail_is_exact_on_planted():
+    """n = 19 with batch_size = 8: two full batches + a padded tail; the
+    pad rows are dropped and every returned row equals the single-batch
+    forward bit-for-bit (planted towers are exact)."""
+    ds = ZeroShotEvalDataset(n_classes=19, n_per_class=1, seed=4)
+    params = PL.planted_params(ds)
+    e1a, e2a = EX.extract_pair_embeddings(PL.encode_pair, params, ds,
+                                          batch_size=8)
+    e1b, e2b = EX.extract_pair_embeddings(PL.encode_pair, params, ds,
+                                          batch_size=19, prefetch=0)
+    assert e1a.shape == (19, PL.LATENT)
+    np.testing.assert_array_equal(e1a, e1b)
+    np.testing.assert_array_equal(e2a, e2b)
+
+
+def test_extraction_ragged_matches_full_batch_on_clip_towers():
+    from repro.configs import get_arch
+    from repro.models import backbones as BB
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    ds = ZeroShotEvalDataset(n_classes=5, n_per_class=2,
+                             image_size=cfg.clip.image_size,
+                             context_length=cfg.clip.context_length,
+                             vocab_size=cfg.vocab_size, seed=6)
+    params = BB.init_params(jax.random.PRNGKey(0), cfg)
+    fn = lambda p, b: BB.encode_pair(p, cfg, b)   # noqa: E731
+    e1a, e2a = EX.extract_pair_embeddings(fn, params, ds, batch_size=4)
+    e1b, e2b = EX.extract_pair_embeddings(fn, params, ds, batch_size=10,
+                                          prefetch=0)
+    np.testing.assert_allclose(e1a, e1b, atol=1e-5)
+    np.testing.assert_allclose(e2a, e2b, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# HLO acceptance: streaming retrieval materializes no (N, N) buffer
+# ---------------------------------------------------------------------------
+
+def test_streaming_retrieval_hlo_has_no_NN_similarity_matrix():
+    """Mirror of the loss engine's no-(B, B) and the towers' no-(S, S)
+    checks: the lowered streaming scan holds no (N, N) buffer; the dense
+    oracle does (positive control)."""
+    N, d, k, chunk = 384, 64, 10, 128
+    args = (jax.ShapeDtypeStruct((N, d), jnp.float32),) * 2
+
+    def streaming(a, b):
+        return RT.streaming_topk(a, b, k, chunk=chunk)
+
+    def dense(a, b):
+        return M.lex_topk(jnp.einsum("nd,md->nm", a, b), k)
+
+    quad = re.compile(rf"f32\[[0-9,]*{N},{N}\]")
+    hlo_d = jax.jit(dense).lower(*args).compile().as_text()
+    assert quad.search(hlo_d)           # positive control
+    hlo_s = jax.jit(streaming).lower(*args).compile().as_text()
+    assert not quad.search(hlo_s), \
+        "streaming retrieval materialized an (N, N) similarity matrix"
+
+
+# ---------------------------------------------------------------------------
+# K=4 shard_map parity (subprocess: forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_sharded_eval_matches_dense_oracle_K4():
+    """K=4 shard_map streaming eval == single-device dense oracle, exact
+    (scores, indices, and metrics), incl. a ragged 15-row split over 4
+    devices and the planted known answers."""
+    helper = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "helpers", "eval_check.py")
+    p = subprocess.run([sys.executable, helper], capture_output=True,
+                       text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
+
+
+# ---------------------------------------------------------------------------
+# Eval launcher: checkpoint restore -> known answers, in process
+# ---------------------------------------------------------------------------
+
+def test_eval_cli_planted_known_answers(tmp_path):
+    from repro.launch import eval as EV
+    argv = ["--planted", "--ckpt-dir", str(tmp_path), "--classes", "5",
+            "--per-class", "3", "--chunk", "8",
+            "--expect-known-answers"]
+    metrics = EV.main(argv)             # first run writes the checkpoint
+    assert metrics["zs_top1"] == 1.0
+    metrics2 = EV.main(argv)            # second run restores it
+    assert metrics2 == metrics
+
+
+def test_eval_cli_restores_params_subtree_from_train_ckpt(tmp_path):
+    """The real-model path: save a full train state, restore only the
+    params subtree, and get finite metrics."""
+    from repro import checkpoint as CK
+    from repro.configs import get_arch
+    from repro.core import fastclip as FC
+    from repro.core import train_step as TS
+    from repro.core.schedules import lr_warmup_cosine
+    from repro.launch import eval as EV
+    from repro.optim import adamw
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    fc = FC.FastCLIPConfig(version="v3", n_samples=32, steps_per_epoch=2,
+                           gamma_decay_epochs=2)
+    tc = TS.TrainStepConfig(arch=cfg, fc=fc, optimizer=adamw(),
+                            lr_fn=lr_warmup_cosine(1e-3, 2, 10))
+    state = TS.init_train_state(jax.random.PRNGKey(0), tc)
+    CK.save(str(tmp_path), jax.device_get(state), 3,
+            metadata={"arch": "clip-vitb32-cc12m"})
+    metrics = EV.main(["--ckpt-dir", str(tmp_path), "--reduced",
+                       "--classes", "4", "--per-class", "2",
+                       "--batch-size", "8", "--loss-impl", "dense"])
+    for v in metrics.values():
+        assert np.isfinite(v)
+    assert set(metrics) >= {"zs_top1", "zs_top5", "i2t_r@1", "t2i_r@1",
+                            "eval_loss"}

@@ -49,6 +49,47 @@ def test_gamma_cosine_in_range(gmin, spe, E, step):
     assert gmin - 1e-6 <= v <= 1.0 + 1e-6
 
 
+@settings(max_examples=40, deadline=None)
+@given(st.floats(0.01, 0.99), st.integers(1, 500), st.integers(1, 50),
+       st.integers(0, 60), st.data())
+def test_gamma_cosine_held_within_epoch_and_clamped_after_E(
+        gmin, spe, E, epoch, data):
+    """Paper §5 invariants: gamma is *exactly* constant within an epoch
+    (same floor_divide -> identical float computation), and exactly equal
+    to its end-of-schedule value (~gamma_min) for every step at or past
+    E epochs."""
+    fn = SCH.gamma_cosine(gmin, spe, E)
+    offset = data.draw(st.integers(0, spe - 1))
+    assert float(fn(epoch * spe + offset)) == float(fn(epoch * spe))
+    past = (E + epoch) * spe + offset      # any step >= E epochs
+    assert float(fn(past)) == float(fn(E * spe))
+    np.testing.assert_allclose(float(fn(past)), gmin, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(1e-5, 1.0), st.integers(1, 500), st.integers(2, 5000),
+       st.floats(0.0, 0.5), st.integers(1, 10_000))
+def test_lr_warmup_cosine_boundary_continuity(peak, warmup, extra,
+                                              min_frac, t):
+    """Appendix B boundaries: the warmup->cosine seam at ``warmup_steps``
+    is continuous (the jump is bounded by one warmup increment, and the
+    boundary value is the peak), and the schedule lands on min_lr at
+    ``total_steps`` and stays *exactly* flat past it (clipped phase)."""
+    total = warmup + extra
+    min_lr = peak * min_frac
+    fn = SCH.lr_warmup_cosine(peak, warmup, total, min_lr=min_lr)
+    # boundary value: cosine phase 0 == peak
+    np.testing.assert_allclose(float(fn(warmup)), peak, rtol=1e-5)
+    # left limit: one warmup increment below the peak, no seam jump
+    gap = abs(float(fn(warmup)) - float(fn(warmup - 1)))
+    assert gap <= peak / warmup * (1 + 1e-3) + 1e-9
+    # end boundary: cosine phase pi == min_lr
+    np.testing.assert_allclose(float(fn(total)), min_lr,
+                               atol=1e-6 * peak + 1e-9)
+    # past the end the phase is clipped: exactly the total_steps value
+    assert float(fn(total + t)) == float(fn(total))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 12), st.integers(0, 10_000))
 def test_row_stats_positive_and_bounded(B, seed):
