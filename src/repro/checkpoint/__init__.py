@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     available_steps, latest_step, restore, restore_subtree, save,
+    save_sharded,
 )

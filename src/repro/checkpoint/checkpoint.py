@@ -3,6 +3,19 @@
 No orbax in the container; this is a self-contained, deterministic format:
 leaves are flattened with their key paths, saved in one compressed npz,
 structure (paths + a user metadata dict) in a sidecar json.
+
+Sharded-state checkpoints (the (data, fsdp) mesh contract,
+``core.shard_state``): ``save_sharded`` writes one npz **per fsdp shard**
+(``ckpt_XXXXXXXX.shard00of04.npz`` ...) holding each ZeRO-sharded leaf's
+local piece — no device ever materializes the full tree at save time —
+plus the shard layout (per-leaf concat dim) in the json sidecar.
+``restore`` detects the layout and does the process-0 merge
+(np.concatenate along the recorded dim), so a checkpoint saved at one
+mesh shape restores bit-exactly at any other (save at fsdp=4, restore at
+fsdp=1, and vice versa): the merged global array is identical and the
+caller re-lays it out with ``jax.device_put``.  Plain ``save`` keeps
+working on sharded trees too (np.asarray gathers — the merge-at-save
+alternative); restores of either format are interchangeable.
 """
 from __future__ import annotations
 
@@ -14,7 +27,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.npz$")
+_CKPT_RE = re.compile(r"^ckpt_(\d{8})\.(npz|json)$")
+_FSDP_AXIS = "fsdp"
 
 
 def _path_str(path) -> str:
@@ -31,6 +45,8 @@ def _path_str(path) -> str:
 
 def save(directory: str, tree: Any, step: int,
          metadata: Optional[Dict] = None) -> str:
+    """Single-file save.  Sharded leaves are gathered to host first
+    (merge-at-save); use ``save_sharded`` to keep shards separate."""
     os.makedirs(directory, exist_ok=True)
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     arrays = {}
@@ -49,10 +65,101 @@ def save(directory: str, tree: Any, step: int,
     return path_npz
 
 
+def _leaf_fsdp_pieces(leaf):
+    """(dim, [piece_0, ..., piece_{K-1}]) for a jax.Array ZeRO-sharded
+    over the ``fsdp`` mesh axis, else None.  Pieces are the distinct
+    slices along the sharded dim in global order (the data-axis replicas
+    are deduplicated)."""
+    sharding = getattr(leaf, "sharding", None)
+    spec = getattr(sharding, "spec", None)
+    if spec is None or not hasattr(leaf, "addressable_shards"):
+        return None
+    dim = None
+    for i, entry in enumerate(spec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if _FSDP_AXIS in names:
+            if len(names) > 1:
+                return None     # sample-sharded (data, fsdp) leaf: gather
+            dim = i
+    if dim is None:
+        return None
+    by_start = {}
+    for s in leaf.addressable_shards:
+        start = s.index[dim].start or 0
+        if start not in by_start:
+            by_start[start] = np.asarray(s.data)
+    if len(by_start) <= 1:
+        return None
+    return dim, [by_start[k] for k in sorted(by_start)]
+
+
+def _shard_file(directory: str, step: int, k: int, n: int) -> str:
+    return os.path.join(directory,
+                        f"ckpt_{step:08d}.shard{k:02d}of{n:02d}.npz")
+
+
+def save_sharded(directory: str, tree: Any, step: int,
+                 metadata: Optional[Dict] = None) -> List[str]:
+    """Per-shard save for a (data, fsdp)-sharded train state: shard file
+    ``k`` holds every fsdp-sharded leaf's k-th piece; replicated and
+    sample-sharded leaves go (whole) into shard 0.  The per-leaf concat
+    dim is recorded in the sidecar so ``restore`` can merge on any mesh
+    shape.  Degenerates to the plain single-npz format when nothing is
+    fsdp-sharded (fsdp=1)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    pieces = {}
+    dims = {}
+    nshards = 1
+    for path, leaf in flat:
+        key = _path_str(path)
+        got = _leaf_fsdp_pieces(leaf)
+        if got is None:
+            pieces[key] = [np.asarray(leaf)]
+        else:
+            dim, parts = got
+            dims[key] = dim
+            pieces[key] = parts
+            nshards = max(nshards, len(parts))
+    if nshards == 1:
+        return [save(directory, tree, step, metadata=metadata)]
+    os.makedirs(directory, exist_ok=True)
+    paths = []
+    for k in range(nshards):
+        arrays = {key: parts[k] for key, parts in pieces.items()
+                  if k < len(parts)}
+        paths.append(_shard_file(directory, step, k, nshards))
+        np.savez_compressed(paths[-1], **arrays)
+    meta = {"step": step, "order": [_path_str(p) for p, _ in flat],
+            "metadata": metadata or {},
+            "shards": {"count": nshards, "dims": dims}}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(directory, "latest"), "w") as f:
+        f.write(str(step))
+    return paths
+
+
+def _read_meta(directory: str, step: int) -> Optional[Dict]:
+    p = os.path.join(directory, f"ckpt_{step:08d}.json")
+    if not os.path.exists(p):
+        return None
+    try:
+        with open(p) as f:
+            return json.load(f)
+    except (ValueError, OSError):
+        return None
+
+
 def _is_complete(directory: str, step: int) -> bool:
-    return (os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-            and os.path.exists(os.path.join(directory,
-                                            f"ckpt_{step:08d}.json")))
+    meta = _read_meta(directory, step)
+    if meta is None:
+        return False
+    shards = meta.get("shards")
+    if shards:
+        n = int(shards["count"])
+        return all(os.path.exists(_shard_file(directory, step, k, n))
+                   for k in range(n))
+    return os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
 
 
 def available_steps(directory: str) -> List[int]:
@@ -61,11 +168,11 @@ def available_steps(directory: str) -> List[int]:
     partial writes (a crash between the two) are skipped."""
     if not os.path.isdir(directory):
         return []
-    steps = []
+    steps = set()
     for name in os.listdir(directory):
         m = _CKPT_RE.match(name)
         if m and _is_complete(directory, int(m.group(1))):
-            steps.append(int(m.group(1)))
+            steps.add(int(m.group(1)))
     return sorted(steps)
 
 
@@ -92,9 +199,28 @@ def _load(directory: str, step: Optional[int]):
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
-    data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json")) as f:
-        meta = json.load(f)
+    meta = _read_meta(directory, step)
+    if meta is None:
+        raise FileNotFoundError(
+            f"no sidecar for step {step} in {directory}")
+    shards = meta.get("shards")
+    if not shards:
+        data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
+        return data, step, meta
+    # process-0 merge of a per-shard checkpoint: concatenate each
+    # fsdp-sharded leaf's pieces along its recorded dim — the merged
+    # global arrays are bit-identical regardless of the saving mesh shape
+    n = int(shards["count"])
+    dims = shards["dims"]
+    parts = [np.load(_shard_file(directory, step, k, n)) for k in range(n)]
+    data = {}
+    for key in parts[0].files:
+        if key in dims:
+            data[key] = np.concatenate(
+                [p[key] for p in parts if key in p.files],
+                axis=int(dims[key]))
+        else:
+            data[key] = parts[0][key]
     return data, step, meta
 
 

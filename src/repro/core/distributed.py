@@ -87,9 +87,16 @@ def gather_axes(x, axes):
     global feature columns with it, and the eval engine's streaming
     retrieval gathers its similarity columns under the *same* axes, so
     both sides of the rectangular (local-rows x gathered-cols) contract
-    shard identically.  Gather order is axis order, so the result rows
-    are in global (shard-concatenated) order."""
-    for ax in axes:
+    shard identically.
+
+    The loop runs *last axis first*: each later gather nests earlier
+    blocks inside it, so the result rows land in first-axis-major order
+    — exactly ``_global_index`` (``idx = idx * size + axis_index`` over
+    ``axes``) and the row-block order of ``NamedSharding(P(axes))``.
+    (Looping in axis order would put the LAST axis outermost and
+    misalign ``row_offset`` diagonal masking on any multi-axis mesh,
+    e.g. the (data, fsdp) train mesh; single-axis meshes can't tell.)"""
+    for ax in reversed(tuple(axes)):
         x = jax.lax.all_gather(x, ax, tiled=True)
     return x
 
@@ -262,7 +269,7 @@ def make_fastclip_pair_loss(axes: Sequence[str]):
 # ---------------------------------------------------------------------------
 
 def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
-                      interpret=None):
+                      interpret=None, reduce="mean"):
     """Returns op(e1n, e2n, lu1_rows, lu2_rows, t1, t2, gamma) ->
     (loss, (lu1_new_rows, lu2_new_rows,
             (g1, g2, dg1, dg2, m1, m2), sat)).
@@ -286,11 +293,24 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
     (columns == rows).  ``interpret=None`` auto-selects Pallas interpret
     mode off-TPU.  t1/t2 may be scalars or (b,) per-row arrays (v2);
     everything but e1n/e2n gets zero gradients (u, tau updates are
-    closed-form elsewhere)."""
+    closed-form elsewhere).
+
+    ``reduce="mean"`` (default) returns the global mean loss (the psum/B
+    runs outside the custom-vjp, as before).  ``reduce="local"`` returns
+    the *local mean contribution* ``local_sum / B`` with no psum at all —
+    for call sites that already sit inside a ``shard_map`` and
+    differentiate the step themselves (the sharded-state train step):
+    with no psum in the differentiated region the closed-form backward
+    never depends on jax's psum-transpose cotangent convention, and the
+    caller psums the returned scalar for the replicated loss metric.  The
+    comms contract is identical in both modes (same feature gather, same
+    O(K|B|) scalar gather; the mean-mode psum moved one f32 scalar)."""
     axes = tuple(axes) if axes else ()
     if loss_impl not in ("dense", "fused"):
         raise ValueError(f"loss_impl must be 'dense' or 'fused', "
                          f"got {loss_impl!r}")
+    if reduce not in ("mean", "local"):
+        raise ValueError(f"reduce must be 'mean' or 'local', got {reduce!r}")
     from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
     from repro.kernels.ops import default_interpret
 
@@ -390,6 +410,10 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
         gammav = jnp.reshape(jnp.asarray(gamma, jnp.float32), (1,))
         local, aux = core(e1, e2, lu1r, lu2r, sg(t1v), sg(t2v), sg(gammav))
         B = e1.shape[0] * (_axis_prod(axes) if axes else 1)
+        if reduce == "local":
+            # ct on ``local/B`` is 1/B, so bwd's ct*B*de* yields exactly
+            # the closed-form grads of the global *mean* loss
+            return local / B, aux
         loss = (_psum(local, axes) if axes else local) / B
         return loss, aux
 
@@ -400,7 +424,7 @@ def make_fcco_loss_op(axes, eps, scale_by_tau=True, *, loss_impl="dense",
 # OpenCLIP-style baseline reduction: autodiff through all_gather
 # ---------------------------------------------------------------------------
 
-def make_allgather_ad_pair_loss(axes: Sequence[str]):
+def make_allgather_ad_pair_loss(axes: Sequence[str], reduce: str = "mean"):
     axes = tuple(axes)
 
     def with_stats(e1, e2, lw1, lw2, t1, t2):
@@ -411,14 +435,21 @@ def make_allgather_ad_pair_loss(axes: Sequence[str]):
         e2a = _gather(e2, axes)     # of (B, d) feature grads (DDP-style)
         stats = LS.row_stats(e1, e2, e1a, e2a, t1, t2, row_offset=off)
         local = LS.surrogate_loss(stats, sg(lw1), sg(lw2), 1.0)
+        if reduce == "local":
+            return local / B, jax.tree.map(sg, stats)
         loss = _psum(local, axes) / B
         return loss, jax.tree.map(sg, stats)
 
     return with_stats
 
 
-def make_mbcl_loss(axes: Sequence[str]):
-    """OpenCLIP objective (MBCL), gathered features, autodiff comms."""
+def make_mbcl_loss(axes: Sequence[str], reduce: str = "mean"):
+    """OpenCLIP objective (MBCL), gathered features, autodiff comms.
+
+    ``reduce="local"`` returns the local mean contribution (no psum in
+    the differentiated region — the sharded-state step psums it for the
+    metric and autodiff still routes feature grads through the gather's
+    psum-scatter transpose, the DDP-style comms this baseline measures)."""
     axes = tuple(axes)
 
     def loss_fn(e1, e2, tau):
@@ -439,6 +470,8 @@ def make_mbcl_loss(axes: Sequence[str]):
             gold = jnp.take_along_axis(s, labels[:, None], axis=1)[:, 0]
             return jnp.sum(logz - gold)
         local = 0.5 * (ce(s1) + ce(s2))
+        if reduce == "local":
+            return local / B
         return _psum(local, axes) / B
 
     return loss_fn

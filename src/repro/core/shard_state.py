@@ -1,0 +1,191 @@
+"""Sharded train state: the (data, fsdp) named-mesh contract (PR 5).
+
+One mesh, one layout convention, shared by train, eval and checkpointing:
+
+  * the batch, the global sample indices and the FCCO per-sample state
+    (log-u buffers, v2's per-sample temperatures and their moments) shard
+    by **sample ownership over both axes** ``("data", "fsdp")`` — the
+    flattened (data, fsdp) device order matches the ShardedLoader's
+    shard-concatenated index order and ``distributed._global_index``;
+  * params and optimizer moments ZeRO-shard one dim over ``fsdp`` only
+    (replicated across ``data``), per ``launch.mesh.fsdp_leaf_dim`` —
+    deterministic in (path, shape, fsdp) so checkpoints reshard across
+    mesh shapes;
+  * scalars (step counters, global tau, tau-optimizer scalars) replicate.
+
+The sharded train step (``train_step.make_fsdp_train_step``) consumes
+these specs inside one ``shard_map``: weights all-gather over ``fsdp`` at
+use (`gather_params`, rematerialized in the backward when
+``models.sharding.inner_remat()`` — the re-gather vs. remat knob), the
+all-gather's transpose reduce-scatters (``psum_scatter``) the param
+gradients onto each device's shard, and ``reduce_grads`` finishes with a
+shard-sized psum over ``data`` — no full-tree all-reduce of param
+gradients anywhere.  ``fsdp=1`` degenerates to plain data parallelism
+through the same code path (every leaf replicates; the gather is the
+identity).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import (TRAIN_AXES, _path_str,  # noqa: F401
+                               fsdp_leaf_dim, make_train_mesh,
+                               parse_mesh_arg)
+
+# The per-sample (u-buffer / batch-dim) spec: sample ownership over both
+# mesh axes, in flattened row-major (data-major) order.
+SAMPLE_SPEC = P(TRAIN_AXES)
+
+
+def fsdp_size(mesh: Mesh) -> int:
+    return int(mesh.shape["fsdp"]) if "fsdp" in mesh.axis_names else 1
+
+
+# ---------------------------------------------------------------------------
+# PartitionSpecs for every piece of the train state
+# ---------------------------------------------------------------------------
+
+def param_fsdp_dims(params_like, size: int):
+    """Pytree of Optional[int]: the dim each param leaf ZeRO-shards over
+    ``fsdp`` (None = replicated).  Also the all-gather axis in the
+    forward and the psum-scatter dim of its gradient."""
+    def one(path, leaf):
+        return fsdp_leaf_dim(_path_str(path), leaf.shape, size)
+    return jax.tree_util.tree_map_with_path(one, params_like)
+
+
+def _spec_from_dim(leaf, dim: Optional[int]) -> P:
+    if dim is None:
+        return P()
+    spec = [None] * leaf.ndim
+    spec[dim] = "fsdp"
+    return P(*spec)
+
+
+def param_specs(params_like, size: int, dims=None):
+    """``dims`` overrides the shard layout (a ``param_fsdp_dims``-shaped
+    tree; all-None = fully replicated — the parity oracle of the sharded
+    step runs the same code with that layout)."""
+    if dims is None:
+        dims = param_fsdp_dims(params_like, size)
+    return jax.tree.map(_spec_from_dim, params_like, dims)
+
+
+def _sample_or_rep(leaf) -> P:
+    return SAMPLE_SPEC if getattr(leaf, "ndim", 0) >= 1 else P()
+
+
+def fc_specs(fc_like):
+    """FCCO state: per-sample (n,) buffers shard by sample ownership
+    (u1/u2 log-u, v2 tau1/tau2 and their per-sample moments); scalars
+    replicate."""
+    out = {}
+    for k, v in fc_like.items():
+        if k in ("u1", "u2", "tau1", "tau2"):
+            out[k] = SAMPLE_SPEC
+        elif k == "tau_opt":
+            out[k] = {kk: _sample_or_rep(vv) for kk, vv in v.items()}
+        else:
+            out[k] = jax.tree.map(lambda _: P(), v)
+    return out
+
+
+def opt_specs(opt_like, p_specs):
+    """Optimizer moments mirror the param sharding (ZeRO: each device
+    holds the moments of its own param shard); step counters replicate."""
+    return {k: (p_specs if k in ("m", "v")
+                else jax.tree.map(lambda _: P(), v))
+            for k, v in opt_like.items()}
+
+
+def train_state_specs(state_like, size: int, param_dims=None):
+    """PartitionSpec pytree for a full contrastive/LM train state."""
+    p_specs = param_specs(state_like["params"], size, dims=param_dims)
+    specs = {"params": p_specs, "step": P()}
+    if "opt" in state_like:
+        specs["opt"] = opt_specs(state_like["opt"], p_specs)
+    if "fc" in state_like:
+        specs["fc"] = fc_specs(state_like["fc"])
+    return specs
+
+
+def batch_specs(batch_like):
+    """Model inputs: leading (batch) dim by sample ownership."""
+    return jax.tree.map(
+        lambda l: P(TRAIN_AXES, *([None] * (l.ndim - 1))), batch_like)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def train_state_shardings(mesh: Mesh, state_like, param_dims=None):
+    return named(mesh, train_state_specs(state_like, fsdp_size(mesh),
+                                         param_dims=param_dims))
+
+
+def shard_train_state(state, mesh: Mesh, param_dims=None):
+    """Lay a (host or replicated) train state out on the mesh.  Returns
+    (sharded_state, shardings)."""
+    shardings = train_state_shardings(mesh, state, param_dims=param_dims)
+    return jax.device_put(state, shardings), shardings
+
+
+# ---------------------------------------------------------------------------
+# Inside-shard_map helpers (manual-collective counterparts of the specs)
+# ---------------------------------------------------------------------------
+
+def gather_params(param_shards, dims, *, remat_name: Optional[str] = None):
+    """All-gather every fsdp-sharded leaf back to full shape at its use
+    site (tiled over ``fsdp`` along the leaf's shard dim — the exact
+    inverse of the NamedSharding layout).  Differentiating through the
+    gather reduce-scatters (psum_scatter) the cotangent onto the local
+    shard: the backward's param-gradient reduction.  ``remat_name`` tags
+    the gathered arrays for a ``save_any_names_but_these`` remat policy
+    (re-gather in the backward instead of holding full weights)."""
+    def one(x, dim):
+        if dim is None:
+            return x
+        g = jax.lax.all_gather(x, "fsdp", axis=dim, tiled=True)
+        return checkpoint_name(g, remat_name) if remat_name else g
+    return jax.tree.map(one, param_shards, dims)
+
+
+def reduce_grads(grads, dims):
+    """Finish the gradient reduction for the local shard: leaves whose
+    gather transpose already psum_scattered over ``fsdp`` only need the
+    (shard-sized) psum over ``data``; replicated leaves psum over both
+    axes, staged ``fsdp`` first so the reduction tree matches the
+    scattered path exactly (bitwise at axis size 2)."""
+    def one(g, dim):
+        if dim is None:
+            g = jax.lax.psum(g, ("fsdp",))
+        return jax.lax.psum(g, ("data",))
+    return jax.tree.map(one, grads, dims)
+
+
+# ---------------------------------------------------------------------------
+# Introspection (benches + acceptance tests)
+# ---------------------------------------------------------------------------
+
+def per_device_bytes(tree, device=None) -> int:
+    """Bytes of ``tree`` resident on one device (default: the first
+    device of each leaf's sharding) — the live-buffer view of the
+    1/fsdp shrink."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if not hasattr(leaf, "addressable_shards"):
+            total += int(np.asarray(leaf).nbytes)
+            continue
+        shards = leaf.addressable_shards
+        dev = device if device is not None else shards[0].device
+        total += sum(int(np.prod(s.data.shape)) * leaf.dtype.itemsize
+                     for s in shards if s.device == dev)
+    return total

@@ -1,16 +1,23 @@
 """Train-step assembly: model towers + FastCLIP objective + optimizers.
 
-Composition (distributed):
-  - the *model* forward/backward runs under pjit/GSPMD (batch sharded over
-    ('pod','data'), weights per the sharding rules in repro.launch.mesh);
-  - the *contrastive loss* runs in a shard_map island over the batch axes,
-    using either the paper's communication-efficient reduction or the
-    OpenCLIP-style autodiff reduction (repro.core.distributed);
-  - the FCCO u state (and v2's individual temperatures) are sharded by
-    sample ownership and updated shard-locally.
+Composition, three mesh settings:
+  - ``mesh_axes=None``: single-device reference semantics (unit tests,
+    CPU-scale experiments);
+  - ``mesh_axes`` set, ``fsdp=False``: the *model* forward/backward runs
+    under pjit/GSPMD (batch sharded over the axes, weights per the
+    sharding rules in repro.launch.mesh) while the *contrastive loss*
+    runs in a shard_map island over the batch axes, using either the
+    paper's communication-efficient reduction or the OpenCLIP-style
+    autodiff reduction (repro.core.distributed);
+  - ``fsdp=True``: the production (data, fsdp) named-mesh path
+    (``make_fsdp_train_step``): the WHOLE step — towers, loss island,
+    gradient reduction, optimizer — runs inside one shard_map with the
+    train state ZeRO-sharded per repro.core.shard_state (weight
+    all-gather at use, psum_scatter gradient reduction, shard-local
+    optimizer update).
 
-``mesh_axes=None`` gives the single-device reference semantics used by unit
-tests and the CPU-scale experiments.
+In every setting the FCCO u state (and v2's individual temperatures) is
+sharded by sample ownership and updated shard-locally.
 """
 from __future__ import annotations
 
@@ -73,17 +80,51 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
     axes = tuple(mesh_axes)
     from jax.sharding import PartitionSpec as P
     pspec = P(axes)
+    shard_loss = make_shard_loss(fc, axes, reduction, loss_impl)
 
+    def dist_core(e1n, e2n, lu1, lu2, tau1, tau2, idx, gamma):
+        tau_is_arr = jnp.ndim(tau1) > 0
+
+        def inner(e1l, e2l, u1s, u2s, idxs, t1in, t2in):
+            return _shard_fcco_inner(shard_loss, axes, tau_is_arr, e1l,
+                                     e2l, u1s, u2s, idxs, t1in, t2in,
+                                     gamma)
+
+        in_specs = (pspec, pspec, pspec, pspec, pspec,
+                    pspec if tau_is_arr else P(),
+                    pspec if tau_is_arr else P())
+        out_specs = (P(), pspec, pspec, pspec, pspec,
+                     (pspec,) * 6, pspec)
+        fn = D.shard_map(inner, mesh=_current_mesh(),
+                         in_specs=in_specs, out_specs=out_specs)
+        loss, lu1_new, lu2_new, lu1r, lu2r, stats, sat = fn(
+            e1n, e2n, lu1, lu2, idx, tau1, tau2)
+        aux = {"u1_new": sg(lu1_new), "u2_new": sg(lu2_new),
+               "u1_rows": sg(lu1r), "u2_rows": sg(lu2r),
+               "stats": LS.RowStats(*jax.tree.map(sg, stats)),
+               "sat": sg(sat)}
+        return loss, aux
+
+    return dist_core
+
+
+def make_shard_loss(fc: FC.FastCLIPConfig, axes, reduction: str,
+                    loss_impl: str, reduce: str = "mean"):
+    """The per-shard loss callable shared by the shard_map island
+    (``dist_core``) and the sharded-state step: shard_loss(e1l, e2l,
+    lu1rows, lu2rows, t1, t2, gamma) -> (loss, lu1r, lu2r, stats, sat)
+    on local (b,)-rows.  ``reduce="local"`` returns the unreduced local
+    mean contribution (see distributed.make_fcco_loss_op)."""
     if reduction == "fastclip":
         op = D.make_fcco_loss_op(axes, fc.eps, fc.scale_by_tau,
-                                 loss_impl=loss_impl)
+                                 loss_impl=loss_impl, reduce=reduce)
 
         def shard_loss(e1l, e2l, lu1rows, lu2rows, t1, t2, gamma):
             loss, (lu1r, lu2r, stats, sat) = op(e1l, e2l, lu1rows,
                                                 lu2rows, t1, t2, gamma)
             return loss, sg(lu1r), sg(lu2r), tuple(stats), sat
     else:
-        pair = D.make_allgather_ad_pair_loss(axes)
+        pair = D.make_allgather_ad_pair_loss(axes, reduce=reduce)
 
         def shard_loss(e1l, e2l, lu1rows, lu2rows, t1, t2, gamma):
             # stats pre-pass (stop-grad; gathers CSE with the loss pass)
@@ -103,35 +144,22 @@ def make_loss_core(fc: FC.FastCLIPConfig, mesh_axes: Optional[Sequence[str]],
                                t2 * jnp.ones_like(lw2))
             return loss, lu1r, lu2r, tuple(stats), sat
 
-    def dist_core(e1n, e2n, lu1, lu2, tau1, tau2, idx, gamma):
-        tau_is_arr = jnp.ndim(tau1) > 0
+    return shard_loss
 
-        def inner(e1l, e2l, u1s, u2s, idxs, t1in, t2in):
-            shard = u1s.shape[0]
-            rel = idxs - D._global_index(axes) * shard
-            t1 = t1in[rel] if tau_is_arr else t1in
-            t2 = t2in[rel] if tau_is_arr else t2in
-            loss, lu1r, lu2r, stats, sat = shard_loss(
-                e1l, e2l, u1s[rel], u2s[rel], t1, t2, gamma)
-            return (loss, u1s.at[rel].set(lu1r), u2s.at[rel].set(lu2r),
-                    lu1r, lu2r, stats, sat)
 
-        in_specs = (pspec, pspec, pspec, pspec, pspec,
-                    pspec if tau_is_arr else P(),
-                    pspec if tau_is_arr else P())
-        out_specs = (P(), pspec, pspec, pspec, pspec,
-                     (pspec,) * 6, pspec)
-        fn = D.shard_map(inner, mesh=_current_mesh(),
-                         in_specs=in_specs, out_specs=out_specs)
-        loss, lu1_new, lu2_new, lu1r, lu2r, stats, sat = fn(
-            e1n, e2n, lu1, lu2, idx, tau1, tau2)
-        aux = {"u1_new": sg(lu1_new), "u2_new": sg(lu2_new),
-               "u1_rows": sg(lu1r), "u2_rows": sg(lu2r),
-               "stats": LS.RowStats(*jax.tree.map(sg, stats)),
-               "sat": sg(sat)}
-        return loss, aux
-
-    return dist_core
+def _shard_fcco_inner(shard_loss, axes, tau_is_arr, e1l, e2l, u1s, u2s,
+                      idxs, t1in, t2in, gamma):
+    """One device's FCCO step on its sample shard: relative-index the
+    local u/tau shards, run the loss op, scatter the new log-u rows back.
+    Returns (loss, u1s_new, u2s_new, lu1r, lu2r, stats, sat)."""
+    shard = u1s.shape[0]
+    rel = idxs - D._global_index(axes) * shard
+    t1 = t1in[rel] if tau_is_arr else t1in
+    t2 = t2in[rel] if tau_is_arr else t2in
+    loss, lu1r, lu2r, stats, sat = shard_loss(
+        e1l, e2l, u1s[rel], u2s[rel], t1, t2, gamma)
+    return (loss, u1s.at[rel].set(lu1r), u2s.at[rel].set(lu2r),
+            lu1r, lu2r, stats, sat)
 
 
 _MESH = None
@@ -169,6 +197,12 @@ class TrainStepConfig:
     # tower mixed-precision policy ("f32" | "bf16"); None defers to
     # arch.precision.  The loss layer stays f32 under any policy.
     precision: Optional[str] = None
+    # sharded-state mode: run the whole step inside one shard_map over a
+    # (data, fsdp) mesh (core.shard_state contract) — params/moments
+    # ZeRO-sharded over "fsdp", weight gathers at use, psum_scatter
+    # gradient reduction.  Requires mesh_axes == ("data", "fsdp") (or
+    # None, which defaults to it) and set_mesh() with a matching mesh.
+    fsdp: bool = False
 
     @property
     def resolved_precision(self) -> PR.Precision:
@@ -186,6 +220,8 @@ def init_train_state(rng, tc: TrainStepConfig):
 
 
 def make_train_step(tc: TrainStepConfig):
+    if tc.fsdp:
+        return make_fsdp_train_step(tc)
     fc = tc.fc
     prec = tc.resolved_precision
     gamma_fn = fc.gamma_fn()
@@ -281,6 +317,196 @@ def make_train_step(tc: TrainStepConfig):
         new_state = {"params": params, "opt": opt, "fc": new_fc,
                      "step": step + 1}
         return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharded-state train step: the (data, fsdp) named-mesh contract (PR 5)
+# ---------------------------------------------------------------------------
+
+def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
+    """The whole train step inside ONE shard_map over the (data, fsdp)
+    mesh (``set_mesh`` first): state enters as local shards per
+    ``core.shard_state`` — params/optimizer moments ZeRO-sharded over
+    ``fsdp``, FCCO u/tau buffers and the batch by sample ownership over
+    both axes.
+
+    Distribution contract (vs. the replicated ``mesh_axes`` path):
+
+      * the forward all-gathers each sharded weight over ``fsdp`` at its
+        use site; with ``models.sharding.inner_remat()`` (the default)
+        the gathered weights are excluded from the residuals and
+        re-gathered in the backward (re-gather vs. remat stays a knob);
+      * the backward's param-gradient reduction is the all-gather's
+        transpose — a **psum_scatter (reduce-scatter) onto each device's
+        shard** — finished by a shard-sized psum over ``data``
+        (``shard_state.reduce_grads``): no full-tree all-reduce of param
+        gradients is ever emitted;
+      * the FCCO loss op keeps its own comms contract untouched (feature
+        gather + O(K|B|) scalar gather over both axes; its ``local``
+        reduction keeps psums out of the differentiated region);
+      * the optimizer updates only the local shard (requires
+        ``Optimizer.shard_safe``; LAMB's whole-leaf trust ratio is not).
+
+    With fsdp=1 every leaf replicates and the same code path is plain
+    data parallelism (gathers become identity).  ``param_dims`` overrides
+    the ZeRO layout (``shard_state.param_fsdp_dims`` shape; all-None =
+    fully replicated params on the same mesh — the parity oracle): the
+    replicated-spec and sharded-spec runs stage their reductions
+    identically (fsdp first, then data), so at axis size 2 they are
+    bit-identical."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import shard_state as SS
+    from repro.models import sharding as SH
+
+    fc = tc.fc
+    prec = tc.resolved_precision
+    gamma_fn = fc.gamma_fn()
+    axes = tuple(tc.mesh_axes) if tc.mesh_axes else SS.TRAIN_AXES
+    if axes != SS.TRAIN_AXES:
+        raise ValueError(f"fsdp step runs on mesh axes {SS.TRAIN_AXES}, "
+                         f"got mesh_axes={axes}")
+    mesh = _current_mesh()
+    fsdp = SS.fsdp_size(mesh)
+    if fsdp > 1 and not tc.optimizer.shard_safe:
+        raise ValueError(
+            f"optimizer {tc.optimizer.name!r} is not shard-safe (its "
+            "update needs whole leaves); use adamw/sgdm/lion with fsdp>1")
+    if SH.configured_batch_axes() is not None:
+        raise ValueError(
+            "the sharded-state step is fully manual (one shard_map): "
+            "unset models.sharding.set_batch_axes (GSPMD constraints "
+            "don't apply inside it)")
+
+    p_shapes = BB.param_shapes(tc.arch)
+    p_dims = (SS.param_fsdp_dims(p_shapes, fsdp) if param_dims is None
+              else param_dims)
+    loss_impl = tc.loss_impl or fc.loss_impl
+    if fc.version == "openclip":
+        mbcl = D.make_mbcl_loss(axes, reduce="local")
+        shard_loss = None
+    else:
+        mbcl = None
+        shard_loss = make_shard_loss(fc, axes, tc.reduction, loss_impl,
+                                     reduce="local")
+
+    # state/batch specs (shard_map in/out); metrics replicate (prefix P())
+    state_like = {
+        "params": p_shapes,
+        "opt": jax.eval_shape(tc.optimizer.init, p_shapes),
+        "fc": jax.eval_shape(lambda: FC.init_state(fc)),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    state_specs = SS.train_state_specs(state_like, fsdp, param_dims=p_dims)
+
+    def pmean(x):
+        return jax.lax.pmean(x, axes)
+
+    def step_local(state, batch, idx):
+        fcs = state["fc"]
+        step = state["step"]
+        gamma = gamma_fn(step)
+        lr = tc.lr_fn(step)
+        tau1, tau2 = ((fcs["tau1"], fcs["tau2"]) if fc.individual_tau
+                      else (fcs["tau"], fcs["tau"]))
+        if fc.uses_fcco:
+            shard = fcs["u1"].shape[0]
+            rel = idx - D._global_index(axes) * shard
+        else:
+            rel = None
+
+        def loss_fn(p_shards, tau_diff):
+            params = SS.gather_params(
+                p_shards, p_dims,
+                remat_name="fsdp_gather" if SH.inner_remat() else None)
+            e1, e2 = BB.encode_pair(params, tc.arch, batch, impl=tc.impl,
+                                    precision=prec)
+            e1n = LS.l2_normalize(e1)
+            e2n = LS.l2_normalize(e2)
+            if fc.version == "openclip":
+                local = mbcl(e1n, e2n, tau_diff)
+                return local, {"e1n": sg(e1n), "e2n": sg(e2n)}
+            t1in = fcs["tau1"] if fc.individual_tau else sg(tau_diff)
+            t2in = fcs["tau2"] if fc.individual_tau else sg(tau_diff)
+            local, u1n, u2n, lu1r, lu2r, stats, sat = _shard_fcco_inner(
+                shard_loss, axes, fc.individual_tau, e1n, e2n,
+                fcs["u1"], fcs["u2"], idx, t1in, t2in, gamma)
+            aux = {"u1_new": sg(u1n), "u2_new": sg(u2n),
+                   "u1_rows": sg(lu1r), "u2_rows": sg(lu2r),
+                   "stats": LS.RowStats(*jax.tree.map(sg, stats)),
+                   "sat": sg(sat), "e1n": sg(e1n), "e2n": sg(e2n)}
+            return local, aux
+
+        if SH.inner_remat():
+            loss_fn = jax.checkpoint(
+                loss_fn,
+                policy=jax.checkpoint_policies.save_any_names_but_these(
+                    "fsdp_gather"))
+
+        (local, aux), (grads, gtau) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True)(
+                state["params"], tau1 if not fc.individual_tau else 0.0)
+        loss = D._psum(local, axes)      # local is the /B contribution
+        grads = SS.reduce_grads(grads, p_dims)
+
+        if tc.grad_clip:
+            grads, gnorm = clip_by_global_norm(
+                grads, tc.grad_clip, axes=("fsdp",), sharded_dims=p_dims)
+        else:
+            gnorm = jnp.asarray(0.0)
+
+        params, opt = tc.optimizer.update(
+            state["params"], grads, state["opt"], lr=lr, wd=tc.wd)
+
+        new_fc = dict(fcs)
+        metrics = {"loss": loss, "lr": lr, "gamma": gamma,
+                   "grad_norm": gnorm}
+        if fc.version == "openclip":
+            if fc.learnable_tau:
+                new_fc = FC.tau_update(fc, new_fc, D._psum(gtau, axes))
+            metrics["tau"] = new_fc.get("tau", tau1)
+        else:
+            new_fc["u1"] = aux["u1_new"]
+            new_fc["u2"] = aux["u2_new"]
+            stats_aux = {"lu1_new": aux["u1_rows"],
+                         "lu2_new": aux["u2_rows"],
+                         "m1": aux["stats"].m1, "m2": aux["stats"].m2,
+                         "dg1_dtau": aux["stats"].dg1_dtau,
+                         "dg2_dtau": aux["stats"].dg2_dtau}
+            t1r = tau1[rel] if fc.individual_tau else tau1
+            t2r = tau2[rel] if fc.individual_tau else tau2
+            tg = FC.tau_gradient(fc, stats_aux, t1r, t2r)
+            if fc.individual_tau:
+                # per-row grads stay shard-local (stochastic coordinate
+                # update on the owned rows)
+                new_fc = FC.tau_update(fc, new_fc, tg, idx=rel)
+                metrics["tau"] = pmean(jnp.mean(new_fc["tau1"]))
+            elif tg is not None:
+                # scalar tau grads are batch means: pmean the equal-size
+                # shard means for the global mean
+                new_fc = FC.tau_update(fc, new_fc, pmean(tg))
+                metrics["tau"] = new_fc["tau"]
+            else:
+                metrics["tau"] = tau1
+            metrics["u_mean"] = pmean(jnp.mean(
+                jnp.exp(jnp.minimum(aux["u1_rows"], 80.0))))
+            metrics["sat_rate"] = pmean(jnp.mean(aux["sat"]))
+            metrics["loss_value"] = pmean(FC.loss_value(
+                fc, {"lu1_new": aux["u1_rows"],
+                     "lu2_new": aux["u2_rows"]}, t1r, t2r))
+        new_fc["step"] = fcs["step"] + 1
+
+        new_state = {"params": params, "opt": opt, "fc": new_fc,
+                     "step": step + 1}
+        return new_state, metrics
+
+    def train_step(state, batch, idx):
+        b_specs = SS.batch_specs(batch)
+        fn = D.shard_map(step_local, mesh=mesh,
+                         in_specs=(state_specs, b_specs, P(axes)),
+                         out_specs=(state_specs, P()))
+        return fn(state, batch, idx)
 
     return train_step
 

@@ -66,7 +66,8 @@ class ClipEvaluator:
                  ks: Sequence[int] = (1, 5, 10),
                  top_ks: Sequence[int] = (1, 5), chunk: int = RT.CHUNK,
                  templates=DEFAULT_TEMPLATES,
-                 loss_impl: Optional[str] = None, tau: float = 0.07):
+                 loss_impl: Optional[str] = None, tau: float = 0.07,
+                 param_shardings=None):
         if cfg.family != "clip":
             raise ValueError("ClipEvaluator needs a clip-family arch; got "
                              f"{cfg.family!r}")
@@ -81,12 +82,22 @@ class ClipEvaluator:
         self.batch_size, self.prefetch = batch_size, prefetch
         self.head_cache: dict = {}
         self._head_key = None
+        # param_shardings: the training (data, fsdp) layout — the
+        # periodic eval hook consumes sharded params as-is (no host
+        # gather, no re-layout, no recompile; see make_extract_fn)
         self._extract = EX.make_extract_fn(
             lambda p, b: BB.encode_pair(p, cfg, b, impl=impl,
-                                        precision=prec))
-        self._encode_text = jax.jit(
-            lambda p, t: C.encode_text(p, cfg, t, impl=impl,
-                                       precision=prec))
+                                        precision=prec),
+            param_shardings=param_shardings)
+        text_fn = (lambda p, t: C.encode_text(p, cfg, t, impl=impl,
+                                              precision=prec))
+        if param_shardings is None:
+            self._encode_text = jax.jit(text_fn)
+        else:
+            rep = EX.replicated_like(param_shardings)
+            self._encode_text = jax.jit(
+                text_fn, in_shardings=(param_shardings, rep),
+                out_shardings=rep)
 
     def evaluate(self, params, *, cache_key=None) -> dict:
         """Full eval pass.  ``cache_key``: identity of ``params`` (e.g.

@@ -68,10 +68,29 @@ def extract_pair_embeddings(encode_pair_fn: Callable, params, dataset, *,
     return np.concatenate(outs1), np.concatenate(outs2)
 
 
-def make_extract_fn(encode_pair_fn: Callable):
+def make_extract_fn(encode_pair_fn: Callable, *, param_shardings=None):
     """jit the tower pair forward + f32 L2 normalization once; reuse via
-    ``extract_pair_embeddings(..., jit_fn=...)`` across eval calls."""
+    ``extract_pair_embeddings(..., jit_fn=...)`` across eval calls.
+
+    ``param_shardings``: the training state's param NamedSharding tree
+    (the (data, fsdp) mesh contract, ``core.shard_state``).  When given,
+    the jit consumes the params **in their training layout** — the
+    in-training ``--eval-every`` hook never re-lays-out (or gathers) the
+    sharded params on the host; GSPMD inserts the per-use weight gathers
+    — and returns replicated embeddings (cheap host transfer)."""
     def fwd(params, batch):
         e1, e2 = encode_pair_fn(params, batch)
         return LS.l2_normalize(e1), LS.l2_normalize(e2)
-    return jax.jit(fwd)
+    if param_shardings is None:
+        return jax.jit(fwd)
+    rep = replicated_like(param_shardings)
+    return jax.jit(fwd, in_shardings=(param_shardings, rep),
+                   out_shardings=rep)
+
+
+def replicated_like(param_shardings):
+    """The replicated NamedSharding on the mesh a sharding tree lives on
+    (shared by the extraction and text-encoder jits)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.tree.leaves(param_shardings)[0].mesh
+    return NamedSharding(mesh, P())

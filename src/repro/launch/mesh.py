@@ -29,6 +29,79 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(devices, axes)
 
 
+# ---------------------------------------------------------------------------
+# Training mesh: the (data, fsdp) contract (PR 5)
+# ---------------------------------------------------------------------------
+# One named mesh shared by train, eval and checkpointing: the batch (and
+# the FCCO u state, by sample ownership) shards over *both* axes, weights
+# and optimizer moments ZeRO-shard one dim over ``fsdp`` only (replicated
+# across ``data``).  ``fsdp=1`` degenerates to plain data parallelism
+# through the same code path.
+
+TRAIN_AXES = ("data", "fsdp")
+
+
+def make_train_mesh(data: int, fsdp: int = 1, *, devices=None) -> Mesh:
+    """(data, fsdp) mesh over the first data*fsdp devices."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    n = data * fsdp
+    if len(devices) < n:
+        raise ValueError(f"mesh data:{data},fsdp:{fsdp} needs {n} devices, "
+                         f"have {len(devices)}")
+    return Mesh(np.array(devices[:n]).reshape(data, fsdp), TRAIN_AXES)
+
+
+def parse_mesh_arg(spec: str):
+    """'data:N[,fsdp:M]' -> (N, M).  Axis order is fixed; fsdp defaults
+    to 1 (pure data parallelism on the same named-mesh path)."""
+    sizes = {"data": None, "fsdp": 1}
+    for part in spec.split(","):
+        if ":" not in part:
+            raise ValueError(f"bad mesh spec {spec!r} (want data:N[,fsdp:M])")
+        name, _, val = part.partition(":")
+        name = name.strip()
+        if name not in sizes:
+            raise ValueError(f"unknown mesh axis {name!r} in {spec!r} "
+                             f"(train meshes have axes {TRAIN_AXES})")
+        sizes[name] = int(val)
+    if sizes["data"] is None or sizes["data"] < 1 or sizes["fsdp"] < 1:
+        raise ValueError(f"bad mesh spec {spec!r} (want data:N[,fsdp:M], "
+                         f"N,M >= 1)")
+    return sizes["data"], sizes["fsdp"]
+
+
+# Leaves that never shard: norms/scales/biases, attention biases, SSM
+# scalars, cls/pos embeddings (tiny; gathering them would cost more than
+# the memory saved).
+_FSDP_REPLICATED = re.compile(
+    r"(norm|scale|bias|b[qkv]|b_(in|out)|A_log|dt_bias|/D$|cls|pos)")
+FSDP_MIN_ELEMENTS = 1 << 12
+
+
+def fsdp_leaf_dim(path: str, shape: Sequence[int],
+                  size: int) -> Optional[int]:
+    """The dim a leaf ZeRO-shards over an fsdp axis of ``size`` (None =
+    replicated).  Deterministic in (path, shape, size) only — the
+    checkpoint reshard guarantee relies on the rule being recomputable —
+    and shared by the sharded train step (all-gather axis / psum-scatter
+    dim), the state shardings, and the per-shard checkpoint layout.
+    Prefers the contraction dim (-2 in the x@w convention), then -1,
+    then the largest remaining divisible dim."""
+    if size <= 1 or len(shape) < 2:
+        return None
+    if int(np.prod(shape)) < FSDP_MIN_ELEMENTS:
+        return None
+    if _FSDP_REPLICATED.search(path):
+        return None
+    cand = [len(shape) - 2, len(shape) - 1]
+    cand += sorted((i for i in range(len(shape) - 2)),
+                   key=lambda i: -shape[i])
+    for i in cand:
+        if shape[i] % size == 0 and shape[i] >= size:
+            return i
+    return None
+
+
 def batch_axes(mesh: Mesh, mode: str = "tp") -> tuple:
     if mode == "fsdp":
         # pure data parallelism: batch over every axis; weights FSDP

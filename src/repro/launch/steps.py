@@ -1,12 +1,20 @@
 """Step builders + abstract input specs for every (arch x input-shape).
 
-Step kinds per shape (DESIGN.md §4):
-    train_4k     -> train_step   (native objective; --objective contrastive
-                                  runs the FastCLIP two-tower objective)
-    prefill_32k  -> prefill_step (forward, last-position logits)
-    decode_32k   -> serve_step   (one token, full KV cache / SSM state)
-    long_500k    -> serve_step   (SSM/hybrid native; full-attention archs
-                                  run the sliding-window variant W=8192)
+Serves two callers:
+
+  * the LM dry-run path (``launch.dryrun``): abstract specs + step
+    builders per (arch x input-shape), step kinds per shape
+    (DESIGN.md §4):
+        train_4k     -> train_step   (native objective; --objective
+                                      contrastive runs FastCLIP)
+        prefill_32k  -> prefill_step (forward, last-position logits)
+        decode_32k   -> serve_step   (one token, full KV cache / SSM)
+        long_500k    -> serve_step   (SSM/hybrid native; full-attention
+                                      archs run sliding-window W=8192)
+  * the production trainers: ``donated_jit`` is the jit wrapper of BOTH
+    the LM and the contrastive (FastCLIP) train steps in
+    ``launch.train`` — including the sharded-state (data, fsdp) step,
+    whose NamedSharding-annotated state it donates in place.
 """
 from __future__ import annotations
 
@@ -24,7 +32,12 @@ from repro.models import backbones as BB
 from repro.optim import adamw
 
 LONG_WINDOW = 8192          # sliding window for long_500k on attention archs
-PARAM_DTYPE = jnp.bfloat16  # dry-run / production compute dtype
+# Dry-run compute/input dtype for the LM shapes' abstract specs ONLY.
+# The contrastive trainer's dtypes come from models.precision policies:
+# params/opt moments/FCCO-u stay f32 masters under any policy (the PR 3
+# invariant, asserted by train_step.check_state_dtypes) — PARAM_DTYPE
+# does not affect them.
+PARAM_DTYPE = jnp.bfloat16
 
 
 def needs_window_override(cfg: ArchConfig, shape: InputShape) -> bool:
@@ -125,13 +138,23 @@ def make_contrastive_train_step(cfg: ArchConfig, fc: FCC.FastCLIPConfig,
     return TS.make_train_step(tc), tc
 
 
-def donated_jit(step_fn):
+def donated_jit(step_fn, in_shardings=None, out_shardings=None):
     """jit a ``(state, *rest) -> (new_state, metrics)`` step with the state
     buffers donated: XLA reuses the params/opt/u input allocations for the
     outputs, halving the steady-state HBM held for the train state.  Safe
     because every caller rebinds ``state`` to the step's return value (the
-    donated input is invalid after the call)."""
-    return jax.jit(step_fn, donate_argnums=0)
+    donated input is invalid after the call).
+
+    This is the production jit of both the LM and the contrastive step.
+    For the sharded-state (data, fsdp) path pass the ``core.shard_state``
+    NamedSharding trees: donation is per-shard (input and output layouts
+    match leaf-for-leaf, so XLA aliases the sharded buffers in place)."""
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    return jax.jit(step_fn, donate_argnums=0, **kw)
 
 
 def make_prefill_step(cfg: ArchConfig, *, impl="chunked"):

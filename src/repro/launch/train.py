@@ -6,6 +6,13 @@ objectives on synthetic data, with checkpointing and periodic eval.
     PYTHONPATH=src python -m repro.launch.train \
         --arch clip-vitb32-cc12m --version v3 --steps 200 --reduced \
         [--objective contrastive|lm] [--ckpt-dir ckpts] [--resume]
+
+``--mesh data:N[,fsdp:M]`` runs the contrastive trainer on the named
+(data, fsdp) mesh (``core.shard_state`` contract): batch + FCCO u state
+sharded by sample ownership over all N*M devices, params and optimizer
+moments ZeRO-sharded over fsdp with reduce-scatter gradient reduction,
+per-shard checkpoints (restorable at any other mesh shape), and the
+periodic eval consuming the sharded params in place.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ import numpy as np
 from repro import checkpoint as CK
 from repro.configs import INPUT_SHAPES, get_arch
 from repro.core import fastclip as FC
+from repro.core import shard_state as SS
 from repro.core import train_step as TS
 from repro.core.schedules import lr_warmup_cosine
 from repro.data import (ContrastiveDataset, DevicePrefetcher, LMDataset,
@@ -76,6 +84,12 @@ def main(argv=None):
                          "mode off-TPU), or the O(S^2) oracle")
     ap.add_argument("--prefetch", type=int, default=2,
                     help="host->device prefetch depth (0 disables)")
+    ap.add_argument("--mesh", default=None,
+                    help="data:N[,fsdp:M] — run the contrastive step on "
+                         "the named (data, fsdp) mesh: batch/u sharded "
+                         "over all N*M devices, params+moments ZeRO-"
+                         "sharded over fsdp (reduce-scatter grads, "
+                         "sharded checkpoints); unset = single-device")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--resume", action="store_true")
@@ -94,8 +108,20 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     ds = build_dataset(cfg, args.objective, args.n_samples, args.seq_len)
+
+    mesh = None
+    shardings = None
+    if args.mesh:
+        if args.objective == "lm" and cfg.family != "clip":
+            raise SystemExit("--mesh drives the contrastive trainer; the "
+                             "LM shapes run on the production mesh via "
+                             "repro.launch.dryrun")
+        data_sz, fsdp_sz = SS.parse_mesh_arg(args.mesh)
+        mesh = SS.make_train_mesh(data_sz, fsdp_sz)
+        TS.set_mesh(mesh)
+    n_shards = data_sz * fsdp_sz if mesh is not None else 1
     loader = ShardedLoader(ds, global_batch=args.global_batch,
-                           seed=args.seed)
+                           n_shards=n_shards, seed=args.seed)
 
     if args.objective == "lm" and cfg.family != "clip":
         from repro.launch.steps import make_lm_train_step
@@ -125,9 +151,21 @@ def main(argv=None):
                                    args.steps),
             wd=args.wd, reduction=args.reduction,
             loss_impl=args.loss_impl, impl=args.impl,
-            precision=args.precision)
+            precision=args.precision,
+            mesh_axes=SS.TRAIN_AXES if mesh is not None else None,
+            fsdp=mesh is not None)
         state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
-        jit_step = donated_jit(TS.make_train_step(tc))
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            state, shardings = SS.shard_train_state(state, mesh)
+            sample_sh = NamedSharding(mesh, SS.SAMPLE_SPEC)
+            rep_sh = NamedSharding(mesh, jax.sharding.PartitionSpec())
+            jit_step = donated_jit(
+                TS.make_train_step(tc),
+                in_shardings=(shardings, sample_sh, sample_sh),
+                out_shardings=(shardings, rep_sh))
+        else:
+            jit_step = donated_jit(TS.make_train_step(tc))
 
         def run_step(state, idx, batch):
             return jit_step(state, batch, jnp.asarray(idx))
@@ -136,6 +174,11 @@ def main(argv=None):
     if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir):
         like = jax.tree.map(jnp.zeros_like, state)
         state, start, _ = CK.restore(args.ckpt_dir, like)
+        if mesh is not None:
+            # the merge in CK.restore produced global host arrays; lay
+            # them back out on this run's mesh (the reshard round-trip:
+            # any saving mesh shape restores here bit-exactly)
+            state = jax.device_put(state, shardings)
         print(f"resumed from step {start}")
 
     evaluator = None
@@ -150,7 +193,8 @@ def main(argv=None):
         evaluator = ClipEvaluator(
             cfg, eval_ds, impl=args.impl, precision=args.precision,
             batch_size=args.eval_batch,
-            loss_impl=args.loss_impl or "dense")
+            loss_impl=args.loss_impl or "dense",
+            param_shardings=shardings["params"] if shardings else None)
 
     def run_eval(step):
         em = evaluator.evaluate(state["params"], cache_key=int(step))
@@ -184,8 +228,13 @@ def main(argv=None):
             if evaluator is not None and (step + 1) % args.eval_every == 0:
                 run_eval(step + 1)
             if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
-                        metadata={"arch": args.arch, "version": args.version})
+                meta = {"arch": args.arch, "version": args.version}
+                if mesh is not None:
+                    CK.save_sharded(args.ckpt_dir, state, step + 1,
+                                    metadata=meta)
+                else:
+                    CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
+                            metadata=meta)
     finally:
         if isinstance(stream, DevicePrefetcher):
             stream.close()  # release the producer on early exit too
@@ -197,13 +246,20 @@ def main(argv=None):
         eval_batch = {k: jnp.asarray(v)
                       for k, v in ds.batch(np.arange(
                           min(128, args.n_samples))).items()}
-        acc = float(TS.retrieval_accuracy(state["params"], cfg, eval_batch))
+        # the ad-hoc metric runs eagerly on one device; merge the shards
+        params = (jax.device_get(state["params"]) if mesh is not None
+                  else state["params"])
+        acc = float(TS.retrieval_accuracy(params, cfg, eval_batch))
         print(f"retrieval accuracy: {acc:.4f}")
     if evaluator is not None and args.steps % args.eval_every != 0:
         run_eval(args.steps)   # final eval unless the loop just ran it
     if args.ckpt_dir:
-        CK.save(args.ckpt_dir, jax.device_get(state), args.steps,
-                metadata={"arch": args.arch, "version": args.version})
+        meta = {"arch": args.arch, "version": args.version}
+        if mesh is not None:
+            CK.save_sharded(args.ckpt_dir, state, args.steps, metadata=meta)
+        else:
+            CK.save(args.ckpt_dir, jax.device_get(state), args.steps,
+                    metadata=meta)
     return state
 
 

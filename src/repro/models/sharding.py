@@ -33,6 +33,14 @@ def set_batch_axes(axes: Optional[Sequence[str]], seq_axis=None):
     _SEQ_AXIS = seq_axis
 
 
+def configured_batch_axes() -> Optional[Tuple[str, ...]]:
+    """The GSPMD batch axes currently configured (None = constrain is a
+    no-op).  The manual sharded-state train step requires None: inside
+    its shard_map, sharding constraints don't apply — the (data, fsdp)
+    layout is carried by the shard_map specs instead."""
+    return _BATCH_AXES
+
+
 def enable_moe_a2a(mesh):
     """All-to-all expert routing (§Perf).  Requires the batch to be
     sharded over the model axis too (fsdp layout)."""

@@ -20,6 +20,11 @@ class Optimizer:
     name: str
     init: Callable[[Any], Any]
     update: Callable[..., Any]  # (params, grads, state, *, lr, wd) -> (p, s)
+    # True when ``update`` is purely elementwise per leaf, so running it
+    # on ZeRO-sharded leaves updates the local shard exactly (the sharded
+    # train step's contract).  LAMB's per-leaf trust ratio needs the full
+    # leaf norm and sets this False.
+    shard_safe: bool = True
 
 
 def tree_zeros_like(params):
@@ -27,13 +32,30 @@ def tree_zeros_like(params):
                         params)
 
 
-def global_norm(tree):
-    leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+def global_norm(tree, *, axes=None, sharded_dims=None):
+    """L2 norm over every leaf.  With ``axes`` (shard_map axis names) the
+    tree holds *local shards*: leaves marked in ``sharded_dims`` (a
+    matching pytree, non-None = fsdp-sharded) psum their squared sum over
+    ``axes`` so the result is the global-tree norm on every device.
+    Replicated leaves contribute their full local value once."""
+    sq_rep = jnp.asarray(0.0, jnp.float32)
+    sq_shard = jnp.asarray(0.0, jnp.float32)
+    dims = (jax.tree.leaves(
+        sharded_dims, is_leaf=lambda d: d is None or isinstance(d, int))
+        if sharded_dims is not None
+        else [None] * len(jax.tree.leaves(tree)))
+    for leaf, dim in zip(jax.tree.leaves(tree), dims):
+        s = jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+        if dim is None:
+            sq_rep = sq_rep + s
+        else:
+            sq_shard = sq_shard + s
+    if axes is not None and sharded_dims is not None:
+        sq_shard = jax.lax.psum(sq_shard, tuple(axes))
+    return jnp.sqrt(sq_rep + sq_shard)
 
 
-def clip_by_global_norm(grads, max_norm):
-    n = global_norm(grads)
+def clip_by_global_norm(grads, max_norm, *, axes=None, sharded_dims=None):
+    n = global_norm(grads, axes=axes, sharded_dims=sharded_dims)
     scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
     return jax.tree.map(lambda g: g * scale, grads), n

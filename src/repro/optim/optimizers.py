@@ -131,7 +131,9 @@ def lamb(beta1=0.9, beta2=0.999, eps=1e-6):
         new_v = jax.tree.map(lambda t_: t_[2], flat, is_leaf=is3)
         return new_p, {"m": new_m, "v": new_v, "t": t}
 
-    return Optimizer("lamb", init, update)
+    # the trust ratio norms the *whole* leaf: on a ZeRO shard it would
+    # silently norm the local slice only, so the sharded step rejects it
+    return Optimizer("lamb", init, update, shard_safe=False)
 
 
 OPTIMIZERS = {"adamw": adamw, "lamb": lamb, "lion": lion, "sgdm": sgdm}

@@ -1,0 +1,358 @@
+"""Subprocess helper: sharded-state ((data, fsdp) mesh) train-step checks
+with forced host devices.  Run: python tests/helpers/fsdp_check.py <name>
+Prints PASS/FAIL lines; exit code 0 on success.
+
+Checks:
+  parity  3 steps on (data=2, fsdp=2): ZeRO-sharded run bit-identical in
+          loss/params/log-u to the replicated-layout run of the SAME
+          step code (the staged fsdp-then-data reductions are 2-wide, so
+          the reduction trees match bitwise), and both within 5e-5 of
+          the single-device reference step.
+  hlo     the lowered sharded step contains reduce-scatter ops and NO
+          all-reduce as large as any sharded param leaf (the gradient
+          all-reduce over `data` moves shard-sized pieces only).
+  memory  live per-device bytes of params+moments shrink ~1/fsdp.
+  ckpt    save_sharded at fsdp=4 -> restore merges bit-exactly; re-lay
+          out at fsdp=1 / (2,2) and round-trip again (mesh-shape
+          independence of the checkpoint format).
+  prop    hypothesis property: psum_scatter-then-all_gather == psum on
+          random integer-valued trees (exact sums -> bitwise equality
+          regardless of reduction order).
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))), "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_arch  # noqa: E402
+from repro.core import distributed as D  # noqa: E402
+from repro.core import fastclip as FC  # noqa: E402
+from repro.core import shard_state as SS  # noqa: E402
+from repro.core import train_step as TS  # noqa: E402
+from repro.core.schedules import lr_warmup_cosine  # noqa: E402
+from repro.data import ContrastiveDataset, ShardedLoader  # noqa: E402
+from repro.launch.steps import donated_jit  # noqa: E402
+from repro.models import backbones as BB  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+N_SAMPLES = 64
+GLOBAL_BATCH = 32
+
+
+def _setup(version="v3"):
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    fc = FC.FastCLIPConfig(version=version, n_samples=N_SAMPLES,
+                           steps_per_epoch=2, gamma_decay_epochs=2)
+    # grad_clip exercises the axis-aware sharded global-norm (psum over
+    # fsdp of sharded-leaf squares); the bound is far above real norms,
+    # so the clip scale is exactly 1.0 and bitwise parity is unaffected
+    tc = dict(arch=cfg, fc=fc, optimizer=adamw(),
+              lr_fn=lr_warmup_cosine(1e-3, 2, 10), wd=0.1,
+              grad_clip=100.0)
+    ds = ContrastiveDataset(n=N_SAMPLES, image_size=cfg.clip.image_size,
+                            context_length=cfg.clip.context_length,
+                            vocab_size=cfg.vocab_size, n_classes=8)
+    loader = ShardedLoader(ds, global_batch=GLOBAL_BATCH, n_shards=4)
+    batches = []
+    for _, _, idx, batch in loader.steps(3):
+        batches.append((jnp.asarray(idx),
+                        {k: jnp.asarray(v) for k, v in batch.items()}))
+    return cfg, fc, tc, batches
+
+
+def _run3(step_fn, state, batches):
+    losses = []
+    for idx, batch in batches:
+        state, m = step_fn(state, batch, idx)
+        losses.append(m["loss"])
+    return state, [float(x) for x in losses], float(m["grad_norm"])
+
+
+def _bitwise(a, b):
+    fa = jax.tree.leaves(jax.device_get(a))
+    fb = jax.tree.leaves(jax.device_get(b))
+    return len(fa) == len(fb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(fa, fb))
+
+
+def _maxdiff(a, b):
+    out = 0.0
+    for x, y in zip(jax.tree.leaves(jax.device_get(a)),
+                    jax.tree.leaves(jax.device_get(b))):
+        xa = np.asarray(x, np.float32)
+        yb = np.asarray(y, np.float32)
+        d = np.abs(xa - yb)
+        d[xa == yb] = 0.0   # incl. matching -inf (untouched log-u rows)
+        out = max(out, float(np.max(d)))
+    return out
+
+
+def check_parity(version="v3"):
+    cfg, fc, tckw, batches = _setup(version)
+    mesh = SS.make_train_mesh(2, 2)
+    TS.set_mesh(mesh)
+    tc = TS.TrainStepConfig(**tckw, mesh_axes=SS.TRAIN_AXES, fsdp=True)
+    state0 = jax.device_get(
+        TS.init_train_state(jax.random.PRNGKey(1), tc))
+    p_shapes = BB.param_shapes(cfg)
+
+    # sharded (ZeRO over fsdp=2) and replicated-layout runs of the SAME
+    # step code on the SAME mesh
+    st_sh, _ = SS.shard_train_state(state0, mesh)
+    step_sh = donated_jit(TS.make_train_step(tc))
+    st_sh, loss_sh, gn_sh = _run3(step_sh, st_sh, batches)
+
+    none_dims = jax.tree.map(lambda _: None, p_shapes)
+    st_rep, _ = SS.shard_train_state(state0, mesh, param_dims=none_dims)
+    step_rep = donated_jit(TS.make_fsdp_train_step(tc, param_dims=none_dims))
+    st_rep, loss_rep, gn_rep = _run3(step_rep, st_rep, batches)
+
+    ok = True
+    # the sharded global norm (psum over fsdp of sharded-leaf squares)
+    # must agree with the whole-leaf norm of the replicated layout
+    ok &= gn_sh > 0 and abs(gn_sh - gn_rep) < 1e-5 * max(gn_rep, 1.0)
+    print(f"{version} grad_norm sharded {gn_sh:.6f} vs replicated "
+          f"{gn_rep:.6f}")
+    bit_loss = all(np.float32(a).tobytes() == np.float32(b).tobytes()
+                   for a, b in zip(loss_sh, loss_rep))
+    bit_params = _bitwise(st_sh["params"], st_rep["params"])
+    bit_u = _bitwise(st_sh["fc"]["u1"], st_rep["fc"]["u1"]) and \
+        _bitwise(st_sh["fc"]["u2"], st_rep["fc"]["u2"])
+    bit_opt = _bitwise(st_sh["opt"], st_rep["opt"])
+    print(f"{version} sharded==replicated: loss {bit_loss} params "
+          f"{bit_params} log-u {bit_u} moments {bit_opt}")
+    ok &= bit_loss and bit_params and bit_u and bit_opt
+
+    # both against the single-device reference step (tolerance: the
+    # single-device matmuls group the batch reduction differently)
+    tc_1 = TS.TrainStepConfig(**tckw, mesh_axes=None)
+    st_1 = jax.device_put(state0)
+    step_1 = jax.jit(TS.make_train_step(tc_1))
+    st_1, loss_1, gn_1 = _run3(step_1, st_1, batches)
+    ok &= abs(gn_sh - gn_1) < 1e-4 * max(gn_1, 1.0)
+    dl = max(abs(a - b) for a, b in zip(loss_sh, loss_1))
+    dp = _maxdiff(st_sh["params"], st_1["params"])
+    du = _maxdiff(st_sh["fc"]["u1"], st_1["fc"]["u1"])
+    print(f"{version} vs single-device: dloss {dl:.2e} dparam {dp:.2e} "
+          f"dlog-u {du:.2e}")
+    ok &= dl < 1e-5 and dp < 5e-5 and du < 1e-4
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def _all_reduce_max_elems(hlo_text):
+    """Largest element count over all-reduce outputs in the HLO."""
+    import re
+    biggest = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        if not re.search(r"\ball-reduce(-start)?\(", rhs):
+            continue
+        for dims in re.findall(r"\w+\[([\d,]*)\]", rhs.split("(", 1)[0]):
+            n = int(np.prod([int(d) for d in dims.split(",") if d] or [1]))
+            biggest = max(biggest, n)
+    return biggest
+
+
+def check_hlo():
+    cfg, fc, tckw, batches = _setup()
+    mesh = SS.make_train_mesh(2, 2)
+    TS.set_mesh(mesh)
+    tc = TS.TrainStepConfig(**tckw, mesh_axes=SS.TRAIN_AXES, fsdp=True)
+    state0 = TS.init_train_state(jax.random.PRNGKey(1), tc)
+    st, _ = SS.shard_train_state(state0, mesh)
+    idx, batch = batches[0]
+    jf = donated_jit(TS.make_train_step(tc))
+    hlo = jf.lower(st, batch, idx).compile().as_text()
+
+    n_rs = hlo.count("reduce-scatter")
+    p_shapes = BB.param_shapes(cfg)
+    dims = SS.param_fsdp_dims(p_shapes, 2)
+    sharded_elems = [int(np.prod(l.shape)) for l, d in
+                     zip(jax.tree.leaves(p_shapes),
+                         jax.tree_util.tree_structure(p_shapes).flatten_up_to(dims))
+                     if d is not None]
+    full_tree = max(sharded_elems)
+    biggest_ar = _all_reduce_max_elems(hlo)
+    ok = n_rs > 0
+    # the `data`-axis gradient psum moves shard-sized pieces only: every
+    # all-reduce is at most 1/fsdp of the largest sharded param leaf
+    ok &= biggest_ar <= full_tree // 2
+    print(f"reduce-scatter ops: {n_rs}; largest all-reduce elems "
+          f"{biggest_ar} <= largest sharded param leaf {full_tree} / 2")
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_memory():
+    cfg, fc, tckw, _ = _setup()
+    mesh = SS.make_train_mesh(2, 2)
+    TS.set_mesh(mesh)
+    tc = TS.TrainStepConfig(**tckw, mesh_axes=SS.TRAIN_AXES, fsdp=True)
+    state0 = jax.device_get(
+        TS.init_train_state(jax.random.PRNGKey(1), tc))
+    st, _ = SS.shard_train_state(state0, mesh)
+    heavy = {"params": st["params"], "m": st["opt"]["m"],
+             "v": st["opt"]["v"]}
+    full = sum(int(np.prod(l.shape)) * 4
+               for l in jax.tree.leaves(heavy))
+    per_dev = SS.per_device_bytes(heavy)
+    frac = per_dev / full
+    # ~1/fsdp: everything but the tiny norm/bias/pos leaves is sharded
+    ok = frac < 0.62
+    print(f"params+moments per-device bytes {per_dev} / full {full} "
+          f"= {frac:.3f} (fsdp=2)")
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_ckpt():
+    import tempfile
+    cfg, fc, tckw, batches = _setup()
+    ok = True
+    # one optimizer step at fsdp=4 so moments/params are nontrivial
+    mesh4 = SS.make_train_mesh(1, 4)
+    TS.set_mesh(mesh4)
+    tc = TS.TrainStepConfig(**tckw, mesh_axes=SS.TRAIN_AXES, fsdp=True)
+    state0 = jax.device_get(
+        TS.init_train_state(jax.random.PRNGKey(1), tc))
+    st4, _ = SS.shard_train_state(state0, mesh4)
+    step4 = donated_jit(TS.make_train_step(tc))
+    idx, batch = batches[0]
+    st4, _m = step4(st4, batch, idx)
+    host = jax.device_get(st4)
+
+    from repro import checkpoint as CK
+    with tempfile.TemporaryDirectory() as d:
+        paths = CK.save_sharded(d, st4, 1, metadata={"mesh": "1x4"})
+        n_files = len(paths)
+        like = jax.tree.map(np.zeros_like, host)
+        merged, step, meta = CK.restore(d, like)
+        bit = _bitwise(merged, host)
+        print(f"fsdp=4 save ({n_files} shard files) -> merge bit-exact: "
+              f"{bit}")
+        ok &= bit and n_files == 4 and CK.latest_step(d) == 1
+
+        # restore at fsdp=1 (single-device layout) bit-exactly
+        mesh1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                     SS.TRAIN_AXES)
+        st1 = jax.device_put(merged,
+                             SS.train_state_shardings(mesh1, merged))
+        bit = _bitwise(st1, host)
+        print(f"restore at fsdp=1 bit-exact: {bit}")
+        ok &= bit
+
+        # and the reverse: save from fsdp=1 (degenerates to one npz),
+        # restore + re-lay out at (2,2)
+        paths1 = CK.save_sharded(d, st1, 2)
+        merged2, _, _ = CK.restore(d, like, step=2)
+        mesh22 = SS.make_train_mesh(2, 2)
+        st22 = jax.device_put(merged2,
+                              SS.train_state_shardings(mesh22, merged2))
+        bit = _bitwise(st22, host)
+        print(f"fsdp=1 save ({len(paths1)} file) -> restore at (2,2) "
+              f"bit-exact: {bit}")
+        ok &= bit and len(paths1) == 1 and CK.latest_step(d) == 2
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_prop():
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        print("SKIP-HYPOTHESIS")
+        print("PASS")
+        return True
+
+    mesh = SS.make_train_mesh(2, 2)
+
+    def scatter_gather_equals_psum(tree):
+        def inner(t):
+            scat = jax.tree.map(
+                lambda x: jax.lax.all_gather(
+                    jax.lax.psum_scatter(x, "fsdp", scatter_dimension=0,
+                                         tiled=True),
+                    "fsdp", axis=0, tiled=True), t)
+            summed = jax.tree.map(lambda x: jax.lax.psum(x, ("fsdp",)), t)
+            return scat, summed
+        fn = D.shard_map(inner, mesh=mesh, in_specs=(P(),),
+                         out_specs=(P(), P()))
+        return fn(tree)
+
+    leaf = st.lists(st.integers(min_value=-1000, max_value=1000),
+                    min_size=4, max_size=16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(leaf, min_size=1, max_size=4), st.integers(0, 3))
+    def prop(rows, pad):
+        tree = {f"w{i}": jnp.asarray(
+            np.resize(np.asarray(r, np.float32), (4, len(r) + pad)))
+            for i, r in enumerate(rows)}
+        scat, summed = scatter_gather_equals_psum(tree)
+        for a, b in zip(jax.tree.leaves(scat), jax.tree.leaves(summed)):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), \
+                (np.asarray(a), np.asarray(b))
+
+    prop()
+    print("psum_scatter-then-all_gather == psum (25 random trees, exact)")
+    print("PASS")
+    return True
+
+
+def check_launch():
+    """End-to-end launcher on --mesh data:2,fsdp:2: train + sharded
+    checkpoints + periodic eval on the sharded params, then resume from
+    the per-shard checkpoint."""
+    import tempfile
+    from repro import checkpoint as CK
+    from repro.launch import train as LT
+    ok = True
+    with tempfile.TemporaryDirectory() as d:
+        common = ["--arch", "clip-vitb32-cc12m", "--reduced",
+                  "--mesh", "data:2,fsdp:2", "--global-batch", "16",
+                  "--n-samples", "64", "--steps", "4", "--ckpt-every", "4",
+                  "--ckpt-dir", d, "--eval-every", "4",
+                  "--eval-classes", "4", "--eval-per-class", "4",
+                  "--log-every", "2"]
+        state = LT.main(common)
+        steps = CK.available_steps(d)
+        ok &= steps == [4]
+        import glob
+        shard_files = glob.glob(os.path.join(d, "*.shard*of*.npz"))
+        ok &= len(shard_files) == 2   # one npz per fsdp shard
+        print(f"trained 4 steps; sharded checkpoint files: "
+              f"{len(shard_files)} (want 2 = fsdp), steps {steps}")
+        state2 = LT.main(common + ["--resume"])
+        # resume loads step 4 == --steps, so no further steps run: the
+        # restored state must match the trained one bit-for-bit
+        bit = _bitwise(state, state2)
+        print(f"resumed state bit-identical: {bit}")
+        ok &= bit
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+CHECKS = {
+    "parity": check_parity,
+    "parity_v2": lambda: check_parity("v2"),
+    "hlo": check_hlo,
+    "memory": check_memory,
+    "ckpt": check_ckpt,
+    "prop": check_prop,
+    "launch": check_launch,
+}
+
+if __name__ == "__main__":
+    sys.exit(0 if CHECKS[sys.argv[1]]() else 1)
