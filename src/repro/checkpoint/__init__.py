@@ -1,4 +1,5 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
-    available_steps, latest_step, restore, restore_subtree, save,
-    save_sharded,
+    AsyncCheckpointer, available_steps, latest_step, prune_checkpoints,
+    restore, restore_subtree, save, save_sharded, set_fault_hook,
+    verify_step,
 )

@@ -16,19 +16,66 @@ fsdp=1, and vice versa): the merged global array is identical and the
 caller re-lays it out with ``jax.device_put``.  Plain ``save`` keeps
 working on sharded trees too (np.asarray gathers — the merge-at-save
 alternative); restores of either format are interchangeable.
+
+Durability contract (PR 6 — the fault-tolerance layer):
+
+  * **every write is atomic**: array files, the json sidecar and the
+    ``latest`` marker all go tmp-file + ``os.replace``, in that order
+    (arrays, then sidecar, then marker), so a kill at any byte leaves
+    either the previous complete step or an ignorable partial — never a
+    half-written file under a valid name;
+  * **per-leaf CRC32 digests** (dtype + shape + raw bytes) are recorded
+    in the sidecar and re-verified on restore; ``latest_step`` only ever
+    returns a step that passes verification (corrupt/truncated steps are
+    demoted and the newest *verified* step wins), and ``restore(step=
+    None)`` falls back through older steps on any load/parse/digest
+    failure instead of crashing;
+  * **async saves** (``AsyncCheckpointer``): leaves are snapshotted to
+    host arrays synchronously (so donation/mutation of the live state
+    cannot race the writer), then compressed and written on a background
+    thread — the step loop never blocks on ``np.savez_compressed``.
+    Writer errors surface on the next ``save``/``wait`` call;
+  * **retention** (``prune_checkpoints``): keep the last K steps plus
+    every N-th, delete the rest, so long runs don't fill the disk;
+  * the module-level **fault hook** (``set_fault_hook``) announces each
+    write stage (``pre_npz``/``mid_npz``/``npz``/``mid_sidecar``/
+    ``sidecar``/``latest``/``done``) — the chaos battery
+    (``repro.resilience.chaos``) SIGKILLs at these points to prove the
+    invariants above.
 """
 from __future__ import annotations
 
 import json
 import os
+import queue
 import re
-from typing import Any, Dict, List, Optional, Tuple
+import threading
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 _CKPT_RE = re.compile(r"^ckpt_(\d{8})\.(npz|json)$")
 _FSDP_AXIS = "fsdp"
+
+# ---------------------------------------------------------------------------
+# Fault hook (chaos injection points; no-op in production)
+# ---------------------------------------------------------------------------
+
+_FAULT_HOOK: Optional[Callable[[str], None]] = None
+
+
+def set_fault_hook(fn: Optional[Callable[[str], None]]) -> None:
+    """Install ``fn(event)`` to be called at every write stage of every
+    save (``repro.resilience.chaos`` uses this to kill mid-save)."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = fn
+
+
+def _fault(event: str) -> None:
+    if _FAULT_HOOK is not None:
+        _FAULT_HOOK(event)
 
 
 def _path_str(path) -> str:
@@ -43,27 +90,35 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def save(directory: str, tree: Any, step: int,
-         metadata: Optional[Dict] = None) -> str:
-    """Single-file save.  Sharded leaves are gathered to host first
-    (merge-at-save); use ``save_sharded`` to keep shards separate."""
-    os.makedirs(directory, exist_ok=True)
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    arrays = {}
-    order = []
-    for path, leaf in flat:
-        key = _path_str(path)
-        arrays[key] = np.asarray(leaf)
-        order.append(key)
-    path_npz = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    np.savez_compressed(path_npz, **arrays)
-    meta = {"step": step, "order": order, "metadata": metadata or {}}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
-    with open(os.path.join(directory, "latest"), "w") as f:
-        f.write(str(step))
-    return path_npz
+def _digest(arr: np.ndarray) -> int:
+    """CRC32 over dtype + shape + raw bytes: cheap, deterministic, and
+    catches truncation, bit rot and silent value corruption alike."""
+    a = np.ascontiguousarray(arr)
+    h = zlib.crc32(str((a.dtype.str, a.shape)).encode())
+    return zlib.crc32(a.tobytes(), h)
 
+
+def _atomic_replace(path: str, write_fn, kind: str) -> None:
+    """Write via ``write_fn(tmp_path)`` then ``os.replace`` — with the
+    ``mid_<kind>`` / ``<kind>`` fault events straddling the rename (the
+    exact window a crash leaves a tmp file but no visible change)."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        write_fn(tmp)
+        _fault(f"mid_{kind}")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+    _fault(kind)
+
+
+# ---------------------------------------------------------------------------
+# Snapshot (device -> host arrays) and write (host arrays -> disk)
+# ---------------------------------------------------------------------------
 
 def _leaf_fsdp_pieces(leaf):
     """(dim, [piece_0, ..., piece_{K-1}]) for a jax.Array ZeRO-sharded
@@ -93,9 +148,95 @@ def _leaf_fsdp_pieces(leaf):
     return dim, [by_start[k] for k in sorted(by_start)]
 
 
+def _snapshot(tree: Any, sharded: bool, copy: bool = False):
+    """Synchronously pull every leaf to host memory.  Returns
+    (pieces: {key: [np.ndarray per shard piece]}, dims: {key: concat
+    dim}, order: [key]).  ``sharded=False`` forces whole-leaf gathers
+    (one piece per key).  ``copy=True`` forces owned host buffers —
+    required for async writes: ``np.asarray`` may alias the live (soon
+    donated/mutated) buffer on the CPU backend."""
+    conv = (lambda a: np.array(a, copy=True)) if copy else np.asarray
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    pieces: Dict[str, List[np.ndarray]] = {}
+    dims: Dict[str, int] = {}
+    order = []
+    for path, leaf in flat:
+        key = _path_str(path)
+        order.append(key)
+        got = _leaf_fsdp_pieces(leaf) if sharded else None
+        if got is None:
+            pieces[key] = [conv(leaf)]
+        else:
+            dim, parts = got
+            dims[key] = dim
+            pieces[key] = [conv(p) for p in parts]
+    return pieces, dims, order
+
+
 def _shard_file(directory: str, step: int, k: int, n: int) -> str:
     return os.path.join(directory,
                         f"ckpt_{step:08d}.shard{k:02d}of{n:02d}.npz")
+
+
+def _step_files(directory: str, step: int, nshards: int) -> List[str]:
+    if nshards == 1:
+        return [os.path.join(directory, f"ckpt_{step:08d}.npz")]
+    return [_shard_file(directory, step, k, nshards)
+            for k in range(nshards)]
+
+
+def _write_step(directory: str, step: int, pieces, dims, order,
+                metadata: Optional[Dict], keep_last: int = 0,
+                keep_every: int = 0) -> List[str]:
+    """The single durable-write path under both sync and async saves:
+    atomic array file(s), then the digest-carrying sidecar, then the
+    ``latest`` marker, then retention."""
+    os.makedirs(directory, exist_ok=True)
+    nshards = max(len(v) for v in pieces.values())
+    digests = {key: [_digest(p) for p in parts]
+               for key, parts in pieces.items()}
+    paths = _step_files(directory, step, nshards)
+    _fault("pre_npz")
+    for k, path_npz in enumerate(paths):
+        arrays = {key: parts[k] for key, parts in pieces.items()
+                  if k < len(parts)}
+        def write_npz(tmp, a=arrays):
+            # through a handle: savez would append ".npz" to the tmp name
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, **a)
+
+        _atomic_replace(path_npz, write_npz, "npz")
+    meta = {"step": step, "order": order, "metadata": metadata or {},
+            "digests": digests}
+    if nshards > 1:
+        meta["shards"] = {"count": nshards, "dims": dims}
+
+    def write_json(tmp):
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+
+    _atomic_replace(os.path.join(directory, f"ckpt_{step:08d}.json"),
+                    write_json, "sidecar")
+
+    def write_latest(tmp):
+        with open(tmp, "w") as f:
+            f.write(str(step))
+
+    _atomic_replace(os.path.join(directory, "latest"), write_latest,
+                    "latest")
+    if keep_last > 0:
+        prune_checkpoints(directory, keep_last=keep_last,
+                          keep_every=keep_every)
+    _fault("done")
+    return paths
+
+
+def save(directory: str, tree: Any, step: int,
+         metadata: Optional[Dict] = None) -> str:
+    """Single-file save.  Sharded leaves are gathered to host first
+    (merge-at-save); use ``save_sharded`` to keep shards separate."""
+    pieces, dims, order = _snapshot(tree, sharded=False)
+    return _write_step(directory, step, pieces, dims, order, metadata)[0]
 
 
 def save_sharded(directory: str, tree: Any, step: int,
@@ -106,38 +247,110 @@ def save_sharded(directory: str, tree: Any, step: int,
     dim is recorded in the sidecar so ``restore`` can merge on any mesh
     shape.  Degenerates to the plain single-npz format when nothing is
     fsdp-sharded (fsdp=1)."""
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    pieces = {}
-    dims = {}
-    nshards = 1
-    for path, leaf in flat:
-        key = _path_str(path)
-        got = _leaf_fsdp_pieces(leaf)
-        if got is None:
-            pieces[key] = [np.asarray(leaf)]
-        else:
-            dim, parts = got
-            dims[key] = dim
-            pieces[key] = parts
-            nshards = max(nshards, len(parts))
-    if nshards == 1:
-        return [save(directory, tree, step, metadata=metadata)]
-    os.makedirs(directory, exist_ok=True)
-    paths = []
-    for k in range(nshards):
-        arrays = {key: parts[k] for key, parts in pieces.items()
-                  if k < len(parts)}
-        paths.append(_shard_file(directory, step, k, nshards))
-        np.savez_compressed(paths[-1], **arrays)
-    meta = {"step": step, "order": [_path_str(p) for p, _ in flat],
-            "metadata": metadata or {},
-            "shards": {"count": nshards, "dims": dims}}
-    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
-        json.dump(meta, f)
-    with open(os.path.join(directory, "latest"), "w") as f:
-        f.write(str(step))
-    return paths
+    pieces, dims, order = _snapshot(tree, sharded=True)
+    return _write_step(directory, step, pieces, dims, order, metadata)
 
+
+# ---------------------------------------------------------------------------
+# Async saver
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Background checkpoint writer: ``save`` snapshots the tree to host
+    arrays *synchronously* (after that the live/donated device buffers
+    may mutate freely) and queues the compress+write for a single worker
+    thread, so the step loop never blocks on ``np.savez_compressed``.
+
+    Saves are written in submission order.  A writer failure (disk full,
+    permissions) is latched and re-raised on the next ``save``/``wait``
+    — a run cannot silently train on without durable checkpoints.
+    ``wait()`` drains the queue (call before restoring for a rollback,
+    and at shutdown); ``close()`` waits and stops the worker."""
+
+    def __init__(self, directory: str, keep_last: int = 0,
+                 keep_every: int = 0):
+        self.directory = directory
+        self.keep_last = int(keep_last)
+        self.keep_every = int(keep_every)
+        self._q: "queue.Queue" = queue.Queue()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        while True:
+            job = self._q.get()
+            try:
+                if job is None:
+                    return
+                _write_step(self.directory, *job,
+                            keep_last=self.keep_last,
+                            keep_every=self.keep_every)
+            except BaseException as e:   # latched; surfaced on the host
+                self._error = e
+            finally:
+                self._q.task_done()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write failed in {self.directory}"
+            ) from err
+
+    def save(self, tree: Any, step: int, metadata: Optional[Dict] = None,
+             sharded: bool = False) -> None:
+        self._raise_pending()
+        pieces, dims, order = _snapshot(tree, sharded=sharded, copy=True)
+        self._q.put((step, pieces, dims, order, metadata))
+
+    def wait(self) -> None:
+        self._q.join()
+        self._raise_pending()
+
+    def close(self) -> None:
+        try:
+            self.wait()
+        finally:
+            self._q.put(None)
+            self._thread.join(timeout=60.0)
+
+
+# ---------------------------------------------------------------------------
+# Retention
+# ---------------------------------------------------------------------------
+
+def prune_checkpoints(directory: str, keep_last: int,
+                      keep_every: int = 0) -> List[int]:
+    """Delete all complete steps except the newest ``keep_last`` and (if
+    ``keep_every`` > 0) every step divisible by it.  Partial steps'
+    files are left alone (they are already invisible to discovery).
+    Returns the deleted step numbers."""
+    if keep_last <= 0:
+        return []
+    steps = available_steps(directory)
+    protect = set(steps[-keep_last:])
+    if keep_every > 0:
+        protect |= {s for s in steps if s % keep_every == 0}
+    deleted = []
+    for s in steps:
+        if s in protect:
+            continue
+        meta = _read_meta(directory, s) or {}
+        n = int(meta.get("shards", {}).get("count", 1))
+        for p in _step_files(directory, s, n):
+            if os.path.exists(p):
+                os.remove(p)
+        sidecar = os.path.join(directory, f"ckpt_{s:08d}.json")
+        if os.path.exists(sidecar):
+            os.remove(sidecar)
+        deleted.append(s)
+    return deleted
+
+
+# ---------------------------------------------------------------------------
+# Discovery + verification
+# ---------------------------------------------------------------------------
 
 def _read_meta(directory: str, step: int) -> Optional[Dict]:
     p = os.path.join(directory, f"ckpt_{step:08d}.json")
@@ -162,10 +375,24 @@ def _is_complete(directory: str, step: int) -> bool:
     return os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
 
 
+def verify_step(directory: str, step: int) -> bool:
+    """Deep integrity check: the sidecar parses, every array file opens,
+    every recorded leaf is readable, and (when the sidecar carries
+    digests) every leaf's CRC32 matches.  Checkpoints written before the
+    digest format still verify by a full read (the zip layer's own CRCs
+    catch truncation/corruption there)."""
+    try:
+        _load_verified(directory, step)
+        return True
+    except Exception:
+        return False
+
+
 def available_steps(directory: str) -> List[int]:
     """All *complete* checkpoint steps in ``directory``, ascending.  A
     step counts only when both the .npz and the .json sidecar exist —
-    partial writes (a crash between the two) are skipped."""
+    partial writes (a crash between the two) are skipped.  (Existence
+    only; ``latest_step`` additionally digest-verifies its answer.)"""
     if not os.path.isdir(directory):
         return []
     steps = set()
@@ -177,51 +404,93 @@ def available_steps(directory: str) -> List[int]:
 
 
 def latest_step(directory: str) -> Optional[int]:
-    """Newest restorable step.  The ``latest`` marker file is only a
-    hint: it is trusted when it points at a complete (npz + json) pair;
-    when it is missing, corrupt, or stale (e.g. a partially written or
-    deleted step), the directory is scanned and the newest complete pair
-    wins.  Returns None when nothing restorable exists."""
+    """Newest *verified* restorable step.  The ``latest`` marker file is
+    only a hint (it may be stale: a crash lands exactly between the
+    sidecar write and the marker update): the directory scan and the
+    marker are merged and the newest step that passes ``verify_step``
+    (complete files, digests match) wins — agreeing with what
+    ``restore(step=None)`` would load.  Returns None when nothing
+    verifiable exists — by construction no sequence of crashes can make
+    this return a step whose restore would fail."""
+    candidates = set(available_steps(directory))
     p = os.path.join(directory, "latest")
     if os.path.exists(p):
         try:
             with open(p) as f:
-                step = int(f.read().strip())
-        except ValueError:
-            step = None
-        if step is not None and _is_complete(directory, step):
+                candidates.add(int(f.read().strip()))
+        except (ValueError, OSError):
+            pass
+    for step in sorted(candidates, reverse=True):
+        if verify_step(directory, step):
             return step
-    steps = available_steps(directory)
-    return steps[-1] if steps else None
+    return None
 
 
-def _load(directory: str, step: Optional[int]):
-    step = step if step is not None else latest_step(directory)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {directory}")
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+def _load_verified(directory: str, step: int):
+    """Load (and digest-verify) one specific step.  Raises on any
+    missing file, parse error, unreadable array, or digest mismatch."""
     meta = _read_meta(directory, step)
     if meta is None:
         raise FileNotFoundError(
             f"no sidecar for step {step} in {directory}")
     shards = meta.get("shards")
-    if not shards:
-        data = np.load(os.path.join(directory, f"ckpt_{step:08d}.npz"))
-        return data, step, meta
+    n = int(shards["count"]) if shards else 1
+    dims = shards["dims"] if shards else {}
+    digests = meta.get("digests")
+    parts = []
+    for k, path in enumerate(_step_files(directory, step, n)):
+        with np.load(path) as f:
+            shard = {key: f[key] for key in f.files}
+        if digests is not None:
+            for key, arr in shard.items():
+                want = digests.get(key)
+                if want is None or k >= len(want):
+                    raise ValueError(
+                        f"step {step}: array {key!r} (shard {k}) has no "
+                        "recorded digest")
+                if _digest(arr) != int(want[k]):
+                    raise ValueError(
+                        f"step {step}: digest mismatch for {key!r} in "
+                        f"{os.path.basename(path)}")
+        parts.append(shard)
+    if n == 1:
+        return parts[0], meta
     # process-0 merge of a per-shard checkpoint: concatenate each
     # fsdp-sharded leaf's pieces along its recorded dim — the merged
     # global arrays are bit-identical regardless of the saving mesh shape
-    n = int(shards["count"])
-    dims = shards["dims"]
-    parts = [np.load(_shard_file(directory, step, k, n)) for k in range(n)]
     data = {}
-    for key in parts[0].files:
+    for key in parts[0]:
         if key in dims:
             data[key] = np.concatenate(
-                [p[key] for p in parts if key in p.files],
-                axis=int(dims[key]))
+                [p[key] for p in parts if key in p], axis=int(dims[key]))
         else:
             data[key] = parts[0][key]
-    return data, step, meta
+    return data, meta
+
+
+def _load(directory: str, step: Optional[int]):
+    """Explicit ``step``: load exactly that step (raise on damage).
+    ``step=None``: newest step that loads *and verifies*, falling back
+    through older steps past any corrupt/truncated/partial one."""
+    if step is not None:
+        data, meta = _load_verified(directory, step)
+        return data, step, meta
+    tried = []
+    candidates = sorted(available_steps(directory), reverse=True)
+    for cand in candidates:
+        try:
+            data, meta = _load_verified(directory, cand)
+            return data, cand, meta
+        except Exception as e:      # demoted: fall back to the next-newest
+            tried.append(f"step {cand}: {e}")
+    detail = ("; ".join(tried) if tried
+              else f"no checkpoint in {directory}")
+    raise FileNotFoundError(
+        f"no restorable checkpoint in {directory} ({detail})")
 
 
 def _fill(tree_like: Any, data, key_prefix: str = "") -> Any:
@@ -240,7 +509,9 @@ def _fill(tree_like: Any, data, key_prefix: str = "") -> Any:
 
 def restore(directory: str, tree_like: Any,
             step: Optional[int] = None) -> Tuple[Any, int, Dict]:
-    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    """Restore into the structure of ``tree_like`` (shapes must match).
+    With ``step=None`` the newest checkpoint that passes integrity
+    verification is used (corrupt steps are skipped, not fatal)."""
     data, step, meta = _load(directory, step)
     return _fill(tree_like, data), step, meta["metadata"]
 

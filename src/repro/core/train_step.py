@@ -34,7 +34,8 @@ from repro.core import fastclip as FC
 from repro.core import losses as LS
 from repro.models import backbones as BB
 from repro.models import precision as PR
-from repro.optim import Optimizer, clip_by_global_norm
+from repro.optim import Optimizer, clip_by_global_norm, global_norm
+from repro.resilience import guard as RG
 
 sg = jax.lax.stop_gradient
 
@@ -203,6 +204,12 @@ class TrainStepConfig:
     # gradient reduction.  Requires mesh_axes == ("data", "fsdp") (or
     # None, which defaults to it) and set_mesh() with a matching mesh.
     fsdp: bool = False
+    # non-finite step guard (repro.resilience.guard): an in-jit
+    # all-finite check over the loss and the global grad norm turns a
+    # bad step into a bitwise no-op update (params/moments/log-u and all
+    # counters unchanged via jnp.where select) and emits the
+    # ``skipped``/``nonfinite_rate`` metrics.
+    guard: bool = False
 
     @property
     def resolved_precision(self) -> PR.Precision:
@@ -270,6 +277,8 @@ def make_train_step(tc: TrainStepConfig):
 
         if tc.grad_clip:
             grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        elif tc.guard:
+            gnorm = global_norm(grads)   # the guard's all-finite probe
         else:
             gnorm = jnp.asarray(0.0)
 
@@ -316,6 +325,11 @@ def make_train_step(tc: TrainStepConfig):
 
         new_state = {"params": params, "opt": opt, "fc": new_fc,
                      "step": step + 1}
+        if tc.guard:
+            ok = RG.step_ok(loss, gnorm)
+            new_state = RG.select_state(ok, state, new_state)
+            metrics["skipped"] = 1.0 - ok.astype(jnp.float32)
+            metrics["nonfinite_rate"] = RG.grad_nonfinite_rate(grads)
         return new_state, metrics
 
     return train_step
@@ -453,6 +467,10 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
         if tc.grad_clip:
             grads, gnorm = clip_by_global_norm(
                 grads, tc.grad_clip, axes=("fsdp",), sharded_dims=p_dims)
+        elif tc.guard:
+            # axis-aware: psums sharded-leaf squares over fsdp, so every
+            # shard evaluates the identical guard predicate
+            gnorm = global_norm(grads, axes=("fsdp",), sharded_dims=p_dims)
         else:
             gnorm = jnp.asarray(0.0)
 
@@ -499,6 +517,14 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
 
         new_state = {"params": params, "opt": opt, "fc": new_fc,
                      "step": step + 1}
+        if tc.guard:
+            # loss/gnorm are already global (psum'd), so ok is identical
+            # on every shard and the local-shard selects stay consistent
+            ok = RG.step_ok(loss, gnorm)
+            new_state = RG.select_state(ok, state, new_state)
+            metrics["skipped"] = 1.0 - ok.astype(jnp.float32)
+            metrics["nonfinite_rate"] = pmean(
+                RG.grad_nonfinite_rate(grads))
         return new_state, metrics
 
     def train_step(state, batch, idx):

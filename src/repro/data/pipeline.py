@@ -39,32 +39,55 @@ class ShardedLoader:
     def steps_per_epoch(self) -> int:
         return self.shard_size // self.local_batch
 
-    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, dict]]:
-        """Yields (global_indices (global_batch,), batch dict) with the
-        per-shard sub-batches concatenated in shard order, so that
-        reshaping to (K, local_batch) matches the mesh data axis."""
+    def _epoch_perms(self, epoch: int):
         per_shard = []
         for k in range(self.n_shards):
             rng = np.random.RandomState(self.seed * 100003 + epoch * 31 + k)
             lo = k * self.shard_size
-            perm = lo + rng.permutation(self.shard_size)
-            per_shard.append(perm)
+            per_shard.append(lo + rng.permutation(self.shard_size))
+        return per_shard
+
+    def _step_idx(self, per_shard, step: int) -> np.ndarray:
+        return np.concatenate([
+            p[step * self.local_batch:(step + 1) * self.local_batch]
+            for p in per_shard])
+
+    def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, dict]]:
+        """Yields (global_indices (global_batch,), batch dict) with the
+        per-shard sub-batches concatenated in shard order, so that
+        reshaping to (K, local_batch) matches the mesh data axis."""
+        per_shard = self._epoch_perms(epoch)
         for step in range(self.steps_per_epoch):
-            idx = np.concatenate([
-                p[step * self.local_batch:(step + 1) * self.local_batch]
-                for p in per_shard])
+            idx = self._step_idx(per_shard, step)
             yield idx, self.dataset.batch(idx)
 
-    def steps(self, n_steps: int):
-        """Infinite-ish stream over epochs."""
+    def steps(self, n_steps: int, start: int = 0):
+        """Infinite-ish stream over epochs, yielding (epoch, step, idx,
+        batch) for steps [``start``, ``n_steps``).
+
+        ``start`` is the resume fast-forward: the stream is positionally
+        identical to filtering a full ``steps(n_steps)`` run on
+        ``step >= start``, but skipped steps are *index-only* — whole
+        epochs before the resume point advance counters without drawing
+        a permutation, and skipped steps inside the resume epoch neither
+        slice indices nor assemble a host batch (``dataset.batch``) —
+        so resuming at step S costs O(1) per skipped step instead of S
+        full global-batch gathers."""
         step = 0
         epoch = 0
         while step < n_steps:
-            for idx, batch in self.epoch(epoch):
-                yield epoch, step, idx, batch
-                step += 1
+            if step + self.steps_per_epoch <= start:
+                step += self.steps_per_epoch
+                epoch += 1
+                continue
+            per_shard = self._epoch_perms(epoch)
+            for e_step in range(self.steps_per_epoch):
                 if step >= n_steps:
                     return
+                if step >= start:
+                    idx = self._step_idx(per_shard, e_step)
+                    yield epoch, step, idx, self.dataset.batch(idx)
+                step += 1
             epoch += 1
 
 

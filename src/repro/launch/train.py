@@ -13,11 +13,57 @@ sharded by sample ownership over all N*M devices, params and optimizer
 moments ZeRO-sharded over fsdp with reduce-scatter gradient reduction,
 per-shard checkpoints (restorable at any other mesh shape), and the
 periodic eval consuming the sharded params in place.
+
+Training resilience (PR 6, ``repro.resilience``) — the limited-resource
+contract: runs on preemptible/shared machines survive kills, corrupt
+disks and numerically bad steps.
+
+  ``--guard``
+      In-jit non-finite step guard: an all-finite check over the step
+      loss and the global gradient norm turns a bad step into a no-op
+      update.  **Invariant: a skipped step leaves the whole train state
+      bit-identical to its pre-step value** — params, optimizer
+      moments, the FCCO log-u buffers, and every counter (the schedules
+      replay the same lr/gamma on the next batch).  The ``skipped`` and
+      ``nonfinite_rate`` metrics report it; the loader/prefetch stream
+      is keyed on its own step index, so a skipped step never desyncs
+      data from state.
+  ``--rollback-after N``
+      Host-side escalation (implies ``--guard``): a robust-EMA loss
+      spike detector counts consecutive bad steps (skipped, non-finite,
+      or spiking); at N it restores the last verified checkpoint and
+      rebuilds the deterministic loader stream at that step (O(1)
+      index-only fast-forward), so the replay reproduces the
+      uninterrupted trajectory.
+  ``--ckpt-async``
+      Durable async checkpoints: leaves snapshot to host synchronously,
+      compression + the atomic tmp-file/``os.replace`` writes (array
+      files, CRC32-digest sidecar, ``latest`` marker — in that order)
+      run on a background thread, so the step loop never blocks on
+      ``np.savez_compressed``.  ``--resume`` only ever restores a step
+      that passes digest verification, falling back to the newest
+      verified one past any crash-truncated write.
+  ``--ckpt-keep K [--ckpt-keep-every N]``
+      Retention: keep the newest K checkpoints (plus every N-th),
+      delete the rest after each save.
+  SIGTERM / SIGINT (preemption)
+      The loop finishes the in-flight step, writes a final synchronous
+      checkpoint, shuts the prefetcher down cleanly, and exits 0.
+  ``--heartbeat-file F`` / ``--hang-timeout S``
+      Liveness: F is atomically rewritten with {step, time, pid} every
+      few seconds (default: ``<ckpt-dir>/heartbeat.json``); with S > 0
+      a watchdog thread dumps all stacks to stderr when no step
+      completes for S seconds (it never kills the run).
+  ``--chaos SPEC``
+      Deterministic fault injection (``repro.resilience.chaos``) for
+      the crash-recovery battery: NaN-poison a batch, raise in the
+      loader, SIGKILL before a step or mid-checkpoint-write.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import signal
 import time
 
 import jax
@@ -25,6 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as CK
+from repro import resilience as RS
 from repro.configs import INPUT_SHAPES, get_arch
 from repro.core import fastclip as FC
 from repro.core import shard_state as SS
@@ -47,6 +94,25 @@ def build_dataset(cfg, objective, n, seq_len):
         return PairedEmbeddingDataset(n=n, seq_len=seq_len,
                                       vocab_size=cfg.vocab_size)
     return LMDataset(n=n, seq_len=seq_len, vocab_size=cfg.vocab_size)
+
+
+def check_resume_metadata(meta, arch: str, version: str) -> None:
+    """Refuse to restore a checkpoint written by a different run shape.
+
+    Restoring a v2 checkpoint into a v3 run (or another --arch) fails
+    late with an opaque shape error at best and silently mis-trains at
+    worst; compare the sidecar metadata up front and exit with a clear
+    message.  Checkpoints without the keys (foreign writers) are let
+    through on the old shape-check-only behavior."""
+    for key, want in (("arch", arch), ("version", version)):
+        got = meta.get(key)
+        if got is not None and got != want:
+            raise SystemExit(
+                f"--resume: checkpoint metadata has {key}={got!r} but "
+                f"this run was launched with --{key} {want}; restoring "
+                "would mismatch the state layout.  Relaunch with "
+                f"--{key} {got} or point --ckpt-dir at a fresh "
+                "directory.")
 
 
 def main(argv=None):
@@ -92,7 +158,37 @@ def main(argv=None):
                          "sharded checkpoints); unset = single-device")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-async", action="store_true",
+                    help="write checkpoints on a background thread "
+                         "(synchronous host snapshot, async compress + "
+                         "atomic write); the step loop never blocks")
+    ap.add_argument("--ckpt-keep", type=int, default=0,
+                    help="retention: keep only the newest K checkpoints "
+                         "(0 = keep all)")
+    ap.add_argument("--ckpt-keep-every", type=int, default=0,
+                    help="with --ckpt-keep: additionally keep every N-th "
+                         "step forever")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--guard", action="store_true",
+                    help="in-jit non-finite step guard: a bad step "
+                         "(non-finite loss or grad norm) becomes a "
+                         "bitwise no-op update, reported via the "
+                         "skipped/nonfinite_rate metrics")
+    ap.add_argument("--rollback-after", type=int, default=0,
+                    help="roll back to the last checkpoint after N "
+                         "consecutive bad steps (robust-EMA spike "
+                         "detector; 0 disables; implies --guard)")
+    ap.add_argument("--heartbeat-file", default=None,
+                    help="liveness file, atomically rewritten with "
+                         "{step, time, pid} (default: <ckpt-dir>/"
+                         "heartbeat.json when --ckpt-dir is set)")
+    ap.add_argument("--hang-timeout", type=float, default=0.0,
+                    help="watchdog: dump all thread stacks when no step "
+                         "completes for this many seconds (0 disables)")
+    ap.add_argument("--chaos", default=None,
+                    help="fault-injection spec (repro.resilience.chaos), "
+                         "e.g. 'nan_batch@5,kill_save@mid_npz' — test "
+                         "battery use only")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--eval-every", type=int, default=0,
                     help="run the zero-shot/retrieval eval engine every N "
@@ -108,6 +204,8 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     ds = build_dataset(cfg, args.objective, args.n_samples, args.seq_len)
+    guard = args.guard or args.rollback_after > 0
+    chaos = RS.parse_chaos(args.chaos, seed=args.seed)
 
     mesh = None
     shardings = None
@@ -153,7 +251,7 @@ def main(argv=None):
             loss_impl=args.loss_impl, impl=args.impl,
             precision=args.precision,
             mesh_axes=SS.TRAIN_AXES if mesh is not None else None,
-            fsdp=mesh is not None)
+            fsdp=mesh is not None, guard=guard)
         state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -170,15 +268,19 @@ def main(argv=None):
         def run_step(state, idx, batch):
             return jit_step(state, batch, jnp.asarray(idx))
 
+    def relayout(host_state):
+        """Host-restored state back onto this run's devices/mesh (the
+        reshard round-trip: any saving mesh shape restores bit-exactly)."""
+        if mesh is not None:
+            return jax.device_put(host_state, shardings)
+        return jax.tree.map(jnp.asarray, host_state)
+
     start = 0
     if args.resume and args.ckpt_dir and CK.latest_step(args.ckpt_dir):
         like = jax.tree.map(jnp.zeros_like, state)
-        state, start, _ = CK.restore(args.ckpt_dir, like)
-        if mesh is not None:
-            # the merge in CK.restore produced global host arrays; lay
-            # them back out on this run's mesh (the reshard round-trip:
-            # any saving mesh shape restores here bit-exactly)
-            state = jax.device_put(state, shardings)
+        state, start, ck_meta = CK.restore(args.ckpt_dir, like)
+        check_resume_metadata(ck_meta, args.arch, args.version)
+        state = relayout(state)
         print(f"resumed from step {start}")
 
     evaluator = None
@@ -207,37 +309,151 @@ def main(argv=None):
         return (epoch, step, jnp.asarray(idx),
                 {k: jnp.asarray(v) for k, v in batch.items()})
 
-    host_steps = (it for it in loader.steps(args.steps) if it[1] >= start)
-    stream = (DevicePrefetcher(host_steps, depth=args.prefetch,
-                               transform=to_device)
-              if args.prefetch > 0 else map(to_device, host_steps))
+    def host_stream(from_step):
+        for epoch, step, idx, batch in loader.steps(args.steps,
+                                                    start=from_step):
+            if chaos is not None:
+                chaos.on_loader(step)
+                batch = chaos.poison_batch(step, batch)
+            yield epoch, step, idx, batch
+
+    def make_stream(from_step):
+        it = host_stream(from_step)
+        if args.prefetch > 0:
+            return DevicePrefetcher(it, depth=args.prefetch,
+                                    transform=to_device)
+        return map(to_device, it)
+
+    def close_stream(s):
+        if isinstance(s, DevicePrefetcher):
+            s.close()   # release the producer on early exit too
+
+    # -- resilience plumbing ------------------------------------------------
+    meta = {"arch": args.arch, "version": args.version}
+    saver = (CK.AsyncCheckpointer(args.ckpt_dir, keep_last=args.ckpt_keep,
+                                  keep_every=args.ckpt_keep_every)
+             if args.ckpt_dir and args.ckpt_async else None)
+    if chaos is not None:
+        CK.set_fault_hook(chaos.checkpoint_event)
+
+    def save_ckpt(step_no, sync=False):
+        if saver is not None and not sync:
+            saver.save(state, step_no, metadata=meta,
+                       sharded=mesh is not None)
+        else:
+            if saver is not None:
+                saver.wait()
+            if mesh is not None:
+                CK.save_sharded(args.ckpt_dir, state, step_no,
+                                metadata=meta)
+            else:
+                CK.save(args.ckpt_dir, jax.device_get(state), step_no,
+                        metadata=meta)
+            if args.ckpt_keep > 0:
+                CK.prune_checkpoints(args.ckpt_dir,
+                                     keep_last=args.ckpt_keep,
+                                     keep_every=args.ckpt_keep_every)
+
+    hb_path = args.heartbeat_file or (
+        f"{args.ckpt_dir}/heartbeat.json" if args.ckpt_dir else None)
+    hb = RS.Heartbeat(hb_path) if hb_path else None
+    wd = (RS.StepWatchdog(args.hang_timeout)
+          if args.hang_timeout > 0 else None)
+    detector = RS.SpikeDetector(rollback_after=args.rollback_after)
+    received = {"sig": None}
+
+    def on_signal(signum, frame):
+        received["sig"] = signum    # honored between steps: clean exit
+
+    prev_handlers = {}
+    for s in (signal.SIGTERM, signal.SIGINT):
+        try:
+            prev_handlers[s] = signal.signal(s, on_signal)
+        except ValueError:          # not the main thread (embedded call)
+            pass
 
     t0 = time.time()
     first = True
+    done = start
+    preempted = False
+    stream = make_stream(start)
     try:
-        for epoch, step, idx, batch in stream:
-            state, m = run_step(state, idx, batch)
-            if first:
-                # params/opt/FCCO-u must stay f32 masters under any policy
-                TS.check_state_dtypes(state)
-                first = False
-            if step % args.log_every == 0 or step == args.steps - 1:
-                msg = {k: round(float(v), 5) for k, v in m.items()}
-                print(f"step {step:5d} epoch {epoch} {json.dumps(msg)}",
-                      flush=True)
-            if evaluator is not None and (step + 1) % args.eval_every == 0:
-                run_eval(step + 1)
-            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-                meta = {"arch": args.arch, "version": args.version}
-                if mesh is not None:
-                    CK.save_sharded(args.ckpt_dir, state, step + 1,
-                                    metadata=meta)
-                else:
-                    CK.save(args.ckpt_dir, jax.device_get(state), step + 1,
-                            metadata=meta)
+        running = True
+        while running:
+            running = False         # re-armed only by a rollback
+            for epoch, step, idx, batch in stream:
+                if received["sig"] is not None:
+                    preempted = True
+                    break
+                if chaos is not None:
+                    chaos.pre_step(step)
+                state, m = run_step(state, idx, batch)
+                done = step + 1
+                if first:
+                    # params/opt/FCCO-u must stay f32 masters under any
+                    # policy
+                    TS.check_state_dtypes(state)
+                    first = False
+                if hb is not None:
+                    hb.beat(step)
+                if wd is not None:
+                    wd.beat()
+                if step % args.log_every == 0 or step == args.steps - 1:
+                    msg = {k: round(float(v), 5) for k, v in m.items()}
+                    print(f"step {step:5d} epoch {epoch} "
+                          f"{json.dumps(msg)}", flush=True)
+                if detector.update(float(m["loss"]),
+                                   float(m.get("skipped", 0.0)) >= 0.5):
+                    if saver is not None:
+                        saver.wait()
+                    rb = (CK.latest_step(args.ckpt_dir)
+                          if args.ckpt_dir else None)
+                    if rb is None:
+                        print(f"step {step:5d} {detector.consecutive_bad}"
+                              " consecutive bad steps but no checkpoint "
+                              "to roll back to; continuing", flush=True)
+                        detector.reset()
+                    else:
+                        like = jax.tree.map(jnp.zeros_like, state)
+                        state, rb, _ = CK.restore(args.ckpt_dir, like)
+                        state = relayout(state)
+                        detector.reset()
+                        close_stream(stream)
+                        stream = make_stream(rb)
+                        done = rb
+                        print(f"rollback: {args.rollback_after} "
+                              f"consecutive bad steps; restored verified "
+                              f"step {rb}, replaying the deterministic "
+                              "stream from there", flush=True)
+                        running = True
+                        break
+                if (evaluator is not None
+                        and (step + 1) % args.eval_every == 0):
+                    run_eval(step + 1)
+                if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                    save_ckpt(step + 1)
     finally:
-        if isinstance(stream, DevicePrefetcher):
-            stream.close()  # release the producer on early exit too
+        close_stream(stream)
+        if wd is not None:
+            wd.close()
+        if hb is not None:
+            hb.close()
+        if chaos is not None:
+            CK.set_fault_hook(None)
+        for s, h in prev_handlers.items():
+            signal.signal(s, h)
+
+    if preempted:
+        # preemption contract: final synchronous checkpoint, clean
+        # shutdown, exit 0 — the resumed run replays from `done`
+        if args.ckpt_dir:
+            save_ckpt(done, sync=True)
+        if saver is not None:
+            saver.close()
+        print(f"preempted (signal {received['sig']}): saved synchronous "
+              f"checkpoint at step {done}, exiting cleanly", flush=True)
+        return state
+
     dt = time.time() - t0
     print(f"trained {args.steps - start} steps in {dt:.1f}s "
           f"({(args.steps - start) / max(dt, 1e-9):.2f} steps/s)")
@@ -254,12 +470,9 @@ def main(argv=None):
     if evaluator is not None and args.steps % args.eval_every != 0:
         run_eval(args.steps)   # final eval unless the loop just ran it
     if args.ckpt_dir:
-        meta = {"arch": args.arch, "version": args.version}
-        if mesh is not None:
-            CK.save_sharded(args.ckpt_dir, state, args.steps, metadata=meta)
-        else:
-            CK.save(args.ckpt_dir, jax.device_get(state), args.steps,
-                    metadata=meta)
+        save_ckpt(args.steps, sync=True)
+    if saver is not None:
+        saver.close()
     return state
 
 

@@ -1,0 +1,107 @@
+"""Non-finite step guards: in-jit no-op updates + host-side escalation.
+
+The in-jit half (``step_ok`` / ``select_state``) runs inside the train
+step (``core.train_step``, both the single-device and the sharded-state
+paths): one all-finite predicate over the step loss and the
+already-computed global gradient norm decides, per step, between the
+updated state and the incoming state.  The select is a ``jnp.where`` on
+every leaf, so a rejected step is a **bitwise no-op** — params, optimizer
+moments, the FCCO log-u buffers and every counter come out bit-identical
+to their pre-step values (the invariant the chaos battery asserts).  This
+matters more here than in a vanilla trainer: the FCCO estimator carries
+persistent per-sample state, so a NaN that reaches ``u`` poisons the
+global contrastive estimator for every future step, not just one loss
+value.
+
+The host-side half (``SpikeDetector``) watches the per-step metrics and
+escalates: a robust EMA (mean + mean-absolute-deviation, updated on
+healthy steps only) flags loss spikes, and N *consecutive* bad steps
+(skipped, non-finite, or spiking) trigger a rollback-to-last-checkpoint
+in the launcher, which fast-forwards the deterministic loader stream so
+the replay reproduces the uninterrupted run.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def step_ok(loss, grad_norm):
+    """The guard predicate: True iff the step is numerically usable.
+    Both inputs are global quantities (the loss after its cross-device
+    reduction, the global-tree gradient norm), so every shard of a
+    sharded step computes the identical predicate."""
+    return jnp.logical_and(jnp.isfinite(loss), jnp.isfinite(grad_norm))
+
+
+def select_state(ok, old_state, new_state):
+    """Per-leaf ``jnp.where(ok, new, old)`` over the whole train state.
+    With ``ok`` False the result is bit-identical to ``old_state`` (the
+    select copies the old bytes; NaN payloads in ``new_state`` never
+    land), including the step counters: a rejected step is a full no-op
+    and the schedules replay the same (lr, gamma) on the next batch."""
+    return jax.tree.map(lambda o, n: jnp.where(ok, n, o),
+                        old_state, new_state)
+
+
+def grad_nonfinite_rate(grads):
+    """Fraction of non-finite gradient *elements* over the local tree —
+    the diagnostic companion to ``skipped`` (a skipped step with rate
+    ~1e-7 is a single poisoned value; rate ~1.0 is a diverged run)."""
+    bad = jnp.asarray(0.0, jnp.float32)
+    total = 0
+    for leaf in jax.tree.leaves(grads):
+        bad = bad + jnp.sum(~jnp.isfinite(leaf.astype(jnp.float32)))
+        total += int(leaf.size)
+    return bad / max(total, 1)
+
+
+class SpikeDetector:
+    """Host-side robust loss-spike detector with consecutive-failure
+    escalation.
+
+    ``update(loss, skipped) -> bool`` returns True when the run should
+    roll back to its last checkpoint: ``rollback_after`` consecutive bad
+    steps, where a step is bad when it was guard-skipped, its loss is
+    non-finite, or its loss deviates from the robust EMA by more than
+    ``zmax`` mean-absolute-deviations.  The EMA (mean + MAD) only learns
+    from healthy steps, so a diverging run cannot drag the baseline up
+    under itself; the first ``warmup`` healthy steps never flag a spike
+    (the baseline is still settling).  ``rollback_after=0`` disables
+    escalation (the detector still tracks, for metrics)."""
+
+    def __init__(self, rollback_after: int = 0, ema: float = 0.9,
+                 zmax: float = 10.0, warmup: int = 10):
+        assert 0.0 < ema < 1.0
+        self.rollback_after = int(rollback_after)
+        self.ema = float(ema)
+        self.zmax = float(zmax)
+        self.warmup = int(warmup)
+        self.reset()
+
+    def reset(self):
+        """Forget everything — called after a rollback so the replayed
+        segment re-warms the baseline instead of re-triggering."""
+        self.mean = 0.0
+        self.mad = 0.0
+        self.n_good = 0
+        self.consecutive_bad = 0
+
+    def update(self, loss: float, skipped: bool = False) -> bool:
+        loss = float(loss)
+        bad = bool(skipped) or not math.isfinite(loss)
+        if not bad and self.n_good >= self.warmup:
+            bad = abs(loss - self.mean) > self.zmax * max(self.mad, 1e-8)
+        if bad:
+            self.consecutive_bad += 1
+        else:
+            self.consecutive_bad = 0
+            a = self.ema if self.n_good > 0 else 0.0
+            self.mean = a * self.mean + (1.0 - a) * loss
+            self.mad = (a * self.mad
+                        + (1.0 - a) * abs(loss - self.mean))
+            self.n_good += 1
+        return (self.rollback_after > 0
+                and self.consecutive_bad >= self.rollback_after)

@@ -1,0 +1,253 @@
+"""Subprocess helper: chaos-injection crash-recovery battery with forced
+host devices.  Run: python tests/helpers/chaos_check.py <name>
+Prints PASS/FAIL lines; exit code 0 on success.
+
+Checks:
+  kill_resume       SIGKILL the launcher (subprocess) before a step and
+                    at mid-checkpoint-write fault points (tmp npz
+                    written but not renamed; npz renamed but no
+                    sidecar); after every kill, latest_step is either
+                    None or digest-verified, and --resume replays to
+                    the uninterrupted run's final state bit-for-bit.
+  kill_resume_mesh  the same on --mesh data:2,fsdp:2, including a kill
+                    between the two per-fsdp-shard npz files.
+  nan_skip          an injected all-NaN batch under --guard leaves the
+                    train state bit-identical to never having seen the
+                    batch (full bitwise no-op incl. FCCO log-u and
+                    counters) and logs skipped=1 exactly once.
+  nan_skip_mesh     the same on --mesh data:2,fsdp:2.
+  rollback          two consecutive injected-NaN steps with
+                    --rollback-after 2 restore the last checkpoint and
+                    replay the deterministic stream; the final state is
+                    bit-identical to the clean run's.
+  preempt           a self-delivered SIGTERM (sigterm@K) exits cleanly
+                    after a final synchronous checkpoint; --resume
+                    finishes the run bit-identical to the clean one.
+  async_ckpt        --ckpt-async + retention: training is bit-identical
+                    to synchronous saves, the kept set obeys
+                    --ckpt-keep/--ckpt-keep-every, the final checkpoint
+                    digest-verifies and restores the returned state,
+                    and the heartbeat file is present and well-formed.
+  loader_raise      an injected loader exception at step K surfaces out
+                    of the launcher (through the prefetcher) as the
+                    original error, without hanging.
+"""
+import contextlib
+import io
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import checkpoint as CK  # noqa: E402
+from repro.launch import train as LT  # noqa: E402
+
+MESH = ["--mesh", "data:2,fsdp:2"]
+
+
+def _args(steps, *extra):
+    return ["--arch", "clip-vitb32-cc12m", "--reduced",
+            "--global-batch", "16", "--n-samples", "64",
+            "--steps", str(steps), "--log-every", "1",
+            "--ckpt-every", "2"] + list(extra)
+
+
+def _bitwise(a, b):
+    fa = jax.tree.leaves(jax.device_get(a))
+    fb = jax.tree.leaves(jax.device_get(b))
+    return len(fa) == len(fb) and all(
+        np.asarray(x).tobytes() == np.asarray(y).tobytes()
+        for x, y in zip(fa, fb))
+
+
+def _run_main(args):
+    """In-process launcher run with captured stdout."""
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        state = LT.main(args)
+    return state, buf.getvalue()
+
+
+def _spawn(args):
+    """The launcher as a real subprocess (the only way to observe a
+    genuine SIGKILL)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + args,
+        capture_output=True, text=True, env=env, timeout=520)
+
+
+def _kill_battery(mesh_args, specs, label):
+    ok = True
+    with tempfile.TemporaryDirectory() as d0:
+        oracle, _ = _run_main(_args(8, "--ckpt-dir", d0, *mesh_args))
+        for spec in specs:
+            with tempfile.TemporaryDirectory() as d:
+                proc = _spawn(_args(8, "--ckpt-dir", d, "--chaos", spec,
+                                    *mesh_args))
+                killed = proc.returncode == -signal.SIGKILL
+                latest = CK.latest_step(d)
+                verified = latest is None or CK.verify_step(d, latest)
+                resumed, _ = _run_main(
+                    _args(8, "--ckpt-dir", d, "--resume", *mesh_args))
+                bit = _bitwise(oracle, resumed)
+                print(f"{label} {spec}: killed={killed} latest={latest} "
+                      f"verified={verified} resume-bit-identical={bit}")
+                if not killed:
+                    print(proc.stdout[-2000:], proc.stderr[-2000:])
+                ok &= killed and verified and bit
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_kill_resume():
+    # kill@5: between checkpoints (latest must be step 4); the
+    # kill_save specs kill the very first save (step 2) mid-write, so
+    # nothing durable exists yet and resume replays from scratch
+    return _kill_battery(
+        [], ["kill@5", "kill_save@mid_npz", "kill_save@mid_sidecar"],
+        "single-device")
+
+
+def check_kill_resume_mesh():
+    # mid_npz:2 = after the first fsdp shard file is atomically in
+    # place but before the second's rename — the torn-shard-set case
+    return _kill_battery(MESH, ["kill@3", "kill_save@mid_npz:2"],
+                         "data:2,fsdp:2")
+
+
+def _nan_skip(mesh_args, label):
+    ok = True
+    ref, _ = _run_main(_args(2, "--guard", *mesh_args))
+    poisoned, out = _run_main(
+        _args(3, "--guard", "--chaos", "nan_batch@2", *mesh_args))
+    bit = _bitwise(ref, poisoned)
+    n_skip = out.count('"skipped": 1.0')
+    n_clean = out.count('"skipped": 0.0')
+    print(f"{label}: poisoned-step state bit-identical to pre-step: "
+          f"{bit}; skipped=1 steps {n_skip} (want 1), skipped=0 steps "
+          f"{n_clean} (want 2)")
+    ok &= bit and n_skip == 1 and n_clean == 2
+    if not mesh_args:
+        # a skipped step must not desync the prefetch stream from the
+        # loader's index stream: with the skip mid-run (post-skip steps
+        # still apply real batches), prefetch on vs off is bit-identical
+        a, _ = _run_main(_args(4, "--guard", "--chaos", "nan_batch@1",
+                               "--prefetch", "2"))
+        b, _ = _run_main(_args(4, "--guard", "--chaos", "nan_batch@1",
+                               "--prefetch", "0"))
+        sync = _bitwise(a, b)
+        print(f"{label}: post-skip stream in sync (prefetch 2 == "
+              f"prefetch 0): {sync}")
+        ok &= sync
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_nan_skip():
+    return _nan_skip([], "single-device")
+
+
+def check_nan_skip_mesh():
+    return _nan_skip(MESH, "data:2,fsdp:2")
+
+
+def check_rollback():
+    ok = True
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        oracle, _ = _run_main(_args(8, "--guard", "--ckpt-dir", d1))
+        chaotic, out = _run_main(
+            _args(8, "--rollback-after", "2", "--ckpt-dir", d2,
+                  "--chaos", "nan_batch@4,nan_batch@5"))
+        rolled = "rollback:" in out
+        bit = _bitwise(oracle, chaotic)
+        print(f"rollback fired: {rolled}; replayed final state "
+              f"bit-identical to clean run: {bit}")
+        ok &= rolled and bit
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_preempt():
+    ok = True
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        oracle, _ = _run_main(_args(8, "--ckpt-dir", d1))
+        # SIGTERM lands before step 5; the launcher finishes step 5,
+        # sees the flag, saves synchronously at step 6 and returns
+        part, out = _run_main(
+            _args(8, "--ckpt-dir", d2, "--chaos", "sigterm@5"))
+        clean = "preempted (signal" in out
+        latest = CK.latest_step(d2)
+        resumed, out2 = _run_main(_args(8, "--ckpt-dir", d2, "--resume"))
+        bit = _bitwise(oracle, resumed)
+        print(f"clean preemption: {clean}; checkpoint at {latest} "
+              f"(want 6); resumed final state bit-identical: {bit}")
+        ok &= clean and latest == 6 and "resumed from step 6" in out2
+        ok &= bit
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_async_ckpt():
+    ok = True
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        sync_state, _ = _run_main(_args(8, "--ckpt-dir", d1))
+        async_state, _ = _run_main(
+            _args(8, "--ckpt-dir", d2, "--ckpt-async",
+                  "--ckpt-keep", "2", "--ckpt-keep-every", "8"))
+        bit = _bitwise(sync_state, async_state)
+        steps = CK.available_steps(d2)
+        latest = CK.latest_step(d2)
+        host = jax.device_get(async_state)
+        like = jax.tree.map(np.zeros_like, host)
+        restored, at, _meta = CK.restore(d2, like)
+        rbit = _bitwise(restored, host)
+        hb_path = os.path.join(d2, "heartbeat.json")
+        with open(hb_path) as f:
+            hb = json.load(f)
+        print(f"async==sync training: {bit}; retained steps {steps} "
+              f"(want [6, 8]); latest {latest} restores bit-exact: "
+              f"{rbit}; heartbeat step {hb.get('step')} (want 7)")
+        ok &= bit and steps == [6, 8] and latest == 8 and at == 8
+        ok &= rbit and hb.get("step") == 7 and hb.get("pid") == os.getpid()
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_loader_raise():
+    ok = False
+    try:
+        _run_main(_args(6, "--chaos", "loader_raise@3"))
+    except RuntimeError as e:
+        ok = "chaos: injected loader failure at step 3" in str(e)
+        print(f"loader exception surfaced through the prefetcher: {e}")
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+CHECKS = {
+    "kill_resume": check_kill_resume,
+    "kill_resume_mesh": check_kill_resume_mesh,
+    "nan_skip": check_nan_skip,
+    "nan_skip_mesh": check_nan_skip_mesh,
+    "rollback": check_rollback,
+    "preempt": check_preempt,
+    "async_ckpt": check_async_ckpt,
+    "loader_raise": check_loader_raise,
+}
+
+if __name__ == "__main__":
+    sys.exit(0 if CHECKS[sys.argv[1]]() else 1)

@@ -1,0 +1,517 @@
+"""Fault tolerance (PR 6): step guards, durable checkpoints, preemption,
+chaos battery.
+
+The pure-host pieces (spike detector, chaos spec parsing, checkpoint
+atomicity/digests/retention, prefetcher failure semantics, loader
+fast-forward) are tested in-process; the end-to-end crash-recovery
+battery (SIGKILL + resume bit-identity, NaN-skip bitwise no-op,
+rollback, preemption) runs in subprocesses with 4 forced host devices
+(``tests/helpers/chaos_check.py``) — a kill must be a real kill.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import checkpoint as CK
+from repro.data import DevicePrefetcher, ShardedLoader
+from repro.resilience import (ChaosInjector, SpikeDetector, StepWatchdog,
+                              Heartbeat, flip_byte, parse_chaos,
+                              truncate_file)
+
+CHAOS_HELPER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "helpers", "chaos_check.py")
+
+
+# ---------------------------------------------------------------------------
+# Step guard (host half) + in-jit select
+# ---------------------------------------------------------------------------
+
+def test_guard_select_is_bitwise_noop():
+    import jax
+    import jax.numpy as jnp
+    from repro.resilience import guard
+
+    old = {"w": jnp.asarray([1.5, -np.inf, 0.0], jnp.float32),
+           "step": jnp.asarray(7, jnp.int32)}
+    new = {"w": jnp.asarray([np.nan, 2.0, np.inf], jnp.float32),
+           "step": jnp.asarray(8, jnp.int32)}
+    ok_t = guard.step_ok(jnp.asarray(1.0), jnp.asarray(2.0))
+    ok_f = guard.step_ok(jnp.asarray(np.nan), jnp.asarray(2.0))
+    assert bool(ok_t) and not bool(ok_f)
+    assert not bool(guard.step_ok(jnp.asarray(1.0), jnp.asarray(np.inf)))
+
+    kept = guard.select_state(ok_f, old, new)
+    for k in old:  # bit-identical incl. the -inf payload and the counter
+        assert (np.asarray(kept[k]).tobytes()
+                == np.asarray(old[k]).tobytes())
+    taken = guard.select_state(ok_t, old, new)
+    assert np.asarray(taken["step"]) == 8
+
+    grads = {"a": jnp.asarray([np.nan, 1.0, 2.0, 3.0, 4.0]),
+             "b": jnp.asarray([1.0] * 5)}
+    assert abs(float(guard.grad_nonfinite_rate(grads)) - 0.1) < 1e-6
+    del jax
+
+
+def test_spike_detector_consecutive_escalation():
+    det = SpikeDetector(rollback_after=2)
+    for i in range(20):
+        assert det.update(1.0 + 0.01 * i) is False
+    assert det.update(float("nan")) is False       # 1 consecutive
+    assert det.update(1.0, skipped=True) is True   # 2 -> roll back
+    det.reset()
+    assert det.consecutive_bad == 0
+    assert det.update(float("nan")) is False       # healthy run resets
+    assert det.update(1.0) is False
+    assert det.update(float("nan")) is False
+
+
+def test_spike_detector_flags_loss_spike_after_warmup():
+    det = SpikeDetector(rollback_after=1, warmup=5)
+    for _ in range(10):
+        assert det.update(1.0) is False
+    assert det.update(100.0) is True
+    # warmup: the first healthy steps never flag, however spiky
+    det2 = SpikeDetector(rollback_after=1, warmup=5)
+    assert det2.update(100.0) is False
+    assert det2.update(1.0) is False
+
+
+def test_spike_detector_disabled_still_tracks():
+    det = SpikeDetector(rollback_after=0)
+    for _ in range(5):
+        assert det.update(float("nan")) is False
+    assert det.consecutive_bad == 5
+    assert math.isfinite(det.mean)
+
+
+# ---------------------------------------------------------------------------
+# Chaos spec parsing + injector semantics
+# ---------------------------------------------------------------------------
+
+def test_chaos_spec_parsing():
+    assert parse_chaos(None) is None
+    assert parse_chaos("") is None
+    inj = parse_chaos("nan_batch@3, kill@5,kill_save@mid_npz:2,sigterm@9")
+    assert isinstance(inj, ChaosInjector)
+    with pytest.raises(ValueError):
+        parse_chaos("explode@3")
+    with pytest.raises(ValueError):
+        parse_chaos("nan_batch@x")
+
+
+def test_chaos_nan_batch_fires_once_and_is_seeded():
+    batch = {"img": np.ones((8, 4), np.float32),
+             "ids": np.zeros((8, 2), np.int32)}
+    a = ChaosInjector("nan_batch@3", seed=11).poison_batch(3, batch)
+    b = ChaosInjector("nan_batch@3", seed=11).poison_batch(3, batch)
+    rows_a = np.where(np.isnan(a["img"]).any(axis=1))[0]
+    rows_b = np.where(np.isnan(b["img"]).any(axis=1))[0]
+    assert len(rows_a) == 1 and rows_a.tolist() == rows_b.tolist()
+    assert not np.isnan(batch["img"]).any()    # input untouched
+    inj = ChaosInjector("nan_batch@3", seed=11)
+    assert np.isnan(inj.poison_batch(3, batch)["img"]).any()
+    again = inj.poison_batch(3, batch)         # fire-once per process
+    assert not np.isnan(again["img"]).any()
+    assert inj.poison_batch(4, batch) is batch  # wrong step: untouched
+    with pytest.raises(ValueError):
+        ChaosInjector("nan_batch@0").poison_batch(
+            0, {"ids": np.zeros((4,), np.int64)})
+
+
+def test_chaos_kill_hooks_fire_once_at_configured_occurrence():
+    fired = []
+    inj = ChaosInjector("kill@2,kill_save@npz:2",
+                        kill_fn=lambda: fired.append("kill"))
+    inj.pre_step(0)
+    inj.pre_step(2)
+    inj.pre_step(2)
+    assert fired == ["kill"]
+    fired.clear()
+    inj.checkpoint_event("npz")         # occurrence 1: no kill
+    assert fired == []
+    inj.checkpoint_event("npz")         # occurrence 2: kill
+    assert fired == ["kill"]
+    inj.checkpoint_event("npz")
+    assert fired == ["kill"]
+    with pytest.raises(RuntimeError, match="injected loader failure"):
+        ChaosInjector("loader_raise@1").on_loader(1)
+
+
+def test_corruption_helpers(tmp_path):
+    p = str(tmp_path / "f.bin")
+    with open(p, "wb") as f:
+        f.write(bytes(range(100)))
+    flip_byte(p, 10)
+    with open(p, "rb") as f:
+        data = f.read()
+    assert len(data) == 100 and data[10] == 10 ^ 0xFF and data[11] == 11
+    truncate_file(p, 7)
+    assert os.path.getsize(p) == 7
+
+
+# ---------------------------------------------------------------------------
+# Durable checkpoints: digests, fallback, atomicity, retention, async
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": np.linspace(0, 1, 12, dtype=np.float32) + v,
+            "b": np.full((3,), v, np.float32)}
+
+
+def test_digest_catches_silent_value_corruption(tmp_path):
+    """Rewrite a step's npz with one altered value but keep the old
+    sidecar: the zip layer's own CRC is happy, only the sidecar digests
+    can notice — latest_step/restore must demote the step."""
+    d = str(tmp_path)
+    CK.save(d, _tree(1.0), 1)
+    CK.save(d, _tree(2.0), 2)
+    p2 = os.path.join(d, "ckpt_00000002.npz")
+    with np.load(p2) as f:
+        data = {k: f[k].copy() for k in f.files}
+    data["w"][0] += 1.0
+    np.savez_compressed(p2, **data)
+    assert CK.verify_step(d, 2) is False
+    assert CK.verify_step(d, 1) is True
+    assert CK.latest_step(d) == 1
+    restored, step, _ = CK.restore(d, _tree(0.0))
+    assert step == 1
+    assert np.array_equal(restored["w"], _tree(1.0)["w"])
+    with pytest.raises(ValueError, match="digest mismatch"):
+        CK.restore(d, _tree(0.0), step=2)
+
+
+@pytest.mark.parametrize("damage", ["truncate_npz", "flip_npz",
+                                    "truncate_sidecar", "delete_npz"])
+def test_restore_falls_back_past_damaged_newest_step(tmp_path, damage):
+    d = str(tmp_path)
+    CK.save(d, _tree(1.0), 1)
+    CK.save(d, _tree(2.0), 2)
+    npz2 = os.path.join(d, "ckpt_00000002.npz")
+    if damage == "truncate_npz":
+        truncate_file(npz2, 40)
+    elif damage == "flip_npz":
+        flip_byte(npz2, os.path.getsize(npz2) // 2)
+    elif damage == "truncate_sidecar":
+        truncate_file(os.path.join(d, "ckpt_00000002.json"), 10)
+    elif damage == "delete_npz":
+        os.remove(npz2)
+    assert CK.latest_step(d) == 1     # marker says 2; scan+verify demotes
+    restored, step, _ = CK.restore(d, _tree(0.0))
+    assert step == 1
+    assert np.array_equal(restored["b"], _tree(1.0)["b"])
+
+
+def test_every_kill_point_leaves_a_verified_latest(tmp_path):
+    """Simulate a kill at every fault event of the step-2 save: whatever
+    the event, latest_step afterwards returns a step that verifies and
+    restores (the acceptance invariant of the atomic write order)."""
+
+    class SimKill(BaseException):
+        pass
+
+    events = ["pre_npz", "mid_npz", "npz", "mid_sidecar", "sidecar",
+              "mid_latest", "latest", "done"]
+    for ev in events:
+        d = str(tmp_path / ev)
+        CK.save(d, _tree(1.0), 1)
+
+        def boom(event, ev=ev):
+            if event == ev:
+                raise SimKill()
+
+        CK.set_fault_hook(boom)
+        try:
+            with pytest.raises(SimKill):
+                CK.save(d, _tree(2.0), 2)
+        finally:
+            CK.set_fault_hook(None)
+        latest = CK.latest_step(d)
+        # until the sidecar is in place step 2 does not exist; from
+        # there on it is complete (even with a stale/missing marker)
+        want = 1 if ev in ("pre_npz", "mid_npz", "npz",
+                           "mid_sidecar") else 2
+        assert latest == want, (ev, latest)
+        assert CK.verify_step(d, latest)
+        restored, step, _ = CK.restore(d, _tree(0.0))
+        assert step == want
+        assert np.array_equal(restored["w"], _tree(float(want))["w"])
+
+
+def test_tmp_files_are_invisible_to_discovery(tmp_path):
+    d = str(tmp_path)
+    CK.save(d, _tree(1.0), 1)
+    # a crashed writer's leftovers under various names
+    for name in ["ckpt_00000002.npz.tmp.123", "ckpt_00000009.json.tmp.7",
+                 "latest.tmp.42"]:
+        with open(os.path.join(d, name), "wb") as f:
+            f.write(b"partial garbage")
+    assert CK.available_steps(d) == [1]
+    assert CK.latest_step(d) == 1
+
+
+def test_retention_keeps_last_k_plus_every_nth(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 7):
+        CK.save(d, _tree(float(s)), s)
+    deleted = CK.prune_checkpoints(d, keep_last=2, keep_every=3)
+    assert deleted == [1, 2, 4]
+    assert CK.available_steps(d) == [3, 5, 6]
+    assert CK.prune_checkpoints(d, keep_last=0) == []   # 0 = keep all
+
+
+def test_async_checkpointer_roundtrip_and_error_latch(tmp_path):
+    d = str(tmp_path / "ok")
+    ac = CK.AsyncCheckpointer(d)
+    for s in (1, 2, 3):
+        ac.save(_tree(float(s)), s, metadata={"s": s})
+    ac.wait()
+    assert CK.available_steps(d) == [1, 2, 3]
+    restored, step, meta = CK.restore(d, _tree(0.0))
+    assert step == 3 and meta == {"s": 3}
+    assert np.array_equal(restored["w"], _tree(3.0)["w"])
+    ac.close()
+
+    blocked = str(tmp_path / "blocked")
+    with open(blocked, "w") as f:
+        f.write("not a directory")
+    ac2 = CK.AsyncCheckpointer(blocked)
+    ac2.save(_tree(1.0), 1)
+    with pytest.raises(RuntimeError, match="async checkpoint write"):
+        ac2.wait()
+    ac2.close()
+
+
+def test_async_checkpointer_snapshot_is_mutation_safe(tmp_path):
+    """The host snapshot happens inside save(): mutating the live arrays
+    right after save() must not leak into the written checkpoint (the
+    donation/buffer-reuse hazard)."""
+    d = str(tmp_path)
+    ac = CK.AsyncCheckpointer(d)
+    live = _tree(5.0)
+    ac.save(live, 1)
+    live["w"][:] = -777.0
+    ac.close()
+    restored, _, _ = CK.restore(d, _tree(0.0))
+    assert np.array_equal(restored["w"], _tree(5.0)["w"])
+
+
+def test_retention_applies_on_async_saves(tmp_path):
+    d = str(tmp_path)
+    ac = CK.AsyncCheckpointer(d, keep_last=2)
+    for s in range(1, 6):
+        ac.save(_tree(float(s)), s)
+    ac.close()
+    assert CK.available_steps(d) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Resume metadata validation (launcher)
+# ---------------------------------------------------------------------------
+
+def test_resume_metadata_validation():
+    from repro.launch.train import check_resume_metadata
+    check_resume_metadata({"arch": "a", "version": "v3"}, "a", "v3")
+    check_resume_metadata({}, "a", "v3")            # foreign writer: ok
+    check_resume_metadata({"k": "v"}, "a", "v3")
+    with pytest.raises(SystemExit, match="version=.?v2.? .*--version v3"):
+        check_resume_metadata({"arch": "a", "version": "v2"}, "a", "v3")
+    with pytest.raises(SystemExit, match="arch="):
+        check_resume_metadata({"arch": "other", "version": "v3"},
+                              "a", "v3")
+
+
+# ---------------------------------------------------------------------------
+# DevicePrefetcher failure semantics
+# ---------------------------------------------------------------------------
+
+def test_prefetcher_surfaces_producer_exception_at_position():
+    def gen():
+        yield 0
+        yield 1
+        raise ValueError("boom at 2")
+
+    pf = DevicePrefetcher(gen(), depth=2)
+    assert next(pf) == 0
+    assert next(pf) == 1
+    with pytest.raises(ValueError, match="boom at 2"):
+        next(pf)
+    with pytest.raises(StopIteration):   # latched: stops, never hangs
+        next(pf)
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_close_unblocks_mid_put_producer():
+    started = threading.Event()
+
+    def gen():
+        yield from iter(int, 1)          # infinite zeros
+        started.set()
+
+    pf = DevicePrefetcher(gen(), depth=1)
+    assert next(pf) == 0
+    time.sleep(0.05)                     # producer now blocked in put()
+    pf.close()
+    pf._thread.join(timeout=5.0)
+    assert not pf._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_preserves_order_and_transform():
+    pf = DevicePrefetcher(iter(range(10)), depth=3,
+                          transform=lambda x: x * 2)
+    assert list(pf) == [2 * i for i in range(10)]
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_close_twice_and_immediately():
+    pf = DevicePrefetcher(iter(range(100)), depth=2)
+    pf.close()
+    pf.close()
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+# ---------------------------------------------------------------------------
+# Loader fast-forward (index-only resume skip)
+# ---------------------------------------------------------------------------
+
+class _CountingDataset:
+    def __init__(self, n):
+        self.n = n
+        self.batch_calls = 0
+
+    def batch(self, idx):
+        self.batch_calls += 1
+        return {"x": np.asarray(idx, np.int64) * 10}
+
+
+def test_loader_start_is_positionally_identical_to_filtering():
+    full = ShardedLoader(_CountingDataset(16), global_batch=4,
+                         n_shards=2, seed=3)
+    want = [it for it in full.steps(11) if it[1] >= 5]
+    got = list(ShardedLoader(_CountingDataset(16), global_batch=4,
+                             n_shards=2, seed=3).steps(11, start=5))
+    assert len(got) == len(want) == 6
+    for (e1, s1, i1, b1), (e2, s2, i2, b2) in zip(want, got):
+        assert (e1, s1) == (e2, s2)
+        assert np.array_equal(i1, i2)
+        assert np.array_equal(b1["x"], b2["x"])
+
+
+def test_loader_start_skips_without_assembling_batches():
+    ds = _CountingDataset(16)
+    loader = ShardedLoader(ds, global_batch=4, n_shards=2, seed=3)
+    perms = []
+    orig = loader._epoch_perms
+    loader._epoch_perms = lambda e: perms.append(e) or orig(e)
+    out = list(loader.steps(11, start=5))   # spe=4: epochs 0..2
+    assert ds.batch_calls == len(out) == 6  # O(1) per skipped step
+    assert perms == [1, 2]                  # epoch 0 never drew a perm
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat + watchdog
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_atomic_writes_and_final_flush(tmp_path):
+    p = str(tmp_path / "sub" / "hb.json")
+    hb = Heartbeat(p, interval=0.0)     # every beat writes
+    hb.beat(3)
+    with open(p) as f:
+        d = json.load(f)
+    assert d["step"] == 3 and d["pid"] == os.getpid()
+    hb.interval = 1e9                   # throttled now
+    hb.beat(4)
+    hb.beat(5)
+    with open(p) as f:
+        assert json.load(f)["step"] == 3
+    hb.close()                          # final write is never throttled
+    with open(p) as f:
+        assert json.load(f)["step"] == 5
+    assert not os.path.exists(p + f".tmp.{os.getpid()}")
+
+
+def test_watchdog_fires_on_stall_and_rearms_on_beat():
+    hangs = []
+    wd = StepWatchdog(timeout=0.15, on_hang=hangs.append, poll=0.02)
+    try:
+        deadline = time.monotonic() + 5.0
+        while not hangs and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert len(hangs) == 1 and hangs[0] >= 0.15
+        time.sleep(0.2)
+        assert len(hangs) == 1              # fires once per stall
+        wd.beat()                           # re-arms
+        deadline = time.monotonic() + 5.0
+        while len(hangs) < 2 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert len(hangs) == 2
+    finally:
+        wd.close()
+    assert not wd._thread.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end chaos battery (subprocesses, 4 forced host devices)
+# ---------------------------------------------------------------------------
+
+def _run_chaos(check):
+    p = subprocess.run([sys.executable, CHAOS_HELPER, check],
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
+    return p.stdout
+
+
+def test_chaos_kill_resume_bit_identical():
+    """SIGKILL before a step / mid-npz-write / mid-sidecar-write; resume
+    must replay to the uninterrupted run's state bit-for-bit and
+    latest_step must never point at an unverifiable checkpoint."""
+    _run_chaos("kill_resume")
+
+
+def test_chaos_kill_resume_bit_identical_mesh():
+    """The same on --mesh data:2,fsdp:2, incl. a kill between the two
+    per-shard npz files (torn shard set)."""
+    _run_chaos("kill_resume_mesh")
+
+
+def test_chaos_nan_batch_skipped_bitwise_noop():
+    """--guard turns an injected all-NaN batch into a bitwise no-op step
+    (state identical to never seeing the batch) with skipped=1."""
+    _run_chaos("nan_skip")
+
+
+def test_chaos_nan_batch_skipped_bitwise_noop_mesh():
+    _run_chaos("nan_skip_mesh")
+
+
+def test_chaos_rollback_replays_to_clean_run():
+    """Consecutive bad steps trigger restore-from-checkpoint + stream
+    replay; the final state matches the clean run bit-for-bit."""
+    _run_chaos("rollback")
+
+
+def test_chaos_preemption_saves_and_resumes():
+    """SIGTERM: final synchronous checkpoint, clean exit, bit-identical
+    completion on resume."""
+    _run_chaos("preempt")
+
+
+def test_chaos_async_checkpoints_and_retention():
+    _run_chaos("async_ckpt")
+
+
+def test_chaos_loader_failure_surfaces():
+    _run_chaos("loader_raise")
