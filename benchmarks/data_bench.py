@@ -1,0 +1,67 @@
+"""Host-side data-pipeline throughput: streaming vs in-memory (PR 7).
+
+Drains the loader's host stream (no device work) and reports
+microseconds per step and samples/s for:
+
+  * the in-memory ``ShardedLoader`` over a synthetic
+    ``ContrastiveDataset`` (the oracle path — samples regenerated from
+    prototypes per batch),
+  * the ``StreamingLoader`` over a materialized shard directory at
+    worker counts 1 and 4 (decode + per-sample Philox augment on the
+    fly, ``decode_ahead`` pipelining).
+
+The streams are bit-identical by contract (tests/test_streaming.py);
+this table is the *cost* of that contract at each batch-assembly
+strategy.
+
+Run: PYTHONPATH=src python -m benchmarks.data_bench
+"""
+import tempfile
+import time
+
+
+def _drain(loader, steps):
+    t0 = time.perf_counter()
+    n = 0
+    for _epoch, _step, idx, _batch in loader.steps(steps):
+        n += len(idx)
+    dt = time.perf_counter() - t0
+    return dt / steps * 1e6, n / dt
+
+
+def run(steps: int = 32, n: int = 512, global_batch: int = 64):
+    from repro.configs import get_arch
+    from repro.data import (ContrastiveDataset, ShardedLoader,
+                            StreamingLoader, write_contrastive_shards)
+    from repro.data.streaming import StreamingDataset
+
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    ds = ContrastiveDataset(n=n, image_size=cfg.clip.image_size,
+                            context_length=cfg.clip.context_length,
+                            vocab_size=cfg.vocab_size, n_classes=64)
+    rows = []
+    with tempfile.TemporaryDirectory() as root:
+        write_contrastive_shards(ds, root, samples_per_shard=128)
+        configs = [
+            ("data_inmemory", ShardedLoader(
+                ds, global_batch=global_batch, n_shards=1, seed=0)),
+            ("data_stream_w1", StreamingLoader(
+                StreamingDataset(root), global_batch=global_batch,
+                n_shards=1, seed=0, workers=1, decode_ahead=2)),
+            ("data_stream_w4", StreamingLoader(
+                StreamingDataset(root), global_batch=global_batch,
+                n_shards=1, seed=0, workers=4, decode_ahead=4)),
+        ]
+        for name, loader in configs:
+            _drain(loader, 4)                      # warm page cache / jit
+            us, sps = _drain(loader, steps)
+            rows.append((name, us, f"samples_per_s={sps:.0f}"))
+            if isinstance(loader.dataset, StreamingDataset):
+                loader.dataset.close()
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for r in run():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")

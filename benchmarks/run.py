@@ -11,6 +11,8 @@
                          bf16-flash-fused; also emits BENCH_step.json via
                          ``python -m benchmarks.step_bench``)
     retrieval_bench   -> eval-engine streaming top-k vs dense oracle
+    data_bench        -> host data pipeline samples/s (streaming shard
+                         decode vs in-memory synthetic)
     roofline_table    -> deliverable (g) table from the dry-run sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
@@ -29,9 +31,9 @@ def main() -> None:
     args = ap.parse_args()
     steps = 40 if args.quick else 120
 
-    from benchmarks import (fig3_comm, kernel_bench, retrieval_bench,
-                            roofline_table, scaling_model, step_bench,
-                            table3_inner_lr, table4_temperature,
+    from benchmarks import (data_bench, fig3_comm, kernel_bench,
+                            retrieval_bench, roofline_table, scaling_model,
+                            step_bench, table3_inner_lr, table4_temperature,
                             table5_optimizer)
     benches = [
         ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
@@ -43,6 +45,8 @@ def main() -> None:
         ("step_bench", lambda: step_bench.run(steps=5 if args.quick
                                               else 12)),
         ("retrieval_bench", retrieval_bench.run),
+        ("data_bench", lambda: data_bench.run(steps=8 if args.quick
+                                              else 32)),
         ("roofline_table", roofline_table.run),
     ]
     print("name,us_per_call,derived")

@@ -1,4 +1,8 @@
 from repro.data.pipeline import DevicePrefetcher, ShardedLoader  # noqa: F401
+from repro.data.streaming import (  # noqa: F401
+    StreamingDataset, StreamingLoader, write_contrastive_shards,
+    write_shards,
+)
 from repro.data.synthetic import (  # noqa: F401
     ContrastiveDataset, LMDataset, PairedEmbeddingDataset,
     ZeroShotEvalDataset,

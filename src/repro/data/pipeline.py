@@ -34,15 +34,34 @@ class ShardedLoader:
         assert self.global_batch % self.n_shards == 0
         self.shard_size = self.n // self.n_shards
         self.local_batch = self.global_batch // self.n_shards
+        if self.local_batch > self.shard_size:
+            # steps_per_epoch == 0 used to make steps()/epoch() spin
+            # forever (the epoch-skip branch never advanced the step
+            # counter); refuse the shape up front instead
+            raise ValueError(
+                f"local batch {self.local_batch} (global_batch "
+                f"{self.global_batch} / {self.n_shards} shards) exceeds "
+                f"the per-shard sample count {self.shard_size} (n "
+                f"{self.n} / {self.n_shards}): steps_per_epoch would be "
+                "0 and the loader could never yield a full batch.  "
+                "Lower --global-batch or raise --n-samples.")
 
     @property
     def steps_per_epoch(self) -> int:
         return self.shard_size // self.local_batch
 
     def _epoch_perms(self, epoch: int):
+        # Per-(epoch, shard) permutation keys via SeedSequence spawn
+        # keys — collision-free by construction.  (The pre-PR-7 scheme
+        # `seed*100003 + epoch*31 + k` collided across (epoch, shard)
+        # pairs, e.g. (0, 31) vs (1, 0) drew identical permutations.
+        # Compatibility note: this change re-keys every epoch shuffle,
+        # so batch order differs from checkpoints recorded before it —
+        # resume a pre-change run with the pre-change code.)
         per_shard = []
         for k in range(self.n_shards):
-            rng = np.random.RandomState(self.seed * 100003 + epoch * 31 + k)
+            ss = np.random.SeedSequence(self.seed, spawn_key=(epoch, k))
+            rng = np.random.Generator(np.random.PCG64(ss))
             lo = k * self.shard_size
             per_shard.append(lo + rng.permutation(self.shard_size))
         return per_shard
@@ -61,18 +80,11 @@ class ShardedLoader:
             idx = self._step_idx(per_shard, step)
             yield idx, self.dataset.batch(idx)
 
-    def steps(self, n_steps: int, start: int = 0):
-        """Infinite-ish stream over epochs, yielding (epoch, step, idx,
-        batch) for steps [``start``, ``n_steps``).
-
-        ``start`` is the resume fast-forward: the stream is positionally
-        identical to filtering a full ``steps(n_steps)`` run on
-        ``step >= start``, but skipped steps are *index-only* — whole
-        epochs before the resume point advance counters without drawing
-        a permutation, and skipped steps inside the resume epoch neither
-        slice indices nor assemble a host batch (``dataset.batch``) —
-        so resuming at step S costs O(1) per skipped step instead of S
-        full global-batch gathers."""
+    def _index_steps(self, n_steps: int, start: int = 0):
+        """The index-only step plan: yields (epoch, step, idx) for steps
+        [``start``, ``n_steps``) without ever touching the dataset.
+        Shared by ``steps`` (which assembles batches eagerly) and the
+        streaming loader (which pipelines decode over it)."""
         step = 0
         epoch = 0
         while step < n_steps:
@@ -85,10 +97,24 @@ class ShardedLoader:
                 if step >= n_steps:
                     return
                 if step >= start:
-                    idx = self._step_idx(per_shard, e_step)
-                    yield epoch, step, idx, self.dataset.batch(idx)
+                    yield epoch, step, self._step_idx(per_shard, e_step)
                 step += 1
             epoch += 1
+
+    def steps(self, n_steps: int, start: int = 0):
+        """Infinite-ish stream over epochs, yielding (epoch, step, idx,
+        batch) for steps [``start``, ``n_steps``).
+
+        ``start`` is the resume fast-forward: the stream is positionally
+        identical to filtering a full ``steps(n_steps)`` run on
+        ``step >= start``, but skipped steps are *index-only* — whole
+        epochs before the resume point advance counters without drawing
+        a permutation, and skipped steps inside the resume epoch neither
+        slice indices nor assemble a host batch (``dataset.batch``) —
+        so resuming at step S costs O(1) per skipped step instead of S
+        full global-batch gathers."""
+        for epoch, step, idx in self._index_steps(n_steps, start):
+            yield epoch, step, idx, self.dataset.batch(idx)
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,15 @@
 FCCO requires every batch element to carry its *global sample index* (the u
 estimators are per-sample), so the pipeline yields (indices, batch).
 
+**Index-addressability is a hard contract**: sample i's bytes are a pure
+function of (dataset config, i) — ``batch([i])`` equals the i-th row of
+``batch(perm)`` for any permutation containing i.  All randomness goes
+through the per-sample counter-based generators in ``repro.data.rng``
+(Philox keyed on (seed, stream), counter block = global index); the
+streaming pipeline (``repro.data.streaming``) re-applies the same
+augment helpers at decode time, which is what makes a materialized
+shard stream bit-identical to these in-memory datasets.
+
 The contrastive dataset embeds a learnable signal: image i is a fixed random
 "prototype" image determined by a latent class, and its caption tokens encode
 the same class, so a CLIP model can genuinely align the modalities and
@@ -16,6 +25,7 @@ import dataclasses
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.data import rng as R
 
 
 @dataclasses.dataclass
@@ -29,6 +39,10 @@ class ContrastiveDataset:
     noise: float = 0.3
     seed: int = 0
 
+    # stream label of the per-sample image-noise augment; the shard
+    # writer records it so streaming decode re-derives the same key
+    IMAGE_STREAM = "contrastive/images"
+
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
         self.classes = rng.randint(0, self.n_classes, size=self.n)
@@ -37,16 +51,18 @@ class ContrastiveDataset:
         # caption template: class id spelled in tokens (reserving 0 = BOS)
         self.tok_base = rng.randint(1, self.vocab_size,
                                     size=(self.n_classes, 4))
+        self._img_key = R.stream_key(self.seed, self.IMAGE_STREAM)
+
+    def clean_images(self, idx):
+        """The noise-free rendered prototypes (what the shard writer
+        materializes; the noise augment is re-applied at decode)."""
+        base = self.protos[self.classes[idx]]             # (b, 8, 8, 3)
+        return np.repeat(np.repeat(base, self.image_size // 8, axis=1),
+                         self.image_size // 8, axis=2)
 
     def images(self, idx):
-        rng = np.random.RandomState(hash(("img", self.seed)) % (2**31))
-        base = self.protos[self.classes[idx]]             # (b, 8, 8, 3)
-        up = np.repeat(np.repeat(base, self.image_size // 8, axis=1),
-                       self.image_size // 8, axis=2)
-        noise = np.random.RandomState(
-            (self.seed * 7919 + int(idx[0])) % (2**31)
-        ).randn(*up.shape).astype(np.float32) * self.noise
-        return up + noise
+        return R.add_gaussian_noise(self.clean_images(idx), self.noise,
+                                    self._img_key, idx)
 
     def texts(self, idx):
         b = len(idx)
@@ -149,21 +165,29 @@ class LMDataset:
     vocab_size: int
     seed: int = 0
 
+    TOKEN_STREAM = "lm/tokens"
+
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
         # sparse bigram table: each token has 4 likely successors
         self.next_tok = rng.randint(0, self.vocab_size,
                                     size=(self.vocab_size, 4))
+        self._tok_key = R.stream_key(self.seed, self.TOKEN_STREAM)
 
     def batch(self, idx):
-        idx = np.asarray(idx)
+        idx = np.asarray(idx).reshape(-1)
         b = len(idx)
-        rng = np.random.RandomState((self.seed * 31 + int(idx[0])) % (2**31))
+        # per-sample draws: row j's chain depends only on (seed, idx[j])
+        first = np.empty((b,), np.int64)
+        choice = np.empty((b, self.seq_len), np.int64)
+        for j, i in enumerate(idx):
+            g = R.sample_generator(self._tok_key, i)
+            first[j] = g.integers(0, self.vocab_size)
+            choice[j] = g.integers(0, 4, size=self.seq_len)
         toks = np.zeros((b, self.seq_len + 1), np.int64)
-        toks[:, 0] = rng.randint(0, self.vocab_size, size=b)
+        toks[:, 0] = first
         for t in range(self.seq_len):
-            choice = rng.randint(0, 4, size=b)
-            toks[:, t + 1] = self.next_tok[toks[:, t], choice]
+            toks[:, t + 1] = self.next_tok[toks[:, t], choice[:, t]]
         return {"tokens": toks[:, :-1].astype(np.int32),
                 "labels": toks[:, 1:].astype(np.int32)}
 
@@ -180,6 +204,9 @@ class PairedEmbeddingDataset:
     n_classes: int = 64
     seed: int = 0
 
+    EMBED_STREAM = "paired/embeds"
+    noise: float = 0.3
+
     def __post_init__(self):
         rng = np.random.RandomState(self.seed)
         self.classes = rng.randint(0, self.n_classes, size=self.n)
@@ -187,14 +214,14 @@ class PairedEmbeddingDataset:
             np.float32)
         self.tok_base = rng.randint(1, self.vocab_size,
                                     size=(self.n_classes, 8))
+        self._emb_key = R.stream_key(self.seed, self.EMBED_STREAM)
 
     def batch(self, idx):
-        idx = np.asarray(idx)
+        idx = np.asarray(idx).reshape(-1)
         b = len(idx)
         cls = self.classes[idx]
-        emb = self.protos[cls] + 0.3 * np.random.RandomState(
-            (self.seed + int(idx[0])) % (2**31)
-        ).randn(b, self.pair_dim).astype(np.float32)
+        emb = R.add_gaussian_noise(self.protos[cls], self.noise,
+                                   self._emb_key, idx)
         toks = np.zeros((b, self.seq_len), np.int32)
         reps = max(1, self.seq_len // 8)
         ct = self.tok_base[cls]

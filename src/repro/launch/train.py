@@ -57,7 +57,33 @@ disks and numerically bad steps.
   ``--chaos SPEC``
       Deterministic fault injection (``repro.resilience.chaos``) for
       the crash-recovery battery: NaN-poison a batch, raise in the
-      loader, SIGKILL before a step or mid-checkpoint-write.
+      loader or a streaming decode worker, SIGKILL before a step or
+      mid-checkpoint-write.
+
+Streaming data + curricula (PR 7, ``repro.data.streaming`` /
+``repro.data.curriculum``) — feeding scales past host memory:
+
+  ``--data streaming:<dir>``
+      Read (index, batch) streams from a shard directory (fixed-size
+      records + index sidecar; write one with ``python -m
+      repro.data.streaming``) instead of the in-memory synthetic
+      dataset.  Decode/augment runs on a bounded worker pool
+      (``--decode-workers``/``--decode-ahead``) with per-sample
+      counter-based RNG; the loader keeps the exact ShardedLoader
+      index contract — sample ownership (the FCCO u-shard layout),
+      O(1)-per-step resume fast-forward and SIGKILL+``--resume``
+      bit-identity all survive unchanged, and a stream materialized
+      from the synthetic dataset trains bit-identically to the
+      in-memory run.  ``--n-samples`` is taken from the shard index.
+      The default ``--prefetch`` deepens to 4 (decode pipelines behind
+      the H2D double-buffer).
+  ``--image-size-schedule 0:16,300:32`` / ``--context-schedule 0:8``
+      Step-keyed curricula (RECLIP-style small-image training and
+      inverse-scaling-law token-length reduction): host-side exact
+      block-mean image pooling / context truncation; the towers adapt
+      their positional tables (pooled patch grid, sliced text prefix).
+      Scheduled values must divide the native sizes; each stage is one
+      extra jit compile.
 """
 from __future__ import annotations
 
@@ -78,14 +104,21 @@ from repro.core import shard_state as SS
 from repro.core import train_step as TS
 from repro.core.schedules import lr_warmup_cosine
 from repro.data import (ContrastiveDataset, DevicePrefetcher, LMDataset,
-                        PairedEmbeddingDataset, ShardedLoader)
+                        PairedEmbeddingDataset, ShardedLoader,
+                        StreamingDataset, StreamingLoader)
+from repro.data import curriculum as CU
 from repro.launch.steps import donated_jit
 from repro.models import backbones as BB
 from repro.models.precision import POLICIES
 from repro.optim import get_optimizer
 
 
-def build_dataset(cfg, objective, n, seq_len):
+def build_dataset(cfg, objective, n, seq_len, data="synthetic"):
+    if data.startswith("streaming:"):
+        return StreamingDataset(data.split(":", 1)[1])
+    if data != "synthetic":
+        raise SystemExit(f"--data {data!r}: want 'synthetic' or "
+                         "'streaming:<shard-dir>'")
     if cfg.family == "clip":
         return ContrastiveDataset(n=n, image_size=cfg.clip.image_size,
                                   context_length=cfg.clip.context_length,
@@ -148,8 +181,26 @@ def main(argv=None):
                     help="training attention: pure-JAX chunked online "
                          "softmax, the Pallas flash kernel (interpret "
                          "mode off-TPU), or the O(S^2) oracle")
-    ap.add_argument("--prefetch", type=int, default=2,
-                    help="host->device prefetch depth (0 disables)")
+    ap.add_argument("--data", default="synthetic",
+                    help="'synthetic' (in-memory, default) or "
+                         "'streaming:<dir>' — a shard directory written "
+                         "by `python -m repro.data.streaming` (decode/"
+                         "augment on the fly, same ownership contract)")
+    ap.add_argument("--decode-workers", type=int, default=4,
+                    help="streaming decode worker threads")
+    ap.add_argument("--decode-ahead", type=int, default=4,
+                    help="streaming batches decoded ahead of the step "
+                         "loop (bounded pipeline depth)")
+    ap.add_argument("--image-size-schedule", default=None,
+                    help="resolution curriculum 'STEP:SIZE[,...]' "
+                         "(block-mean shrink; sizes must divide the "
+                         "native image size)")
+    ap.add_argument("--context-schedule", default=None,
+                    help="text-context curriculum 'STEP:LEN[,...]' "
+                         "(prefix truncation)")
+    ap.add_argument("--prefetch", type=int, default=None,
+                    help="host->device prefetch depth (0 disables; "
+                         "default 2, or 4 under --data streaming)")
     ap.add_argument("--mesh", default=None,
                     help="data:N[,fsdp:M] — run the contrastive step on "
                          "the named (data, fsdp) mesh: batch/u sharded "
@@ -203,7 +254,15 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    ds = build_dataset(cfg, args.objective, args.n_samples, args.seq_len)
+    streaming = args.data.startswith("streaming:")
+    ds = build_dataset(cfg, args.objective, args.n_samples, args.seq_len,
+                       data=args.data)
+    if streaming:
+        args.n_samples = ds.n    # FCCO u sizing follows the shard index
+    if args.prefetch is None:
+        args.prefetch = 4 if streaming else 2
+    image_sched = CU.parse_schedule(args.image_size_schedule)
+    context_sched = CU.parse_schedule(args.context_schedule)
     guard = args.guard or args.rollback_after > 0
     chaos = RS.parse_chaos(args.chaos, seed=args.seed)
 
@@ -218,8 +277,15 @@ def main(argv=None):
         mesh = SS.make_train_mesh(data_sz, fsdp_sz)
         TS.set_mesh(mesh)
     n_shards = data_sz * fsdp_sz if mesh is not None else 1
-    loader = ShardedLoader(ds, global_batch=args.global_batch,
-                           n_shards=n_shards, seed=args.seed)
+    if streaming:
+        loader = StreamingLoader(
+            ds, global_batch=args.global_batch, n_shards=n_shards,
+            seed=args.seed, workers=args.decode_workers,
+            decode_ahead=args.decode_ahead,
+            fault_hook=chaos.on_decode if chaos is not None else None)
+    else:
+        loader = ShardedLoader(ds, global_batch=args.global_batch,
+                               n_shards=n_shards, seed=args.seed)
 
     if args.objective == "lm" and cfg.family != "clip":
         from repro.launch.steps import make_lm_train_step
@@ -315,6 +381,8 @@ def main(argv=None):
             if chaos is not None:
                 chaos.on_loader(step)
                 batch = chaos.poison_batch(step, batch)
+            batch = CU.apply_curriculum(batch, step, image_sched,
+                                        context_sched)
             yield epoch, step, idx, batch
 
     def make_stream(from_step):

@@ -56,10 +56,12 @@ def encode_image(params, cfg: ArchConfig, images, *, impl="chunked",
 
 def encode_text(params, cfg: ArchConfig, tokens, *, impl="chunked",
                 precision=PR.F32):
-    """tokens: (B, context_length) int32."""
+    """tokens: (B, S) int32 with S <= context_length; shorter inputs
+    (token-length curriculum, repro.data.curriculum) use the positional-
+    embedding prefix."""
     x = L.embed_tokens(params["tok_embed"], tokens,
                        dtype=precision.compute_dtype)
-    x = x + params["pos_embed"].astype(x.dtype)
+    x = x + params["pos_embed"][:, :x.shape[1]].astype(x.dtype)
     x = T.apply_stack(params["text_blocks"], cfg, x, mlp="gelu", impl=impl,
                       precision=precision)
     x = L.rmsnorm(params["text_norm"], x)

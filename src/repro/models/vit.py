@@ -52,18 +52,43 @@ def patchify(images, patch):
     return x.reshape(B, gh * gw, patch * patch * 3)
 
 
+def pos_embed_for_grid(pos, gh: int, gw: int):
+    """Adapt the (1, G*G+1, W) positional table to a (gh, gw) patch grid
+    (small-image curriculum, repro.data.curriculum): the CLS slot passes
+    through, the grid part block-mean pools — the same exact area
+    average the curriculum applies to the pixels, so position semantics
+    track the shrink.  The full-size grid returns ``pos`` unchanged
+    (bitwise: the training fast path at native resolution is
+    untouched).  ``gh``/``gw`` must divide the stored grid."""
+    n = pos.shape[1] - 1
+    G = int(round(float(n) ** 0.5))
+    if (gh, gw) == (G, G):
+        return pos
+    if G % gh or G % gw:
+        raise ValueError(
+            f"patch grid ({gh}, {gw}) must divide the positional grid "
+            f"({G}, {G}) (curriculum sizes must divide the native size)")
+    grid = pos[:, 1:].reshape(1, gh, G // gh, gw, G // gw, pos.shape[-1])
+    grid = grid.mean(axis=(2, 4)).reshape(1, gh * gw, pos.shape[-1])
+    return jnp.concatenate([pos[:, :1], grid], axis=1)
+
+
 def apply_vit(params, c: CLIPConfig, images, *, impl="chunked",
               precision=PR.F32):
     """images: (B, H, W, 3) -> embeddings (B, embed_dim) (not normalized).
     ``impl`` selects the block attention ("chunked"/"flash"/"naive";
     the ViT runs it non-causal); ``precision`` the activation dtype policy
-    (entry cast here, exit cast to the f32 loss boundary)."""
+    (entry cast here, exit cast to the f32 loss boundary).  Inputs
+    smaller than ``c.image_size`` (resolution curriculum) run on a
+    block-mean-pooled positional grid."""
     spec = _vit_spec(c)
+    gh, gw = images.shape[1] // c.patch_size, images.shape[2] // c.patch_size
     x = PR.cast_compute(precision, patchify(images, c.patch_size))
     x = jnp.einsum("bpd,dw->bpw", x, params["patch"].astype(x.dtype))
     cls = jnp.broadcast_to(params["cls"].astype(x.dtype),
                            (x.shape[0], 1, x.shape[-1]))
-    x = jnp.concatenate([cls, x], axis=1) + params["pos"].astype(x.dtype)
+    pos = pos_embed_for_grid(params["pos"], gh, gw)
+    x = jnp.concatenate([cls, x], axis=1) + pos.astype(x.dtype)
 
     def body(h, p):
         a = A.attention(p["attn"], spec, L.layernorm(p["n1"], h),

@@ -13,6 +13,12 @@ afresh from its own ``--chaos`` flag):
     loader_raise@K     raise RuntimeError out of the loader stream at
                        step K (exercises DevicePrefetcher error
                        propagation and clean shutdown)
+    decode_raise@K     raise RuntimeError inside a streaming decode
+                       worker while it assembles the batch of step K
+                       (exercises error propagation through the decode
+                       pool *and* the prefetcher: the exception must
+                       surface on the consumer thread at that step,
+                       with no deadlock and no leaked workers)
     kill@K             SIGKILL the process immediately before running
                        step K (mid-run crash; resume must replay to the
                        uninterrupted trajectory bit-for-bit)
@@ -46,7 +52,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-_FAULT_RE = re.compile(r"^(nan_batch|loader_raise|kill|sigterm)@(\d+)$")
+_FAULT_RE = re.compile(
+    r"^(nan_batch|loader_raise|decode_raise|kill|sigterm)@(\d+)$")
 _KILL_SAVE_RE = re.compile(r"^kill_save@([a-z_]+)(?::(\d+))?$")
 
 
@@ -65,6 +72,7 @@ class ChaosInjector:
         self.kill_fn = kill_fn or _real_kill
         self._nan_steps: Dict[int, bool] = {}
         self._raise_steps: Dict[int, bool] = {}
+        self._decode_steps: Dict[int, bool] = {}
         self._kill_steps: Dict[int, bool] = {}
         self._sigterm_steps: Dict[int, bool] = {}
         self._kill_saves: Dict[str, Dict[int, bool]] = {}
@@ -74,6 +82,7 @@ class ChaosInjector:
             if m:
                 table = {"nan_batch": self._nan_steps,
                          "loader_raise": self._raise_steps,
+                         "decode_raise": self._decode_steps,
                          "kill": self._kill_steps,
                          "sigterm": self._sigterm_steps}[m.group(1)]
                 table[int(m.group(2))] = False
@@ -98,6 +107,13 @@ class ChaosInjector:
         """Called per loader step; raises when a loader fault is due."""
         if self._fire_once(self._raise_steps, step):
             raise RuntimeError(f"chaos: injected loader failure at step "
+                               f"{step}")
+
+    def on_decode(self, step: int) -> None:
+        """Called from inside a streaming decode worker (first chunk of
+        a batch); raises when a decode fault is due for that step."""
+        if self._fire_once(self._decode_steps, step):
+            raise RuntimeError(f"chaos: injected decode failure at step "
                                f"{step}")
 
     def poison_batch(self, step: int, batch: dict) -> dict:

@@ -31,6 +31,15 @@ Checks:
   loader_raise      an injected loader exception at step K surfaces out
                     of the launcher (through the prefetcher) as the
                     original error, without hanging.
+  streaming         the streaming data path (PR 7): a shard directory
+                    materialized from the synthetic dataset trains
+                    bit-identically to the in-memory run on --mesh
+                    data:2,fsdp:2; SIGKILL mid-epoch (kill@5) plus
+                    --resume replays the streaming run to the
+                    uninterrupted final state bit-for-bit; and an
+                    injected decode-worker exception (decode_raise@2)
+                    surfaces through the decode pool and the prefetcher
+                    without hanging.
 """
 import contextlib
 import io
@@ -238,6 +247,56 @@ def check_loader_raise():
     return ok
 
 
+def check_streaming():
+    from repro.configs import get_arch
+    from repro.data import ContrastiveDataset, write_contrastive_shards
+
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    ds = ContrastiveDataset(n=64, image_size=cfg.clip.image_size,
+                            context_length=cfg.clip.context_length,
+                            vocab_size=cfg.vocab_size, n_classes=64)
+    ok = True
+    with tempfile.TemporaryDirectory() as shards, \
+            tempfile.TemporaryDirectory() as d0, \
+            tempfile.TemporaryDirectory() as d1:
+        write_contrastive_shards(ds, shards, samples_per_shard=16)
+        stream = ["--data", f"streaming:{shards}"]
+
+        # 1. streaming == in-memory, sharded mesh
+        mem, _ = _run_main(_args(8, *MESH))
+        strm, _ = _run_main(_args(8, *MESH, *stream))
+        bit = _bitwise(mem, strm)
+        print(f"streaming == in-memory on data:2,fsdp:2: {bit}")
+        ok &= bit
+
+        # 2. SIGKILL mid-epoch + --resume, bit-for-bit (mesh)
+        oracle, _ = _run_main(_args(8, "--ckpt-dir", d0, *MESH, *stream))
+        proc = _spawn(_args(8, "--ckpt-dir", d1, "--chaos", "kill@5",
+                            *MESH, *stream))
+        killed = proc.returncode == -signal.SIGKILL
+        latest = CK.latest_step(d1)
+        resumed, _ = _run_main(
+            _args(8, "--ckpt-dir", d1, "--resume", *MESH, *stream))
+        rbit = _bitwise(oracle, resumed)
+        print(f"kill@5: killed={killed} latest={latest} "
+              f"resume-bit-identical={rbit}")
+        if not killed:
+            print(proc.stdout[-2000:], proc.stderr[-2000:])
+        ok &= killed and rbit
+
+        # 3. decode-worker exception surfaces through pool + prefetcher
+        raised = False
+        try:
+            _run_main(_args(6, "--chaos", "decode_raise@2", *stream))
+        except RuntimeError as e:
+            raised = "chaos: injected decode failure at step 2" in str(e)
+            print(f"decode exception surfaced: {e}")
+        print(f"decode_raise@2 surfaced without hanging: {raised}")
+        ok &= raised
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
 CHECKS = {
     "kill_resume": check_kill_resume,
     "kill_resume_mesh": check_kill_resume_mesh,
@@ -247,6 +306,7 @@ CHECKS = {
     "preempt": check_preempt,
     "async_ckpt": check_async_ckpt,
     "loader_raise": check_loader_raise,
+    "streaming": check_streaming,
 }
 
 if __name__ == "__main__":

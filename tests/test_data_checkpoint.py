@@ -65,6 +65,74 @@ def test_paired_embedding_dataset():
     assert b["tokens"].shape == (8, 16)
 
 
+@pytest.mark.parametrize("make", [
+    lambda: ContrastiveDataset(n=64, image_size=32, context_length=16,
+                               vocab_size=512, n_classes=8),
+    lambda: LMDataset(n=64, seq_len=16, vocab_size=64),
+    lambda: PairedEmbeddingDataset(n=64, seq_len=16, vocab_size=100),
+], ids=["contrastive", "lm", "paired"])
+def test_per_sample_determinism(make):
+    """Regression (PR 7): sample i's content is a pure function of
+    (dataset config, i) — never of batch composition.  The old code
+    seeded the batch RNG from ``int(idx[0])``, so ``batch([3, 5])`` and
+    ``batch([5, 3])`` disagreed on sample 5's noise, breaking the FCCO
+    per-sample u contract and resume bit-identity."""
+    ds = make()
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(ds.n)[:16]
+    full = ds.batch(perm)
+    for pos, i in enumerate(perm):
+        single = ds.batch(np.asarray([i]))
+        for k in full:
+            np.testing.assert_array_equal(
+                full[k][pos], single[k][0],
+                err_msg=f"field {k!r}, sample {i} differs between "
+                        f"batch(perm) and batch([{i}])")
+
+
+def test_loader_zero_steps_per_epoch_raises():
+    """Regression (PR 7): local_batch > shard_size used to make
+    steps_per_epoch == 0 and ``steps(n)`` loop over empty epochs
+    forever.  Construction must raise instead; the thread guard keeps a
+    regression from hanging the suite."""
+    import threading
+
+    ds = LMDataset(n=16, seq_len=4, vocab_size=50)
+    result = {}
+
+    def construct():
+        try:
+            ShardedLoader(ds, global_batch=32, n_shards=4)
+            result["raised"] = None
+        except ValueError as e:
+            result["raised"] = e
+
+    t = threading.Thread(target=construct, daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert not t.is_alive(), "loader construction hung"
+    assert result["raised"] is not None
+    assert "steps_per_epoch" in str(result["raised"])
+
+
+def test_loader_epoch_perm_seeds_do_not_collide():
+    """Regression (PR 7): the old arithmetic mixing
+    ``seed*100003 + epoch*31 + k`` collided for (epoch, shard) pairs
+    like (0, 31) vs (1, 0), replaying identical shard permutations.
+    SeedSequence spawn keys are collision-free: every (epoch, shard)
+    draws a distinct permutation stream."""
+    ds = LMDataset(n=256, seq_len=4, vocab_size=50)
+    loader = ShardedLoader(ds, global_batch=32, n_shards=32, seed=0)
+    p0 = loader._epoch_perms(0)   # shard perms, epoch 0
+    p1 = loader._epoch_perms(1)
+    # the exact old collision: (epoch=0, k=31) == (epoch=1, k=0)
+    assert not np.array_equal(p0[31], p1[0])
+    # and no identical perms across the two epochs at all
+    for a in range(32):
+        for b in range(32):
+            assert not np.array_equal(p0[a], p1[b]), (a, b)
+
+
 def test_checkpoint_roundtrip(tmp_path):
     tree = {
         "params": {"w": jnp.arange(6.0).reshape(2, 3),

@@ -382,6 +382,112 @@ def test_prefetcher_close_twice_and_immediately():
         next(pf)
 
 
+@pytest.mark.parametrize("depth", [3, 4, 8])
+def test_prefetcher_deep_preserves_order(depth):
+    """Depth > 2 (the streaming default is 4): strict FIFO order with
+    the transform applied exactly once per item."""
+    calls = []
+
+    def tf(x):
+        calls.append(x)
+        return x * 3
+
+    pf = DevicePrefetcher(iter(range(25)), depth=depth, transform=tf)
+    assert list(pf) == [3 * i for i in range(25)]
+    assert sorted(calls) == list(range(25))
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+@pytest.mark.parametrize("depth", [4, 8])
+def test_prefetcher_deep_exception_at_position(depth):
+    """A producer exception surfaces exactly after the items that
+    preceded it, no matter how far ahead the buffer ran."""
+    def gen():
+        yield from range(5)
+        raise ValueError("boom at 5")
+
+    pf = DevicePrefetcher(gen(), depth=depth)
+    got = []
+    with pytest.raises(ValueError, match="boom at 5"):
+        for x in pf:
+            got.append(x)
+    assert got == [0, 1, 2, 3, 4]
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_deep_over_streaming_loader(tmp_path):
+    """The launcher's streaming stack — StreamingLoader decode pool
+    under a depth-4 DevicePrefetcher — yields the oracle stream in
+    order, and closing the prefetcher mid-stream tears the whole stack
+    down without deadlock (the generator finally cancels the pool)."""
+    from repro.data import (ContrastiveDataset, StreamingDataset,
+                            StreamingLoader, write_contrastive_shards)
+
+    ds = ContrastiveDataset(n=64, image_size=32, context_length=16,
+                            vocab_size=512, n_classes=8)
+    root = str(tmp_path / "shards")
+    write_contrastive_shards(ds, root, samples_per_shard=16)
+
+    def make():
+        return StreamingLoader(StreamingDataset(root), global_batch=16,
+                               n_shards=4, seed=2, workers=3,
+                               decode_ahead=4)
+
+    oracle_loader = ShardedLoader(ds, global_batch=16, n_shards=4, seed=2)
+    oracle = list(oracle_loader.steps(10))
+    strm = make()
+    pf = DevicePrefetcher(strm.steps(10), depth=4)
+    got = list(pf)
+    assert len(got) == 10
+    for (e1, s1, i1, b1), (e2, s2, i2, b2) in zip(oracle, got):
+        assert (e1, s1) == (e2, s2)
+        assert np.array_equal(i1, i2)
+        for k in b1:
+            np.testing.assert_array_equal(b1[k], b2[k], err_msg=k)
+    strm.dataset.close()
+
+    # close mid-stream: no deadlock, producer thread exits promptly
+    strm2 = make()
+    pf2 = DevicePrefetcher(strm2.steps(10), depth=4)
+    next(pf2)
+    pf2.close()
+    pf2._thread.join(timeout=10.0)
+    assert not pf2._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(pf2)
+    strm2.dataset.close()
+
+
+def test_prefetcher_exception_through_decode_pool(tmp_path):
+    """A decode-worker exception (the chaos decode_raise path) crosses
+    both hops — pool future -> loader generator -> prefetcher — and
+    lands on the consumer at the right position."""
+    from repro.data import (ContrastiveDataset, StreamingDataset,
+                            StreamingLoader, write_contrastive_shards)
+
+    ds = ContrastiveDataset(n=64, image_size=32, context_length=16,
+                            vocab_size=512, n_classes=8)
+    root = str(tmp_path / "shards")
+    write_contrastive_shards(ds, root, samples_per_shard=16)
+
+    def hook(step):
+        if step == 3:
+            raise RuntimeError("decode boom at 3")
+
+    strm = StreamingLoader(StreamingDataset(root), global_batch=16,
+                           n_shards=4, seed=0, workers=2, decode_ahead=4,
+                           fault_hook=hook)
+    pf = DevicePrefetcher(strm.steps(8), depth=4)
+    got = []
+    with pytest.raises(RuntimeError, match="decode boom at 3"):
+        for _e, step, _i, _b in pf:
+            got.append(step)
+    assert got == [0, 1, 2]
+    strm.dataset.close()
+
+
 # ---------------------------------------------------------------------------
 # Loader fast-forward (index-only resume skip)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,307 @@
+"""Streaming shard pipeline + curricula (PR 7).
+
+The contract under test: a shard directory materialized from a
+synthetic dataset streams (indices AND batches) bit-identically to the
+in-memory oracle, with O(1) fast-forward doing no decode work, and the
+curriculum transforms composing on top without touching the index
+stream.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data import (ContrastiveDataset, LMDataset, ShardedLoader,
+                        StreamingDataset, StreamingLoader,
+                        write_contrastive_shards, write_shards)
+from repro.data import curriculum as CU
+
+
+def _contrastive(n=64):
+    return ContrastiveDataset(n=n, image_size=32, context_length=16,
+                              vocab_size=512, n_classes=8)
+
+
+@pytest.fixture()
+def shard_dir(tmp_path):
+    ds = _contrastive()
+    root = str(tmp_path / "shards")
+    write_contrastive_shards(ds, root, samples_per_shard=16)
+    return ds, root
+
+
+# ---------------------------------------------------------------------------
+# Format / reader
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_contrastive_bitwise(shard_dir):
+    """Clean shards + decode-time Philox augment == the in-memory
+    dataset, bitwise, for arbitrary index sets in arbitrary order."""
+    ds, root = shard_dir
+    sd = StreamingDataset(root)
+    for idx in (np.arange(16), np.asarray([63, 0, 17, 5]),
+                np.asarray([7])):
+        a, b = ds.batch(idx), sd.batch(idx)
+        assert set(a) == set(b)
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    sd.close()
+
+
+def test_roundtrip_generic_no_augment(tmp_path):
+    """write_shards on an arbitrary dataset (LM path, no augment spec):
+    stored bytes decode back exactly; ragged final shard included."""
+    ds = LMDataset(n=50, seq_len=8, vocab_size=64)   # 50 % 16 != 0
+    root = str(tmp_path / "lm")
+    write_shards(root, ds, samples_per_shard=16)
+    sd = StreamingDataset(root)
+    assert sd.n == 50 and sd.augment is None
+    idx = np.asarray([49, 0, 31, 16])
+    a, b = ds.batch(idx), sd.batch(idx)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    sd.close()
+
+
+def test_missing_sidecar_and_version_mismatch(tmp_path, shard_dir):
+    with pytest.raises(FileNotFoundError, match="index.json"):
+        StreamingDataset(str(tmp_path / "nope"))
+    import json, os
+    _, root = shard_dir
+    with open(os.path.join(root, "index.json")) as f:
+        idx = json.load(f)
+    idx["version"] = 99
+    bad = str(tmp_path / "bad")
+    os.makedirs(bad)
+    with open(os.path.join(bad, "index.json"), "w") as f:
+        json.dump(idx, f)
+    with pytest.raises(ValueError, match="version"):
+        StreamingDataset(bad)
+
+
+def test_out_of_range_and_truncated_shard(shard_dir):
+    _, root = shard_dir
+    sd = StreamingDataset(root)
+    with pytest.raises(IndexError):
+        sd.read_record(64)
+    with pytest.raises(IndexError):
+        sd.read_record(-1)
+    sd.close()
+    import os
+    shard0 = os.path.join(root, "shard-00000.bin")
+    os.truncate(shard0, sd.record_size // 2)
+    sd2 = StreamingDataset(root)
+    with pytest.raises(IOError, match="short read"):
+        sd2.batch(np.asarray([0]))
+    sd2.close()
+
+
+def test_concurrent_decode_thread_safe(shard_dir):
+    """os.pread on shared fds: 8 threads decoding overlapping index
+    sets all see exactly the oracle bytes."""
+    ds, root = shard_dir
+    sd = StreamingDataset(root)
+    oracle = ds.batch(np.arange(64))
+    errs = []
+
+    def worker(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(5):
+            idx = rng.integers(0, 64, size=9)
+            got = sd.batch(idx)
+            for k in oracle:
+                if not np.array_equal(got[k], oracle[k][idx]):
+                    errs.append((seed, k))
+
+    threads = [threading.Thread(target=worker, args=(s,))
+               for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not errs and not any(t.is_alive() for t in threads)
+    assert sd.decodes == 8 * 5 * 9   # counting decoder is exact
+    sd.close()
+
+
+# ---------------------------------------------------------------------------
+# StreamingLoader: stream identity, fast-forward, faults
+# ---------------------------------------------------------------------------
+
+def test_streaming_loader_stream_identical_to_oracle(shard_dir):
+    """Multi-epoch (indices, batch) streams bit-identical to the
+    in-memory ShardedLoader at n_shards=4 — ownership layout included."""
+    ds, root = shard_dir
+    mem = ShardedLoader(ds, global_batch=16, n_shards=4, seed=3)
+    strm = StreamingLoader(StreamingDataset(root), global_batch=16,
+                           n_shards=4, seed=3, workers=3, decode_ahead=3)
+    a = list(mem.steps(13))
+    b = list(strm.steps(13))
+    assert len(a) == len(b) == 13
+    for (ea, sa, ia, ba), (eb, sb, ib, bb) in zip(a, b):
+        assert (ea, sa) == (eb, sb)
+        np.testing.assert_array_equal(ia, ib)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k], err_msg=k)
+    strm.dataset.close()
+
+
+def test_streaming_fast_forward_does_no_decode_work(shard_dir):
+    """steps(n, start=S): the S skipped steps are index-only — the
+    counting decoder must see bytes for exactly the yielded steps (plus
+    up to decode_ahead batches the pipeline legitimately has in
+    flight), and the resumed stream matches the tail of the full one."""
+    _, root = shard_dir
+    def make():
+        return StreamingLoader(StreamingDataset(root), global_batch=16,
+                               n_shards=4, seed=1, workers=2,
+                               decode_ahead=2)
+    full = make()
+    tail_want = list(full.steps(12))[5:]
+    full.dataset.close()
+
+    part = make()
+    tail_got = list(part.steps(12, start=5))
+    # 7 yielded steps x 16 samples; nothing decoded for steps 0..4
+    assert part.dataset.decodes == 7 * 16
+    part.dataset.close()
+    assert len(tail_got) == len(tail_want) == 7
+    for (ea, sa, ia, ba), (eb, sb, ib, bb) in zip(tail_want, tail_got):
+        assert (ea, sa) == (eb, sb)
+        np.testing.assert_array_equal(ia, ib)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k], err_msg=k)
+
+
+def test_streaming_decode_fault_surfaces_at_position(shard_dir):
+    """fault_hook raising inside a worker: steps before K yield
+    normally, the exception surfaces to the consumer exactly at step K,
+    and iteration stops cleanly (executor torn down, no hang)."""
+    _, root = shard_dir
+
+    def hook(step):
+        if step == 2:
+            raise RuntimeError("boom at 2")
+
+    strm = StreamingLoader(StreamingDataset(root), global_batch=16,
+                           n_shards=4, seed=0, workers=2, decode_ahead=4,
+                           fault_hook=hook)
+    got = []
+    with pytest.raises(RuntimeError, match="boom at 2"):
+        for _epoch, step, _idx, _batch in strm.steps(8):
+            got.append(step)
+    assert got == [0, 1]
+    strm.dataset.close()
+
+
+def test_streaming_early_close_cancels_pending(shard_dir):
+    """Abandoning the generator mid-stream (the DevicePrefetcher close
+    path) must cancel in-flight decode futures and not leak/hang."""
+    _, root = shard_dir
+    strm = StreamingLoader(StreamingDataset(root), global_batch=16,
+                           n_shards=4, seed=0, workers=4, decode_ahead=4)
+    it = strm.steps(12)
+    next(it)
+    it.close()   # generator finally: cancel + shutdown
+    before = strm.dataset.decodes
+    import time
+    time.sleep(0.1)
+    # no new decode work after close beyond what was already running
+    assert strm.dataset.decodes <= before + 4 * 16
+    strm.dataset.close()
+
+
+def test_streaming_loader_zero_steps_per_epoch_raises(shard_dir):
+    _, root = shard_dir
+    sd = StreamingDataset(root)
+    with pytest.raises(ValueError, match="steps_per_epoch"):
+        StreamingLoader(sd, global_batch=128, n_shards=4, seed=0)
+    sd.close()
+
+
+# ---------------------------------------------------------------------------
+# Curricula
+# ---------------------------------------------------------------------------
+
+def test_parse_schedule():
+    assert CU.parse_schedule(None) is None
+    assert CU.parse_schedule("") is None
+    assert CU.parse_schedule("0:16,300:32") == [(0, 16), (300, 32)]
+    assert CU.parse_schedule("300:32,0:16") == [(0, 16), (300, 32)]
+    with pytest.raises(ValueError, match="step 0"):
+        CU.parse_schedule("10:16")
+    with pytest.raises(ValueError, match="duplicate"):
+        CU.parse_schedule("0:16,0:32")
+    with pytest.raises(ValueError, match="unparseable"):
+        CU.parse_schedule("0:16,banana")
+    sched = CU.parse_schedule("0:8,5:16,9:32")
+    assert [CU.schedule_value(sched, s) for s in (0, 4, 5, 8, 9, 100)] \
+        == [8, 8, 16, 16, 32, 32]
+
+
+def test_shrink_images_block_mean_and_identity():
+    imgs = np.arange(2 * 8 * 8 * 3, dtype=np.float32).reshape(2, 8, 8, 3)
+    assert CU.shrink_images(imgs, 8) is imgs          # identity, no copy
+    small = CU.shrink_images(imgs, 4)
+    assert small.shape == (2, 4, 4, 3)
+    np.testing.assert_allclose(small[0, 0, 0, 0],
+                               imgs[0, :2, :2, 0].mean())
+    with pytest.raises(ValueError, match="divide"):
+        CU.shrink_images(imgs, 3)
+
+
+def test_truncate_and_apply_curriculum():
+    toks = np.arange(32).reshape(2, 16)
+    np.testing.assert_array_equal(CU.truncate_tokens(toks, 4),
+                                  toks[:, :4])
+    assert CU.truncate_tokens(toks, 16) is toks
+    batch = {"images": np.zeros((2, 8, 8, 3), np.float32),
+             "texts": toks, "other": np.ones(2)}
+    out = CU.apply_curriculum(batch, step=5,
+                              image_sched=[(0, 4), (10, 8)],
+                              context_sched=[(0, 8)])
+    assert out["images"].shape == (2, 4, 4, 3)
+    assert out["texts"].shape == (2, 8)
+    assert out["other"] is batch["other"]
+    assert CU.apply_curriculum(batch, 0) is batch    # no schedules: noop
+
+
+def test_vit_pos_embed_for_grid_identity_and_pool():
+    import jax.numpy as jnp
+    from repro.models import vit as V
+    pos = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, 17, 8)).astype(np.float32))          # 4x4 grid + CLS
+    assert V.pos_embed_for_grid(pos, 4, 4) is pos     # bitwise fast path
+    small = V.pos_embed_for_grid(pos, 2, 2)
+    assert small.shape == (1, 5, 8)
+    np.testing.assert_array_equal(np.asarray(small[0, 0]),
+                                  np.asarray(pos[0, 0]))   # CLS intact
+    want = np.asarray(pos[0, 1:]).reshape(2, 2, 2, 2, 8).mean(axis=(1, 3))
+    np.testing.assert_allclose(np.asarray(small[0, 1:]),
+                               want.reshape(4, 8), rtol=1e-6)
+    with pytest.raises(ValueError, match="divide"):
+        V.pos_embed_for_grid(pos, 3, 3)
+
+
+def test_towers_accept_curriculum_shapes():
+    """Reduced CLIP towers run on shrunk images / truncated contexts
+    (the pos tables adapt); full-size inputs are untouched."""
+    import jax
+    from repro.configs import get_arch
+    from repro.models import clip as C
+    cfg = get_arch("clip-vitb32-cc12m").reduced()
+    params = C.init_clip(jax.random.PRNGKey(0), cfg)
+    c = cfg.clip
+    imgs = np.random.default_rng(1).normal(
+        size=(2, c.image_size, c.image_size, 3)).astype(np.float32)
+    toks = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, size=(2, c.context_length), dtype=np.int32)
+    e_full = C.encode_image(params, cfg, imgs)
+    small = CU.shrink_images(imgs, c.image_size // 2)
+    e_small = C.encode_image(params, cfg, small)
+    assert e_full.shape == e_small.shape == (2, c.embed_dim)
+    t_full = C.encode_text(params, cfg, toks)
+    t_half = C.encode_text(params, cfg, toks[:, :c.context_length // 2])
+    assert t_full.shape == t_half.shape == (2, c.embed_dim)
+    assert np.all(np.isfinite(np.asarray(e_small)))
+    assert np.all(np.isfinite(np.asarray(t_half)))
