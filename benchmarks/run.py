@@ -13,6 +13,10 @@
     retrieval_bench   -> eval-engine streaming top-k vs dense oracle
     data_bench        -> host data pipeline samples/s (streaming shard
                          decode vs in-memory synthetic)
+    serve_bench       -> serving-engine offered-load sweep: p50/p99
+                         latency, shed rate, cache hit rate (also
+                         emits BENCH_serve.json via
+                         ``python -m benchmarks.serve_bench``)
     roofline_table    -> deliverable (g) table from the dry-run sweep
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
@@ -33,8 +37,8 @@ def main() -> None:
 
     from benchmarks import (data_bench, fig3_comm, kernel_bench,
                             retrieval_bench, roofline_table, scaling_model,
-                            step_bench, table3_inner_lr, table4_temperature,
-                            table5_optimizer)
+                            serve_bench, step_bench, table3_inner_lr,
+                            table4_temperature, table5_optimizer)
     benches = [
         ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
         ("table4_temperature", lambda: table4_temperature.run(steps=steps)),
@@ -47,6 +51,7 @@ def main() -> None:
         ("retrieval_bench", retrieval_bench.run),
         ("data_bench", lambda: data_bench.run(steps=8 if args.quick
                                               else 32)),
+        ("serve_bench", lambda: serve_bench.run(quick=args.quick)),
         ("roofline_table", roofline_table.run),
     ]
     print("name,us_per_call,derived")

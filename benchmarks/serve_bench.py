@@ -1,0 +1,156 @@
+"""Serving-engine offered-load sweep (PR 8): latency / shed / cache.
+
+Drives the ``repro.serve`` engine (planted image tower, CPU-friendly)
+with an open-loop Poisson-ish arrival process at multiples of its
+measured capacity and reports, per offered load:
+
+  * p50 / p99 completed-request latency (ms),
+  * shed rate (typed rejections / offered) and its split
+    (OVERLOADED at admission vs DEADLINE),
+  * cache hit rate (the payload pool is smaller than the request
+    count, so steady-state traffic exercises the content-hash cache).
+
+The shape to expect: below capacity the queue stays short and p99
+tracks the micro-batch time; past capacity the bounded queue converts
+the excess into admission-time shed instead of unbounded latency —
+goodput (completed/s) holds instead of collapsing, which is the whole
+point of admission control.
+
+Emits ``BENCH_serve.json`` and the harness CSV rows.
+
+Run: PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _warm(srv, pays):
+    """Compile every bucket shape before timing anything (direct calls
+    into the engine's jitted compute — deterministic, unlike hoping a
+    burst forms full batches)."""
+    params, _step = srv.store.snapshot()
+    for n in srv.compute.buckets:
+        srv.compute(params, [pays[i % len(pays)] for i in range(n)])
+
+
+def _measure_capacity(srv, make_unique, warm=8):
+    """Requests/s the batcher sustains on full batches of *uncached*
+    payloads (solo run) — the compute-path capacity."""
+    t0 = time.perf_counter()
+    futs = [srv.submit(make_unique()) for _ in range(warm * 8)]
+    for f in futs:
+        f.result(timeout=60.0)
+    dt = time.perf_counter() - t0
+    return warm * 8 / dt
+
+
+def run(duration: float = 2.0, quick: bool = False):
+    from repro.data import ZeroShotEvalDataset
+    from repro.eval import planted as PL
+    from repro.serve import (EmbedServer, ServeConfig, ServeRejection)
+
+    if quick:
+        duration = 0.5
+    ds = ZeroShotEvalDataset(n_classes=8, n_per_class=2, seed=0)
+    params = PL.planted_params(ds)
+
+    def encode(params, batch):
+        return PL.encode_image(params, batch["images"])
+
+    # hot set: distinct-class images (in-class images are bitwise
+    # equal) — repeated requests for these exercise the cache.  Unique
+    # payloads (a fresh scale per request -> fresh content hash) force
+    # the compute path; real traffic is a mix of both.
+    hot = [{"images": np.asarray(ds.images(np.array([c * 2])))[0]}
+           for c in range(ds.n_classes)]
+    counter = [0]
+
+    def make_unique():
+        counter[0] += 1
+        base = hot[counter[0] % len(hot)]["images"]
+        return {"images": base * np.float32(1.0 + 1e-4 * counter[0])}
+
+    cal = EmbedServer(encode, params, 0, ServeConfig(max_batch=8, seed=0))
+    _warm(cal, hot)
+    capacity = _measure_capacity(cal, make_unique)
+    cal.close()
+
+    rows, results = [], []
+    for mult in (0.5, 1.0, 2.0):
+        srv = EmbedServer(encode, params, 0, ServeConfig(
+            max_batch=8, queue_capacity=32, seed=0))
+        _warm(srv, hot)                     # compile all buckets first
+        rate = capacity * mult
+        deadline = 0.25
+        interval = 1.0 / rate
+        offered = completed = 0
+        shed = {"OVERLOADED": 0, "DEADLINE": 0, "UNAVAILABLE": 0}
+        lat, futs = [], []
+        t_end = time.perf_counter() + duration
+        next_t = time.perf_counter()
+        rng = np.random.default_rng(0)
+        while time.perf_counter() < t_end:
+            now = time.perf_counter()
+            if now < next_t:
+                time.sleep(next_t - now)
+            next_t += interval
+            offered += 1
+            # 25% hot traffic (cache-eligible), 75% unique (compute)
+            pay = (hot[int(rng.integers(len(hot)))]
+                   if rng.random() < 0.25 else make_unique())
+            try:
+                futs.append(srv.submit(pay, deadline=deadline))
+            except ServeRejection as e:
+                shed[e.code] += 1
+        t_drain0 = time.perf_counter()
+        for f in futs:
+            try:
+                r = f.result(timeout=60.0)
+                completed += 1
+                lat.append(r.latency)
+            except ServeRejection as e:
+                shed[e.code] += 1
+        drain = time.perf_counter() - t_drain0
+        st = srv.snapshot_stats()
+        srv.close()
+        p50 = float(np.percentile(lat, 50)) * 1e3 if lat else 0.0
+        p99 = float(np.percentile(lat, 99)) * 1e3 if lat else 0.0
+        n_shed = sum(shed.values())
+        hit_rate = (st["cache_hits"]
+                    / max(1, st["cache_hits"] + st["cache_misses"]))
+        row = {"offered_x_capacity": mult, "offered_rate_rps": rate,
+               "offered": offered, "completed": completed,
+               "p50_ms": round(p50, 3), "p99_ms": round(p99, 3),
+               "shed_rate": round(n_shed / max(1, offered), 4),
+               "shed": shed, "cache_hit_rate": round(hit_rate, 4),
+               "goodput_rps": round(completed / duration, 1),
+               "drain_s": round(drain, 3)}
+        results.append(row)
+        rows.append((f"serve_load_{mult}x",
+                     p99 * 1e3,   # us_per_call column = p99 in us
+                     f"p50={p50:.1f}ms shed={row['shed_rate']:.0%} "
+                     f"hit={hit_rate:.0%} goodput={row['goodput_rps']}rps"))
+    doc = {"bench": "serve_bench", "capacity_rps": round(capacity, 1),
+           "duration_s": duration, "deadline_ms": 250,
+           "max_batch": 8, "queue_capacity": 32, "rows": results}
+    with open("BENCH_serve.json", "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--duration", type=float, default=2.0)
+    args = ap.parse_args()
+    for name, us, derived in run(duration=args.duration, quick=args.quick):
+        print(f"{name},{us:.1f},{derived}")
+    print("wrote BENCH_serve.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,5 @@
 from repro.checkpoint.checkpoint import (  # noqa: F401
     AsyncCheckpointer, available_steps, latest_step, prune_checkpoints,
-    restore, restore_subtree, save, save_sharded, set_fault_hook,
-    verify_step,
+    read_metadata, restore, restore_subtree, save, save_sharded,
+    set_fault_hook, verify_step,
 )

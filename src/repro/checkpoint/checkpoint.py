@@ -375,6 +375,19 @@ def _is_complete(directory: str, step: int) -> bool:
     return os.path.exists(os.path.join(directory, f"ckpt_{step:08d}.npz"))
 
 
+def read_metadata(directory: str, step: int) -> Dict:
+    """The user metadata dict recorded in one step's sidecar, without
+    reading any array bytes.  The serving hot-reload watcher uses this
+    to sanity-check ``arch``/``version`` against the running server
+    before paying for the digest-verified restore; raises
+    ``FileNotFoundError`` when the sidecar is absent or unparseable."""
+    meta = _read_meta(directory, step)
+    if meta is None:
+        raise FileNotFoundError(
+            f"no readable sidecar for step {step} in {directory}")
+    return dict(meta.get("metadata", {}))
+
+
 def verify_step(directory: str, step: int) -> bool:
     """Deep integrity check: the sidecar parses, every array file opens,
     every recorded leaf is readable, and (when the sidecar carries

@@ -88,6 +88,27 @@ def make_extract_fn(encode_pair_fn: Callable, *, param_shardings=None):
                    out_shardings=rep)
 
 
+def make_serve_encode_fn(encode_fn: Callable):
+    """jit-once single-tower encode for the online serving engine
+    (``repro.serve``): encode + f32 L2 normalization + an **in-jit
+    all-finite flag** over the normalized embeddings, with params as an
+    argument — the same jit-once/params-as-argument pattern as
+    ``make_extract_fn``, so hot-reloaded params never recompile and the
+    engine's bounded pad-to-bucket batch shapes keep the jit cache
+    bounded.  The flag (``resilience.guard.all_finite``) is what turns a
+    NaN batch into a typed retryable error on the host instead of a
+    silently wrong embedding.
+
+    encode_fn: (params, batch) -> (b, E) unnormalized.  Returns a jitted
+    (params, batch) -> (e_normalized, ok_scalar)."""
+    from repro.resilience import guard
+
+    def fwd(params, batch):
+        e = LS.l2_normalize(encode_fn(params, batch))
+        return e, guard.all_finite(e)
+    return jax.jit(fwd)
+
+
 def replicated_like(param_shardings):
     """The replicated NamedSharding on the mesh a sharding tree lives on
     (shared by the extraction and text-encoder jits)."""

@@ -1,5 +1,14 @@
-"""Serving launcher: batched autoregressive decode with KV cache / SSM
-state for any assigned architecture.
+"""Decode-demo launcher: batched *autoregressive generation* with KV
+cache / SSM state for the generative architectures (qwen/vlm/audio
+families).  This is a throughput demo of ``backbones.decode_step``, not
+an online service: it generates a fixed number of tokens from random
+prompts and exits.
+
+Not to be confused with ``repro.launch.serve_embed``, the *online
+embedding serving* launcher — that one runs the ``repro.serve`` engine
+(admission control, continuous micro-batching, circuit breaker, cache,
+hot checkpoint reload) over the CLIP towers and answers requests until
+told to stop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --batch 4 --prompt-len 16 --gen 32

@@ -2,6 +2,6 @@ from repro.resilience.chaos import (  # noqa: F401
     ChaosInjector, flip_byte, parse_chaos, truncate_file,
 )
 from repro.resilience.guard import (  # noqa: F401
-    SpikeDetector, grad_nonfinite_rate, select_state, step_ok,
+    SpikeDetector, all_finite, grad_nonfinite_rate, select_state, step_ok,
 )
 from repro.resilience.watchdog import Heartbeat, StepWatchdog  # noqa: F401

@@ -37,6 +37,28 @@ afresh from its own ``--chaos`` flag):
                        ``sidecar`` (same for the json), ``latest``
                        (marker updated), ``done``.
 
+Serving faults (the ``repro.serve`` engine's chaos battery; K counts
+the engine's computed micro-batches / cache insertions / reload
+attempts, 1-based):
+
+    compute_nan@K      NaN-poison the input of the K-th computed
+                       micro-batch (first attempt only — a retry
+                       recomputes clean), so the in-jit finiteness
+                       check must turn it into a typed retryable error,
+                       never a silently wrong embedding
+    slow_batch@K:MS    sleep MS milliseconds before computing micro-
+                       batch K (a transient compute stall: deadline-
+                       aware admission must shed what can no longer be
+                       served in time; completed responses stay exact)
+    cache_corrupt@K    flip a byte of the K-th embedding-cache
+                       insertion's stored payload after its digest is
+                       recorded — a later read must detect the mismatch
+                       and fall through to recompute
+    reload_bad_ckpt@K  flip a byte of the candidate checkpoint's npz on
+                       the K-th hot-reload attempt, before the digest-
+                       verified restore — the watcher must reject the
+                       swap and keep serving the old params
+
 Everything is deterministic in (spec, seed, step/occurrence): the same
 spec kills the same run at the same byte, which is what lets the battery
 compare a killed-and-resumed run bit-for-bit against an uninterrupted
@@ -53,8 +75,10 @@ from typing import Dict, Optional
 import numpy as np
 
 _FAULT_RE = re.compile(
-    r"^(nan_batch|loader_raise|decode_raise|kill|sigterm)@(\d+)$")
+    r"^(nan_batch|loader_raise|decode_raise|kill|sigterm"
+    r"|compute_nan|cache_corrupt|reload_bad_ckpt)@(\d+)$")
 _KILL_SAVE_RE = re.compile(r"^kill_save@([a-z_]+)(?::(\d+))?$")
+_SLOW_BATCH_RE = re.compile(r"^slow_batch@(\d+):(\d+(?:\.\d+)?)$")
 
 
 def _real_kill():
@@ -77,6 +101,11 @@ class ChaosInjector:
         self._sigterm_steps: Dict[int, bool] = {}
         self._kill_saves: Dict[str, Dict[int, bool]] = {}
         self._event_counts: Dict[str, int] = {}
+        self._compute_nan: Dict[int, bool] = {}
+        self._cache_corrupt: Dict[int, bool] = {}
+        self._reload_bad: Dict[int, bool] = {}
+        self._slow_ms: Dict[int, float] = {}
+        self._slow_fired: Dict[int, bool] = {}
         for part in filter(None, (p.strip() for p in spec.split(","))):
             m = _FAULT_RE.match(part)
             if m:
@@ -84,13 +113,21 @@ class ChaosInjector:
                          "loader_raise": self._raise_steps,
                          "decode_raise": self._decode_steps,
                          "kill": self._kill_steps,
-                         "sigterm": self._sigterm_steps}[m.group(1)]
+                         "sigterm": self._sigterm_steps,
+                         "compute_nan": self._compute_nan,
+                         "cache_corrupt": self._cache_corrupt,
+                         "reload_bad_ckpt": self._reload_bad}[m.group(1)]
                 table[int(m.group(2))] = False
                 continue
             m = _KILL_SAVE_RE.match(part)
             if m:
                 occ = int(m.group(2) or 1)
                 self._kill_saves.setdefault(m.group(1), {})[occ] = False
+                continue
+            m = _SLOW_BATCH_RE.match(part)
+            if m:
+                self._slow_ms[int(m.group(1))] = float(m.group(2))
+                self._slow_fired[int(m.group(1))] = False
                 continue
             raise ValueError(f"unparseable chaos fault {part!r} in "
                              f"{spec!r}")
@@ -147,6 +184,36 @@ class ChaosInjector:
         self._event_counts[event] = n
         if self._fire_once(self._kill_saves.get(event, {}), n):
             self.kill_fn()
+
+    # -- serving injection sites (repro.serve) ------------------------------
+
+    def compute_poison(self, n_batch: int) -> bool:
+        """True when the ``n_batch``-th computed micro-batch's input is
+        due for NaN poisoning (the engine poisons the first attempt only;
+        a retry recomputes clean)."""
+        return self._fire_once(self._compute_nan, n_batch)
+
+    def compute_delay(self, n_batch: int) -> float:
+        """Seconds to stall before computing micro-batch ``n_batch``
+        (0.0 when no ``slow_batch`` fault is due)."""
+        if self._fire_once(self._slow_fired, n_batch):
+            return self._slow_ms[n_batch] / 1000.0
+        return 0.0
+
+    def on_cache_put(self, n_put: int) -> bool:
+        """True when the ``n_put``-th embedding-cache insertion should
+        have a payload byte flipped (after its digest is recorded)."""
+        return self._fire_once(self._cache_corrupt, n_put)
+
+    def on_reload(self, n_attempt: int, directory: str,
+                  step: int) -> None:
+        """Called by the hot-reload watcher before its ``n_attempt``-th
+        restore; flips one mid-file byte of the candidate step's npz
+        when a ``reload_bad_ckpt`` fault is due, so the digest-verified
+        restore must reject it."""
+        if self._fire_once(self._reload_bad, n_attempt):
+            path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+            flip_byte(path, os.path.getsize(path) // 2)
 
 
 def parse_chaos(spec: Optional[str], seed: int = 0,

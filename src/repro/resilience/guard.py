@@ -28,12 +28,25 @@ import jax
 import jax.numpy as jnp
 
 
+def all_finite(tree):
+    """One all-finite predicate over every leaf of a pytree, evaluated
+    in-jit.  This is the shared guard predicate: ``step_ok`` applies it
+    to (loss, grad norm) inside the train step, and the serving engine
+    (``repro.serve``) applies it to the embedding batch inside its
+    jitted compute so a NaN batch surfaces as a typed retryable error on
+    the host — never as a silently wrong embedding."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(leaf)))
+    return ok
+
+
 def step_ok(loss, grad_norm):
     """The guard predicate: True iff the step is numerically usable.
     Both inputs are global quantities (the loss after its cross-device
     reduction, the global-tree gradient norm), so every shard of a
     sharded step computes the identical predicate."""
-    return jnp.logical_and(jnp.isfinite(loss), jnp.isfinite(grad_norm))
+    return all_finite((loss, grad_norm))
 
 
 def select_state(ok, old_state, new_state):

@@ -53,22 +53,42 @@ class Heartbeat:
         if self.last_step is not None:
             self._write(self.last_step)
 
+    @classmethod
+    def is_stale(cls, path: str, timeout: float) -> bool:
+        """Read-side staleness check — the supervisor/readiness half of
+        the heartbeat contract.  True when the file is missing,
+        unreadable, torn/corrupt (unparseable JSON or no numeric
+        ``time``), or its wall-clock timestamp is more than ``timeout``
+        seconds old.  A live writer can only ever produce a complete
+        file (atomic ``os.replace``), so any malformed read means the
+        writer died mid-setup or the file was damaged — both stale."""
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            t = float(data["time"])
+        except (OSError, ValueError, TypeError, KeyError):
+            return True
+        return (time.time() - t) > timeout
+
 
 class StepWatchdog:
     """Daemon thread that fires when ``beat()`` goes quiet.
 
-    The train loop calls ``beat()`` after every completed step; if
-    ``timeout`` seconds pass without one, the watchdog dumps all thread
-    stacks (``faulthandler``) and calls ``on_hang(seconds_stalled)``
-    once per stall (re-arming when beats resume).  It never signals or
-    kills anything — it exists to turn "the job produced no output for
-    an hour" into an actionable traceback."""
+    The owning loop calls ``beat()`` after every completed unit of
+    progress — a train step, a served micro-batch (``label`` names the
+    unit in the dump message) — and if ``timeout`` seconds pass without
+    one, the watchdog dumps all thread stacks (``faulthandler``) and
+    calls ``on_hang(seconds_stalled)`` once per stall (re-arming when
+    beats resume).  It never signals or kills anything — it exists to
+    turn "the job produced no output for an hour" into an actionable
+    traceback."""
 
     def __init__(self, timeout: float, on_hang: Optional[Callable] = None,
-                 poll: float = 1.0):
+                 poll: float = 1.0, label: str = "step"):
         assert timeout > 0
         self.timeout = float(timeout)
         self.on_hang = on_hang
+        self.label = str(label)
         self._poll = float(poll)
         self._last = time.monotonic()
         self._fired = False
@@ -80,13 +100,16 @@ class StepWatchdog:
         self._last = time.monotonic()
         self._fired = False
 
+    def _message(self, stalled: float) -> str:
+        return (f"[watchdog] no {self.label} completed in {stalled:.0f}s; "
+                "dumping thread stacks")
+
     def _run(self):
         while not self._stop.wait(self._poll):
             stalled = time.monotonic() - self._last
             if stalled >= self.timeout and not self._fired:
                 self._fired = True
-                print(f"[watchdog] no step completed in {stalled:.0f}s; "
-                      "dumping thread stacks", file=sys.stderr, flush=True)
+                print(self._message(stalled), file=sys.stderr, flush=True)
                 try:
                     faulthandler.dump_traceback(file=sys.stderr)
                 except Exception:

@@ -1,0 +1,24 @@
+"""Online embedding serving on the eval fast path (PR 8).
+
+Layers (each is a robustness mechanism — see ``engine`` docstring):
+admission control, continuous micro-batching with bounded bucket
+shapes, retry/backoff over an in-jit finiteness guard, a circuit
+breaker, a digest-verified embedding cache as the degraded path, and
+hot checkpoint reload.  Contract: every response is bit-exact or a
+typed rejection — never wrong, never a silent drop.
+"""
+from repro.serve.admission import (  # noqa: F401
+    AdmissionQueue, Future, Request, ServiceTimeEstimator,
+)
+from repro.serve.backoff import RetryPolicy, retry_call  # noqa: F401
+from repro.serve.batcher import (  # noqa: F401
+    BucketCompute, bucket_sizes, pick_bucket, stack_pad,
+)
+from repro.serve.breaker import CircuitBreaker  # noqa: F401
+from repro.serve.cache import EmbeddingCache  # noqa: F401
+from repro.serve.engine import EmbedServer, ServeConfig  # noqa: F401
+from repro.serve.errors import (  # noqa: F401
+    DeadlineExceeded, NonFiniteEmbedding, Overloaded, ServeRejection,
+    ServeResult, Unavailable, content_hash,
+)
+from repro.serve.reload import CheckpointWatcher, ParamsStore  # noqa: F401

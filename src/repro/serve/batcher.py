@@ -1,0 +1,81 @@
+"""Pad-to-bucket micro-batch compute over the jitted encode fn.
+
+Dynamic batch sizes would give the jit cache one entry per distinct
+size; instead every micro-batch is padded up to the smallest
+power-of-two bucket that fits, so a server with ``max_batch=8``
+compiles at most shapes {1, 2, 4, 8} — ever.  Padding repeats row 0 and
+the padded rows are sliced off before results fan back out, the same
+ragged-tail contract as ``eval.extraction`` (verified bitwise: a row's
+embedding is identical whether computed solo or inside a padded
+bucket).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.eval.extraction import make_serve_encode_fn
+from repro.serve.errors import NonFiniteEmbedding
+
+
+def bucket_sizes(max_batch: int) -> List[int]:
+    """Powers of two up to and including max_batch (itself appended if
+    not a power of two) — the full, bounded set of jit shapes."""
+    sizes, b = [], 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return sizes
+
+def pick_bucket(n: int, buckets: List[int]) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"batch of {n} exceeds largest bucket {buckets[-1]}")
+
+
+def stack_pad(payloads: List[Dict], bucket: int) -> Dict:
+    """Stack per-sample payload dicts into one (bucket, ...) batch,
+    padding by repeating sample 0."""
+    keys = payloads[0].keys()
+    out = {}
+    for k in keys:
+        rows = [np.asarray(p[k]) for p in payloads]
+        rows += [rows[0]] * (bucket - len(rows))
+        out[k] = np.stack(rows)
+    return out
+
+
+class BucketCompute:
+    """Callable (params, payloads) -> (embeddings (n, E) f32 host, ok).
+
+    Wraps ``make_serve_encode_fn`` (jit-once, params as argument, in-jit
+    finiteness flag).  ``poison=True`` is the chaos hook: it NaNs one
+    input row *after* stacking, modelling a transient data/compute fault
+    the finiteness guard must catch."""
+
+    def __init__(self, encode_fn: Callable, max_batch: int):
+        self.buckets = bucket_sizes(max_batch)
+        self._jfn = make_serve_encode_fn(encode_fn)
+
+    def __call__(self, params, payloads: List[Dict], *,
+                 poison: bool = False) -> Tuple[np.ndarray, bool]:
+        n = len(payloads)
+        bucket = pick_bucket(n, self.buckets)
+        batch = stack_pad(payloads, bucket)
+        if poison:
+            for k, v in batch.items():
+                if np.issubdtype(v.dtype, np.floating):
+                    v = v.copy()
+                    v[0] = np.nan
+                    batch[k] = v
+                    break
+        dev = {k: jnp.asarray(v) for k, v in batch.items()}
+        e, ok = self._jfn(params, dev)
+        if not bool(ok):
+            raise NonFiniteEmbedding(
+                f"non-finite embeddings in bucket of {bucket}")
+        return np.asarray(e[:n]), True

@@ -1,0 +1,358 @@
+"""Subprocess helper: serving-engine chaos battery.
+Run: python tests/helpers/serve_check.py <name>
+Prints PASS/FAIL lines; exit code 0 on success.
+
+The serving contract under test: **every completed response is bitwise
+equal to the single-batch oracle** (solo forward of the same payload
+under the params step the response claims), and **every non-completed
+request gets a typed rejection** (OVERLOADED / DEADLINE / UNAVAILABLE)
+— never a wrong embedding, never a hang, never a silent drop.
+
+Checks:
+  faults    compute_nan: a NaN-poisoned micro-batch retries into a
+            bit-exact response; with the retry budget at zero, three
+            consecutive failures trip the circuit breaker
+            (closed->open->half-open->closed, probe accounting), cached
+            payloads keep serving bit-exactly while open, uncached ones
+            get typed UNAVAILABLE; cache_corrupt: a flipped byte in a
+            cached payload is detected by digest and recomputed exactly;
+            slow_batch: a stalled batch makes queued deadline'd
+            requests shed with DEADLINE while completed ones stay exact.
+  overload  a burst at far beyond capacity against a bounded queue:
+            excess is shed at admission (OVERLOADED), every admitted
+            request completes bit-exactly with p99 latency under the
+            deadline, goodput stays positive.
+  reload    mid-traffic hot checkpoint swap: every response is bitwise
+            exact under the params step it claims (old or new, never a
+            mix); the cache never serves old-step bytes after the swap;
+            a reload_bad_ckpt-corrupted candidate is rejected by the
+            digest-verified restore with the old params still serving,
+            and a later clean checkpoint swaps normally.
+  sigterm   the serve_embed launcher under SIGTERM mid-load: drains
+            every admitted request, reports dropped=0, exits 0, leaves
+            a fresh heartbeat.
+"""
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import checkpoint as CK  # noqa: E402
+from repro.core import losses as LS  # noqa: E402
+from repro.data import ZeroShotEvalDataset  # noqa: E402
+from repro.eval import planted as PL  # noqa: E402
+from repro.resilience import Heartbeat, parse_chaos  # noqa: E402
+from repro.serve import (  # noqa: E402
+    CheckpointWatcher, DeadlineExceeded, EmbedServer, Overloaded,
+    RetryPolicy, ServeConfig, ServeRejection, Unavailable,
+)
+
+DS = ZeroShotEvalDataset(n_classes=4, n_per_class=2, seed=0)
+PARAMS0 = PL.planted_params(DS)
+
+
+def encode(params, batch):
+    return PL.encode_image(params, batch["images"])
+
+
+def payload(i):
+    # stride by n_per_class: planted images are identical within a
+    # class, and distinct payloads must have distinct content hashes
+    idx = (i * DS.n_per_class) % DS.n
+    return {"images": np.asarray(DS.images(np.array([idx])))[0]}
+
+
+def oracle(params, pay):
+    """Single-batch reference: solo forward + f32 L2 norm — the bytes
+    every completed response must reproduce exactly."""
+    e = LS.l2_normalize(encode(params, {
+        k: jnp.asarray(v[None]) for k, v in pay.items()}))
+    return np.asarray(e)[0]
+
+
+def check_faults():
+    ok = True
+
+    # --- compute_nan retries into a bit-exact answer -----------------
+    srv = EmbedServer(encode, PARAMS0, 0, ServeConfig(
+        max_batch=4, retry=RetryPolicy(base=0.001, cap=0.004), seed=0),
+        chaos=parse_chaos("compute_nan@1"))
+    r = srv.request(payload(0))
+    exact = r.embedding.tobytes() == oracle(PARAMS0, payload(0)).tobytes()
+    print(f"compute_nan@1: attempts={r.attempts} (want 2) "
+          f"bit-exact={exact}")
+    ok &= r.attempts == 2 and exact and r.path == "compute"
+    srv.close()
+
+    # --- zero retry budget: 3 failures trip the breaker --------------
+    srv = EmbedServer(encode, PARAMS0, 0, ServeConfig(
+        max_batch=1, retry=RetryPolicy(max_retries=0),
+        breaker_failures=3, breaker_reset=0.2, seed=0),
+        chaos=parse_chaos("compute_nan@2,compute_nan@3,compute_nan@4"))
+    a, b, c = payload(0), payload(1), payload(2)
+    srv.request(a)                       # batch 1 clean: A now cached
+    codes = []
+    for _ in range(3):                   # batches 2..4 all poisoned
+        try:
+            srv.request(b)
+            codes.append("completed")
+        except ServeRejection as e:
+            codes.append(e.code)
+    state_open = srv.breaker.state == "open"
+    # open: uncached fails fast, cached still serves bit-exactly
+    try:
+        srv.request(c)
+        fast = None
+    except ServeRejection as e:
+        fast = e.code
+    ra = srv.request(a)
+    cache_exact = (ra.path == "cache" and
+                   ra.embedding.tobytes() == oracle(PARAMS0, a).tobytes())
+    time.sleep(0.25)                     # reset_timeout elapses
+    rc = srv.request(c)                  # half-open probe succeeds
+    probe_exact = (rc.path == "compute" and
+                   rc.embedding.tobytes() == oracle(PARAMS0, c).tobytes())
+    tr = srv.breaker.transitions
+    print(f"failures={codes} (want 3x UNAVAILABLE) open={state_open} "
+          f"fail-fast={fast} cache-while-open-exact={cache_exact} "
+          f"probe-recovers-exact={probe_exact} transitions={tr}")
+    ok &= codes == ["UNAVAILABLE"] * 3 and state_open
+    ok &= fast == "UNAVAILABLE" and cache_exact and probe_exact
+    ok &= (srv.breaker.state == "closed" and tr["opened"] == 1
+           and tr["half_opened"] == 1 and tr["closed"] == 1)
+    srv.close()
+
+    # --- cache_corrupt: detected by digest, recomputed exactly -------
+    srv = EmbedServer(encode, PARAMS0, 0, ServeConfig(max_batch=4, seed=0),
+                      chaos=parse_chaos("cache_corrupt@1"))
+    r1 = srv.request(payload(0))         # put 1: corrupted after digest
+    r2 = srv.request(payload(0))         # hit -> mismatch -> recompute
+    want = oracle(PARAMS0, payload(0)).tobytes()
+    st = srv.snapshot_stats()
+    exact = (r1.embedding.tobytes() == want
+             and r2.embedding.tobytes() == want)
+    print(f"cache_corrupt@1: both-exact={exact} "
+          f"path2={r2.path} (want compute) corrupt-detected="
+          f"{st['cache_corrupt']} (want 1)")
+    ok &= exact and r2.path == "compute" and st["cache_corrupt"] == 1
+    srv.close()
+
+    # --- slow_batch: queued deadline'd requests shed, the rest exact -
+    srv = EmbedServer(encode, PARAMS0, 0, ServeConfig(
+        max_batch=1, estimator_prior=0.01, seed=0),
+        chaos=parse_chaos("slow_batch@2:300"))
+    srv.request(payload(0))              # batch 1: warm jit + estimator
+    fut_a = srv.submit(payload(1))       # batch 2: stalled 300 ms
+    time.sleep(0.02)                     # let the batcher pick up A
+    shed, futs = [], []
+    for _ in range(3):                   # shed at admission or batcher
+        try:
+            futs.append(srv.submit(payload(2), deadline=0.1))
+        except ServeRejection as e:
+            shed.append(e.code)
+    res_a = fut_a.result(timeout=10.0)
+    a_exact = (res_a.embedding.tobytes()
+               == oracle(PARAMS0, payload(1)).tobytes())
+    for f in futs:
+        try:
+            f.result(timeout=10.0)
+            shed.append("completed")
+        except ServeRejection as e:
+            shed.append(e.code)
+    print(f"slow_batch@2:300: stalled-batch-exact={a_exact} "
+          f"queued-deadlines={shed} (want 3x DEADLINE)")
+    ok &= a_exact and shed == ["DEADLINE"] * 3
+    srv.close()
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_overload():
+    ok = True
+    srv = EmbedServer(encode, PARAMS0, 0, ServeConfig(
+        max_batch=4, queue_capacity=8, estimator_prior=0.01, seed=0))
+    real_compute = srv.compute
+
+    def sleepy(params, payloads, *, poison=False):
+        time.sleep(0.005)
+        return real_compute(params, payloads, poison=poison)
+    srv.compute = sleepy
+    srv.request(payload(0))              # warm the jit cache
+    deadline = 0.5
+    futs, rejects = [], {"OVERLOADED": 0, "DEADLINE": 0, "UNAVAILABLE": 0}
+    pays = [payload(i) for i in range(200)]
+    for p in pays:                       # burst far beyond capacity
+        try:
+            futs.append((p, srv.submit(p, deadline=deadline)))
+        except ServeRejection as e:
+            rejects[e.code] += 1
+    lat, exact = [], True
+    completed = late_reject = 0
+    for p, f in futs:
+        try:
+            r = f.result(timeout=30.0)
+            completed += 1
+            lat.append(r.latency)
+            if r.path == "compute":
+                exact &= (r.embedding.tobytes()
+                          == oracle(PARAMS0, p).tobytes())
+        except ServeRejection:
+            late_reject += 1
+    srv.close()
+    p99 = float(np.percentile(lat, 99)) if lat else 0.0
+    terminated = completed + late_reject + sum(rejects.values())
+    print(f"burst of 200 at ~2x capacity: completed={completed} "
+          f"admission-shed={rejects} batcher-shed={late_reject} "
+          f"all-terminated={terminated == 200} "
+          f"all-completed-exact={exact} p99={p99 * 1000:.1f}ms "
+          f"(deadline {deadline * 1000:.0f}ms)")
+    ok &= terminated == 200 and exact and completed > 0
+    ok &= rejects["OVERLOADED"] > 0          # bounded queue pushed back
+    ok &= bool(lat) and p99 < deadline       # admitted p99 under deadline
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_reload():
+    ok = True
+    perm = np.eye(PL.LATENT, dtype=np.float32)[::-1]
+    params1 = dict(PARAMS0, img_proj=jnp.asarray(perm))
+    # normalization erases scale changes, so the "new" params permute
+    # the projection — old and new oracles differ for every payload
+    with tempfile.TemporaryDirectory() as d:
+        CK.save(d, jax.device_get(PARAMS0), 0)
+        like = jax.device_get(PARAMS0)
+        srv = EmbedServer(encode, PARAMS0, 0,
+                          ServeConfig(max_batch=2, seed=0))
+        watcher = CheckpointWatcher(d, like, srv.store, prefix="",
+                                    poll_interval=0.05)
+        oracles = {0: {i: oracle(PARAMS0, payload(i)).tobytes()
+                       for i in range(4)},
+                   1: {i: oracle(params1, payload(i)).tobytes()
+                       for i in range(4)}}
+
+        # mid-traffic swap: a client hammers payloads while the main
+        # thread writes the new checkpoint and triggers the reload
+        results, failures = [], []
+
+        def client():
+            for i in range(150):
+                try:
+                    r = srv.request(payload(i % 4), timeout=10.0)
+                    results.append((i % 4, r.params_step,
+                                    r.embedding.tobytes()))
+                except ServeRejection as e:
+                    failures.append(e.code)
+                if i == 20:
+                    barrier.set()
+                time.sleep(0.002)   # keep traffic spanning the swap
+        barrier = threading.Event()
+        t = threading.Thread(target=client)
+        t.start()
+        barrier.wait(timeout=30.0)
+        CK.save(d, jax.device_get(params1), 1)
+        swapped = watcher.poll_once()
+        t.join(timeout=60.0)
+        consistent = all(by == oracles[step][i]
+                         for i, step, by in results)
+        steps_seen = sorted({s for _, s, _ in results})
+        print(f"mid-traffic swap to step {swapped} (want 1): "
+              f"{len(results)} responses, steps seen {steps_seen}, "
+              f"every response exact under its claimed step: "
+              f"{consistent}, rejections={failures}")
+        ok &= swapped == 1 and consistent and not failures
+        ok &= 1 in steps_seen            # traffic continued post-swap
+        # post-swap: the step-0 cache entries must not leak through
+        r = srv.request(payload(0))
+        fresh = (r.params_step == 1
+                 and r.embedding.tobytes() == oracles[1][0])
+        print(f"post-swap cache isolation: step={r.params_step} "
+              f"new-exact={fresh}")
+        ok &= fresh
+
+        # corrupt candidate: digest-verified restore rejects the swap
+        watcher._fault_hook = parse_chaos("reload_bad_ckpt@2").on_reload
+        CK.save(d, jax.device_get(PARAMS0), 2)   # candidate (will flip)
+        rejected = watcher.poll_once()
+        still = srv.request(payload(1))
+        held = (rejected is None and srv.store.step == 1
+                and still.embedding.tobytes() == oracles[1][1])
+        print(f"reload_bad_ckpt: swap-rejected={rejected is None} "
+              f"rejected-count={watcher.stats['reload_rejected']} "
+              f"old-params-still-serving-exact={held}")
+        ok &= held and watcher.stats["reload_rejected"] == 1
+        ok &= watcher.poll_once() is None        # blacklisted, no retry
+        # a later clean checkpoint still swaps normally
+        CK.save(d, jax.device_get(params1), 3)
+        ok &= watcher.poll_once() == 3 and srv.store.step == 3
+        print(f"clean follow-up checkpoint swaps: step={srv.store.step} "
+              f"(want 3)")
+        srv.close()
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_sigterm():
+    ok = True
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    with tempfile.TemporaryDirectory() as d:
+        proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve_embed",
+             "--planted", "--ckpt-dir", d, "--classes", "4",
+             "--per-class", "2", "--requests", "100000",
+             "--offered-rate", "50", "--deadline-ms", "2000"],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True,
+            env=env)
+        hb = os.path.join(d, "serve_heartbeat.json")
+        # wait until the server is demonstrably serving (heartbeat file)
+        for _ in range(600):
+            if os.path.exists(hb):
+                break
+            time.sleep(0.1)
+        alive_mid = os.path.exists(hb)
+        time.sleep(1.0)
+        proc.send_signal(signal.SIGTERM)
+        out, err = proc.communicate(timeout=120)
+        stats_line = [ln for ln in out.splitlines()
+                      if ln.startswith("SERVE_STATS ")]
+        import json as _json
+        st = _json.loads(stats_line[0][len("SERVE_STATS "):]) \
+            if stats_line else {}
+        fresh = not Heartbeat.is_stale(hb, 3600.0)
+        print(f"sigterm: exit={proc.returncode} (want 0) "
+              f"saw-sigterm={st.get('sigterm')} "
+              f"dropped={st.get('dropped')} (want 0) "
+              f"offered={st.get('client', {}).get('offered')} "
+              f"completed={st.get('client', {}).get('completed')} "
+              f"heartbeat-live={alive_mid} heartbeat-final-fresh={fresh}")
+        if proc.returncode != 0:
+            print(out[-2000:], err[-2000:])
+        ok &= proc.returncode == 0 and st.get("sigterm") is True
+        ok &= st.get("dropped") == 0
+        ok &= st.get("client", {}).get("completed", 0) > 0
+        ok &= alive_mid and fresh
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+CHECKS = {
+    "faults": check_faults,
+    "overload": check_overload,
+    "reload": check_reload,
+    "sigterm": check_sigterm,
+}
+
+if __name__ == "__main__":
+    sys.exit(0 if CHECKS[sys.argv[1]]() else 1)

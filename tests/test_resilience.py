@@ -107,6 +107,35 @@ def test_chaos_spec_parsing():
         parse_chaos("nan_batch@x")
 
 
+def test_chaos_serving_fault_parsing_and_fire_once():
+    inj = parse_chaos(
+        "compute_nan@2,slow_batch@3:250,cache_corrupt@1,reload_bad_ckpt@4")
+    assert not inj.compute_poison(1)
+    assert inj.compute_poison(2)
+    assert not inj.compute_poison(2)       # fire-once per process
+    assert inj.compute_delay(1) == 0.0
+    assert inj.compute_delay(3) == 0.25    # MS -> seconds
+    assert inj.compute_delay(3) == 0.0
+    assert inj.on_cache_put(1) and not inj.on_cache_put(1)
+    assert not inj.on_cache_put(2)
+    with pytest.raises(ValueError):
+        parse_chaos("slow_batch@3")        # needs the :MS suffix
+    with pytest.raises(ValueError):
+        parse_chaos("compute_nan@2:9")     # no suffix allowed here
+
+
+def test_chaos_reload_fault_flips_candidate_npz(tmp_path):
+    d = str(tmp_path)
+    CK.save(d, {"w": np.arange(6, dtype=np.float32)}, 3)
+    inj = parse_chaos("reload_bad_ckpt@2")
+    inj.on_reload(1, d, 3)                 # attempt 1: not due
+    assert CK.verify_step(d, 3)
+    inj.on_reload(2, d, 3)                 # attempt 2: byte flipped
+    assert not CK.verify_step(d, 3)
+    with pytest.raises(Exception):
+        CK.restore(d, {"w": np.zeros(6, np.float32)}, step=3)
+
+
 def test_chaos_nan_batch_fires_once_and_is_seeded():
     batch = {"img": np.ones((8, 4), np.float32),
              "ids": np.zeros((8, 2), np.int32)}
@@ -546,6 +575,42 @@ def test_heartbeat_atomic_writes_and_final_flush(tmp_path):
     with open(p) as f:
         assert json.load(f)["step"] == 5
     assert not os.path.exists(p + f".tmp.{os.getpid()}")
+
+
+def test_heartbeat_is_stale_fresh_stale_missing_corrupt(tmp_path):
+    p = str(tmp_path / "hb.json")
+    assert Heartbeat.is_stale(p, 1e9)              # missing file
+    hb = Heartbeat(p, interval=0.0)
+    hb.beat(1)
+    assert not Heartbeat.is_stale(p, 60.0)         # fresh
+    assert Heartbeat.is_stale(p, -1.0)             # any age exceeds -1
+    with open(p, "w") as f:
+        f.write('{"step": 1, "time"')              # torn/corrupt json
+    assert Heartbeat.is_stale(p, 1e9)
+    with open(p, "w") as f:
+        json.dump({"step": 1, "time": "soon"}, f)  # non-numeric time
+    assert Heartbeat.is_stale(p, 1e9)
+    with open(p, "w") as f:
+        json.dump({"step": 1}, f)                  # missing time
+    assert Heartbeat.is_stale(p, 1e9)
+    old = time.time() - 100.0
+    with open(p, "w") as f:
+        json.dump({"step": 1, "time": old}, f)
+    assert Heartbeat.is_stale(p, 50.0)             # past timeout
+    assert not Heartbeat.is_stale(p, 200.0)        # within timeout
+
+
+def test_watchdog_label_names_the_progress_unit():
+    wd = StepWatchdog(timeout=1e9, label="served batch")
+    try:
+        assert "no served batch completed in 12s" in wd._message(12.3)
+    finally:
+        wd.close()
+    wd2 = StepWatchdog(timeout=1e9)                # default stays "step"
+    try:
+        assert "no step completed in" in wd2._message(5.0)
+    finally:
+        wd2.close()
 
 
 def test_watchdog_fires_on_stall_and_rearms_on_beat():

@@ -1,0 +1,408 @@
+"""Serving engine (PR 8): admission control, micro-batching, retry,
+circuit breaker, cache, hot reload.
+
+The pure-host mechanisms (retry schedule, breaker state machine,
+bounded queue, digest-verified cache, params store) are unit-tested
+with fake clocks — no jax, no sleeps where avoidable.  The end-to-end
+contract ("bit-exact or typed rejection, never wrong, never a hang,
+never a silent drop" under injected compute/cache/reload faults,
+overload, SIGTERM) runs as subprocess batteries in
+``tests/helpers/serve_check.py``.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    AdmissionQueue, CircuitBreaker, DeadlineExceeded, EmbeddingCache,
+    Overloaded, ParamsStore, RetryPolicy, ServiceTimeEstimator, Unavailable,
+    bucket_sizes, content_hash, pick_bucket, retry_call, stack_pad,
+)
+from repro.serve.admission import Future, Request
+from repro.serve.errors import ServeResult
+
+SERVE_HELPER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "helpers", "serve_check.py")
+
+
+# ---------------------------------------------------------------------------
+# Retry policy + backoff schedule
+# ---------------------------------------------------------------------------
+
+def test_retry_schedule_monotone_and_bounded_under_seeded_jitter():
+    pol = RetryPolicy(max_retries=6, base=0.01, factor=2.0, cap=10.0,
+                      jitter=0.5)
+    for seed in range(5):
+        d = list(pol.delays(np.random.default_rng(seed)))
+        assert len(d) == 6
+        # below the cap the jittered schedule is strictly monotone
+        # (guaranteed by factor >= 1 + jitter)
+        assert all(a < b for a, b in zip(d, d[1:]))
+        assert sum(d) <= pol.max_total()
+        # jitter is non-negative: every delay at least the raw backoff
+        assert all(x >= 0.01 * 2.0 ** i for i, x in enumerate(d))
+    # determinism: same seed, same schedule
+    a = list(pol.delays(np.random.default_rng(7)))
+    b = list(pol.delays(np.random.default_rng(7)))
+    assert a == b
+
+
+def test_retry_schedule_caps_per_delay():
+    pol = RetryPolicy(max_retries=8, base=0.01, factor=2.0, cap=0.05,
+                      jitter=0.0)
+    d = list(pol.delays(np.random.default_rng(0)))
+    assert max(d) == 0.05 and d[-1] == 0.05
+    assert pol.max_total() == sum(d)
+
+
+def test_retry_policy_rejects_nonmonotone_config():
+    with pytest.raises(ValueError):
+        RetryPolicy(factor=1.2, jitter=0.5)   # factor < 1 + jitter
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(base=0.1, cap=0.01)
+
+
+class _Flaky:
+    def __init__(self, fail_times, exc=ValueError):
+        self.calls = 0
+        self.fail_times = fail_times
+        self.exc = exc
+
+    def __call__(self, attempt):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise self.exc(f"boom {self.calls}")
+        return "ok"
+
+
+def test_retry_call_recovers_and_reports_attempts():
+    slept = []
+    fn = _Flaky(2)
+    out, attempts = retry_call(fn, RetryPolicy(max_retries=3),
+                               np.random.default_rng(0),
+                               sleep=slept.append, retryable=(ValueError,))
+    assert out == "ok" and attempts == 3 and len(slept) == 2
+    assert slept[0] < slept[1]
+
+
+def test_retry_budget_exhaustion_surfaces_original_error():
+    """After the budget runs out the *first* error is re-raised — the
+    root cause, not the last echo."""
+    fn = _Flaky(99)
+    with pytest.raises(ValueError, match="boom 1"):
+        retry_call(fn, RetryPolicy(max_retries=2),
+                   np.random.default_rng(0), sleep=lambda s: None,
+                   retryable=(ValueError,))
+    assert fn.calls == 3    # 1 attempt + 2 retries
+
+
+def test_retry_call_passes_through_non_retryable():
+    fn = _Flaky(99, exc=KeyError)
+    with pytest.raises(KeyError):
+        retry_call(fn, RetryPolicy(max_retries=5),
+                   np.random.default_rng(0), sleep=lambda s: None,
+                   retryable=(ValueError,))
+    assert fn.calls == 1    # no retries burned on a non-retryable
+
+
+def test_retry_zero_budget_tries_once():
+    fn = _Flaky(1)
+    with pytest.raises(ValueError, match="boom 1"):
+        retry_call(fn, RetryPolicy(max_retries=0),
+                   np.random.default_rng(0), sleep=lambda s: None,
+                   retryable=(ValueError,))
+    assert fn.calls == 1
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine (fake clock)
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_breaker_full_cycle_closed_open_halfopen_closed():
+    clk = _Clock()
+    br = CircuitBreaker(fail_threshold=3, reset_timeout=1.0, probes=1,
+                        clock=clk)
+    assert br.state == "closed" and br.allow() and not br.fail_fast()
+    for _ in range(2):
+        br.record_failure()
+    assert br.state == "closed"           # threshold not reached
+    br.record_failure()                    # 3rd consecutive: trip
+    assert br.state == "open" and not br.allow() and br.fail_fast()
+    clk.t += 0.99
+    assert br.state == "open"
+    clk.t += 0.02                          # reset_timeout elapsed
+    assert br.state == "half_open"
+    assert br.allow()                      # consumes the probe slot
+    assert not br.allow()                  # no second probe
+    br.record_success()                    # probe succeeded
+    assert br.state == "closed"
+    assert br.transitions == {"opened": 1, "half_opened": 1, "closed": 1}
+
+
+def test_breaker_probe_failure_reopens_with_fresh_timer():
+    clk = _Clock()
+    br = CircuitBreaker(fail_threshold=1, reset_timeout=1.0, clock=clk)
+    br.record_failure()
+    clk.t += 1.0
+    assert br.allow()
+    br.record_failure()                    # probe failed: back to open
+    assert br.state == "open"
+    clk.t += 0.5
+    assert br.state == "open"              # timer restarted at re-trip
+    clk.t += 0.6
+    assert br.state == "half_open"
+    assert br.transitions["opened"] == 2
+
+
+def test_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(fail_threshold=2, clock=_Clock())
+    br.record_failure()
+    br.record_success()                    # streak broken
+    br.record_failure()
+    assert br.state == "closed"            # 1 consecutive, not 2
+    br.record_failure()
+    assert br.state == "open"
+
+
+def test_breaker_multi_probe_accounting():
+    clk = _Clock()
+    br = CircuitBreaker(fail_threshold=1, reset_timeout=1.0, probes=2,
+                        clock=clk)
+    br.record_failure()
+    clk.t += 1.0
+    assert br.allow() and not br.fail_fast()   # one slot still free
+    assert br.allow() and br.fail_fast()       # both in flight now
+    assert not br.allow()
+    br.record_success()
+    assert br.state == "half_open"             # needs 2 successes
+    br.record_success()
+    assert br.state == "closed"
+
+
+def test_breaker_fail_fast_never_consumes_probes():
+    clk = _Clock()
+    br = CircuitBreaker(fail_threshold=1, reset_timeout=1.0, probes=1,
+                        clock=clk)
+    br.record_failure()
+    clk.t += 1.0
+    for _ in range(10):
+        assert not br.fail_fast()          # admission checks are free
+    assert br.allow()                      # the batcher still gets its probe
+
+
+# ---------------------------------------------------------------------------
+# Admission queue + estimator
+# ---------------------------------------------------------------------------
+
+def _req(deadline=None):
+    return Request(payload={}, key="k", deadline=deadline, future=Future())
+
+
+def test_admission_bounded_queue_raises_typed_overload():
+    clk = _Clock()
+    q = AdmissionQueue(capacity=2, max_batch=8,
+                       estimator=ServiceTimeEstimator(prior=0.01),
+                       clock=clk)
+    q.offer(_req())
+    q.offer(_req())
+    with pytest.raises(Overloaded):
+        q.offer(_req())
+    assert q.stats["shed_overload"] == 1 and len(q) == 2
+
+
+def test_admission_sheds_infeasible_deadline_from_queue_depth():
+    clk = _Clock()
+    est = ServiceTimeEstimator(prior=1.0)  # 1 s per batch
+    q = AdmissionQueue(capacity=100, max_batch=2, estimator=est, clock=clk)
+    for _ in range(4):                     # 2 full batches ahead
+        q.offer(_req(deadline=clk.t + 100.0))
+    # 3 batches (2 ahead + own) * 1 s > 2.5 s away: infeasible
+    with pytest.raises(DeadlineExceeded):
+        q.offer(_req(deadline=clk.t + 2.5))
+    q.offer(_req(deadline=clk.t + 3.5))    # feasible: admitted
+    assert q.stats["shed_deadline"] == 1 and q.stats["admitted"] == 5
+
+
+def test_admission_closed_queue_rejects_and_drains():
+    q = AdmissionQueue(capacity=8, max_batch=4,
+                       estimator=ServiceTimeEstimator(), clock=_Clock())
+    r1, r2 = _req(), _req()
+    q.offer(r1)
+    q.offer(r2)
+    q.close()
+    with pytest.raises(Unavailable):
+        q.offer(_req())
+    # already-admitted work still drains after close (no silent drop)
+    assert q.pop_batch(4, 0.0) == [r1, r2]
+    assert q.pop_batch(4, 0.0) == []       # closed + empty: terminate
+
+
+def test_pop_batch_respects_max_size_fifo():
+    q = AdmissionQueue(capacity=16, max_batch=4,
+                       estimator=ServiceTimeEstimator(), clock=_Clock())
+    reqs = [_req() for _ in range(6)]
+    for r in reqs:
+        q.offer(r)
+    assert q.pop_batch(4, 0.0) == reqs[:4]
+    assert q.pop_batch(4, 0.0) == reqs[4:]
+
+
+def test_estimator_ema_and_healthy_prior():
+    est = ServiceTimeEstimator(prior=0.02, alpha=0.5)
+    assert est.value == 0.02
+    est.update(0.1)
+    assert abs(est.value - 0.06) < 1e-12
+    est.update(0.1)
+    assert est.value > 0.06
+
+
+def test_future_timeout_and_single_assignment():
+    f = Future()
+    with pytest.raises(TimeoutError):
+        f.result(timeout=0.01)
+    f.resolve(ServeResult(np.zeros(3), "compute", 0))
+    assert f.done and f.result(timeout=0.01).path == "compute"
+    f2 = Future()
+    f2.reject(Unavailable("down"))
+    with pytest.raises(Unavailable):
+        f2.result(timeout=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Embedding cache: LRU bound + digest verification
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip_is_bitwise_and_copies():
+    c = EmbeddingCache(capacity=4)
+    e = np.random.default_rng(0).normal(size=(8,)).astype(np.float32)
+    c.put("a", e)
+    got = c.get("a")
+    assert got.tobytes() == e.tobytes() and got.dtype == e.dtype
+    got[0] = 999.0                          # caller mutation is isolated
+    assert c.get("a").tobytes() == e.tobytes()
+
+
+def test_cache_lru_eviction_order_and_bound():
+    c = EmbeddingCache(capacity=2)
+    c.put("a", np.zeros(2, np.float32))
+    c.put("b", np.ones(2, np.float32))
+    assert c.get("a") is not None           # a is MRU now
+    c.put("c", np.full(2, 2.0, np.float32))
+    assert len(c) == 2
+    assert c.get("b") is None               # LRU evicted
+    assert c.get("a") is not None and c.get("c") is not None
+    assert c.stats["evictions"] == 1
+
+
+def test_cache_detects_corruption_and_evicts():
+    hits = {"n": 0}
+
+    def corrupt_second(n_put):
+        return n_put == 2
+    c = EmbeddingCache(capacity=4, fault_hook=corrupt_second)
+    e = np.arange(6, dtype=np.float32)
+    c.put("a", e)
+    c.put("b", e)                           # payload flipped after digest
+    assert c.get("a").tobytes() == e.tobytes()
+    assert c.get("b") is None               # detected, never returned
+    assert c.stats["corrupt"] == 1
+    assert c.get("b") is None and c.stats["corrupt"] == 1  # evicted
+    del hits
+
+
+def test_content_hash_sensitivity():
+    a = {"x": np.arange(4, dtype=np.float32)}
+    assert content_hash(a) == content_hash(
+        {"x": np.arange(4, dtype=np.float32)})
+    assert content_hash(a) != content_hash(
+        {"x": np.arange(4, dtype=np.float64)})      # dtype matters
+    assert content_hash(a) != content_hash(
+        {"x": np.arange(4, dtype=np.float32).reshape(2, 2)})  # shape
+    b = {"x": np.arange(4, dtype=np.float32)}
+    b["x"][0] += 1
+    assert content_hash(a) != content_hash(b)       # bytes
+    assert content_hash({"x": a["x"], "y": a["x"]}) != content_hash(a)
+
+
+# ---------------------------------------------------------------------------
+# Buckets + params store
+# ---------------------------------------------------------------------------
+
+def test_bucket_sizes_bounded_and_covering():
+    assert bucket_sizes(8) == [1, 2, 4, 8]
+    assert bucket_sizes(6) == [1, 2, 4, 6]
+    assert bucket_sizes(1) == [1]
+    assert pick_bucket(3, [1, 2, 4, 8]) == 4
+    assert pick_bucket(8, [1, 2, 4, 8]) == 8
+    with pytest.raises(ValueError):
+        pick_bucket(9, [1, 2, 4, 8])
+
+
+def test_stack_pad_repeats_row_zero():
+    pays = [{"x": np.full((3,), i, np.float32)} for i in range(3)]
+    out = stack_pad(pays, 4)
+    assert out["x"].shape == (4, 3)
+    assert np.array_equal(out["x"][3], out["x"][0])
+
+
+def test_params_store_snapshot_consistency():
+    st = ParamsStore({"w": np.zeros(2)}, 0)
+    p, s = st.snapshot()
+    assert s == 0
+    st.swap({"w": np.ones(2)}, 5)
+    p2, s2 = st.snapshot()
+    assert s2 == 5 and np.array_equal(p2["w"], np.ones(2))
+    assert np.array_equal(p["w"], np.zeros(2))   # old snapshot intact
+
+
+# ---------------------------------------------------------------------------
+# End-to-end batteries (subprocess, real engine + planted tower)
+# ---------------------------------------------------------------------------
+
+def _run_serve(check):
+    p = subprocess.run([sys.executable, SERVE_HELPER, check],
+                       capture_output=True, text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
+    return p.stdout
+
+
+def test_serve_chaos_faults_bit_exact_or_typed():
+    """compute_nan retries to bit-exactness; zero-budget failures trip
+    the breaker through its full cycle with the cache serving bit-exact
+    results while open; cache corruption is detected and recomputed;
+    a stalled batch sheds queued deadline'd requests with DEADLINE."""
+    _run_serve("faults")
+
+
+def test_serve_overload_sheds_at_admission_and_keeps_goodput():
+    """A 200-request burst at ~2x capacity against a bounded queue:
+    excess is OVERLOADED at admission, every admitted request completes
+    bit-exactly with p99 under the deadline."""
+    _run_serve("overload")
+
+
+def test_serve_hot_reload_old_or_new_exact_never_mixed():
+    """Mid-traffic checkpoint swap: every response bitwise-exact under
+    the params step it claims; corrupt candidates rejected with the old
+    params still serving."""
+    _run_serve("reload")
+
+
+def test_serve_sigterm_drains_with_zero_drops():
+    """SIGTERM mid-load against the serve_embed launcher: exit 0,
+    dropped=0, fresh final heartbeat."""
+    _run_serve("sigterm")
