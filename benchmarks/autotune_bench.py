@@ -1,0 +1,256 @@
+"""Kernel autotune sweep: candidate tile/chunk configs for the Pallas
+kernels, parity-gated, timed, persisted to the tuning table the kernels
+consult at call time (``repro.kernels.autotune``).
+
+Sweeps:
+    gcl_stats / gcl_grads : (br, bc, d_block) over the loss-engine shapes
+    flash_mha             : (q_chunk, kv_chunk) — the chunked-forward /
+                            remat-backward block sizes (the Pallas forward
+                            itself is fixed at BQ/BK)
+
+Every candidate must pass BOTH parity gates against the dense oracle
+(``repro.kernels.ref`` / ``naive_attention``) before it may be timed or
+recorded:
+
+    bitwise  on the planted exact-arithmetic case (see
+             autotune.planted_gcl_case / planted_attention_case — equality
+             is a theorem there, so any mismatch is a real
+             indexing/masking bug in that config), and
+    1e-5 max-abs on a random-input case (rounding-order differences only).
+
+Off-TPU the kernels run in Pallas interpret mode: the sweep is then a
+correctness/compile surface and the timings are NOT TPU-predictive — the
+table entries are keyed by backend (``cpu-interpret`` vs ``tpu``), so a
+CPU-tuned table never influences TPU runs.  On a real TPU the same sweep
+times compiled kernels and the recorded winners are meaningful.
+
+A parity failure makes ``main`` exit nonzero (CI gate); via ``run()`` the
+failing candidate becomes an ERROR row and is excluded from the table.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.autotune_bench [--quick]
+        [--table-out PATH] [--no-write]
+
+``--table-out`` defaults to the checked-in location
+``src/repro/kernels/tuning_table.json``; ``--quick`` shrinks shapes and
+candidate sets for the CI smoke job (parity still fully enforced).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+from repro.kernels.flash_attention import flash_mha
+from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
+from repro.kernels.ops import default_interpret
+from repro.kernels.ref import gcl_pair_grads_ref, gcl_pair_stats_ref
+from repro.models.attention import naive_attention
+
+RANDOM_TOL = 1e-5
+
+# (br, bc, d_block); d_block None = unblocked (whole d in VMEM)
+GCL_CANDIDATES = [(128, 128, None), (128, 256, None), (256, 128, None),
+                  (256, 256, None), (128, 128, 256)]
+GCL_CANDIDATES_QUICK = [(128, 128, None), (128, 256, None)]
+GCL_SHAPES = [(256, 512), (512, 512)]          # (b, d); square case
+GCL_SHAPES_QUICK = [(256, 384)]
+
+# (q_chunk, kv_chunk)
+MHA_CANDIDATES = [(256, 512), (512, 1024), (512, 512), (1024, 1024)]
+MHA_CANDIDATES_QUICK = [(128, 256), (256, 256)]
+MHA_SHAPES = [(2, 512, 4, 64)]                 # (batch, seq, heads, hd)
+MHA_SHAPES_QUICK = [(2, 256, 2, 64)]
+
+
+def _time(f, *args, iters=3):
+    jax.block_until_ready(f(*args))            # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(f(*args))
+    return 1e6 * (time.perf_counter() - t0) / iters
+
+
+def _bitwise(xs, ys):
+    return all(bool(jnp.all(a == b)) for a, b in zip(xs, ys))
+
+
+def _max_abs(xs, ys):
+    return max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(xs, ys))
+
+
+def _rand_gcl(b, d, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    e1 = jax.random.normal(ks[0], (b, d))
+    e2 = jax.random.normal(ks[1], (b, d))
+    e1 = e1 / jnp.linalg.norm(e1, axis=-1, keepdims=True)
+    e2 = e2 / jnp.linalg.norm(e2, axis=-1, keepdims=True)
+    lwt = -jnp.abs(jax.random.normal(ks[2], (b,)))
+    tau = jax.random.uniform(ks[3], (b,)) * 0.05 + 0.03
+    return e1, e2, lwt, tau
+
+
+def sweep_gcl(shapes, candidates, table, seed=0):
+    """Parity-gate then time each (br, bc, d_block) for both gcl kernels;
+    record the fastest passing config per (kernel, shape, dtype, backend).
+    Returns (rows, ok)."""
+    interp = default_interpret()
+    backend = autotune.backend_key(interp)
+    rows, ok = [], True
+    for b, d in shapes:
+        pe1, pe2, plwt, ptau = autotune.planted_gcl_case(b, d, seed)
+        re1, re2, rlwt, rtau = _rand_gcl(b, d, seed)
+        # the kernel takes lwt = log w - log tau; the ref oracle takes
+        # log w and subtracts log tau itself — convert at the boundary
+        plw = plwt + jnp.log(ptau)
+        rlw = rlwt + jnp.log(rtau)
+        oracle_s_p = gcl_pair_stats_ref(pe1, pe2, ptau, ptau)
+        oracle_s_r = gcl_pair_stats_ref(re1, re2, rtau, rtau)
+        oracle_g_p = gcl_pair_grads_ref(pe1, pe2, plw, plw, ptau, ptau)
+        oracle_g_r = gcl_pair_grads_ref(re1, re2, rlw, rlw, rtau, rtau)
+        best = {"gcl_stats": (None, float("inf")),
+                "gcl_grads": (None, float("inf"))}
+        for br, bc, dbk in candidates:
+            tag = f"br={br},bc={bc},d_block={dbk}"
+            kw = dict(interpret=interp, br=br, bc=bc, d_block=dbk)
+            stats = jax.jit(lambda a, b2, t: tuple(
+                gcl_pair_stats(a, b2, t, t, **kw)))
+            grads = jax.jit(lambda a, b2, lw, t: tuple(
+                gcl_pair_grads(a, b2, lw, lw, t, t, **kw)))
+            for kern, fn, planted, p_orc, rand, r_orc in (
+                    ("gcl_stats", stats, (pe1, pe2, ptau), oracle_s_p,
+                     (re1, re2, rtau), oracle_s_r),
+                    ("gcl_grads", grads, (pe1, pe2, plwt, ptau), oracle_g_p,
+                     (re1, re2, rlwt, rtau), oracle_g_r)):
+                name = f"autotune/{kern}/b={b}/d={d}/{tag}"
+                if not _bitwise(fn(*planted), p_orc):
+                    rows.append((name, 0.0, "ERROR:planted-bitwise-parity"))
+                    ok = False
+                    continue
+                err = _max_abs(fn(*rand), r_orc)
+                if err > RANDOM_TOL:
+                    rows.append((name, 0.0,
+                                 f"ERROR:random-parity:{err:.2e}"))
+                    ok = False
+                    continue
+                us = _time(fn, *rand)
+                rows.append((name, us, f"parity=bitwise+{err:.1e};"
+                             f"backend={backend}"))
+                if us < best[kern][1]:
+                    best[kern] = ((br, bc, dbk), us)
+        for kern, (cfg, us) in best.items():
+            if cfg is None:
+                continue
+            br, bc, dbk = cfg
+            table.record(kern, autotune.shape_bucket(b=b, cols=b, d=d),
+                         jnp.float32, backend,
+                         {"br": br, "bc": bc, "d_block": dbk}, us=us)
+    return rows, ok
+
+
+def sweep_mha(shapes, candidates, table, seed=0):
+    """Parity-gate then time each (q_chunk, kv_chunk) for flash_mha.
+    Parity covers forward AND grads (the chunks drive the remat backward);
+    oracle = naive O(S^2) attention.  Returns (rows, ok)."""
+    interp = default_interpret()
+    backend = autotune.backend_key(interp)
+    rows, ok = [], True
+    for batch, seq, heads, hd in shapes:
+        q, k, v, ct = autotune.planted_attention_case(batch, seq, heads,
+                                                      hd, seed)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        rq, rk, rv = (jax.random.normal(ks[i], (batch, seq, heads, hd))
+                      / jnp.sqrt(hd) for i in range(3))
+        rct = jax.random.normal(ks[3], (batch, seq, heads, hd))
+
+        def fwd_bwd(f, args, cot):
+            out, vjp = jax.vjp(f, *args)
+            return (out,) + vjp(cot)
+
+        orc_p = fwd_bwd(lambda a, b2, c: naive_attention(
+            a, b2, c, causal=False), (q, k, v), ct)
+        orc_r = fwd_bwd(lambda a, b2, c: naive_attention(
+            a, b2, c, causal=True), (rq, rk, rv), rct)
+        best = (None, float("inf"))
+        for qc, kvc in candidates:
+            name = f"autotune/flash_mha/S={seq}/hd={hd}/qc={qc}/kvc={kvc}"
+            fp = jax.jit(lambda a, b2, c: fwd_bwd(
+                lambda x, y, z: flash_mha(x, y, z, causal=False,
+                                          interpret=interp, q_chunk=qc,
+                                          kv_chunk=kvc), (a, b2, c), ct))
+            fr = jax.jit(lambda a, b2, c: fwd_bwd(
+                lambda x, y, z: flash_mha(x, y, z, causal=True,
+                                          interpret=interp, q_chunk=qc,
+                                          kv_chunk=kvc), (a, b2, c), rct))
+            if not _bitwise(fp(q, k, v), orc_p):
+                rows.append((name, 0.0, "ERROR:planted-bitwise-parity"))
+                ok = False
+                continue
+            err = _max_abs(fr(rq, rk, rv), orc_r)
+            if err > RANDOM_TOL:
+                rows.append((name, 0.0, f"ERROR:random-parity:{err:.2e}"))
+                ok = False
+                continue
+            us = _time(fr, rq, rk, rv)
+            rows.append((name, us, f"parity=bitwise+{err:.1e};"
+                         f"backend={backend}"))
+            if us < best[1]:
+                best = ((qc, kvc), us)
+        if best[0] is not None:
+            qc, kvc = best[0]
+            table.record("flash_mha",
+                         autotune.shape_bucket(sq=seq, sk=seq, hd=hd),
+                         jnp.float32, backend,
+                         {"q_chunk": qc, "kv_chunk": kvc}, us=best[1])
+    return rows, ok
+
+
+def run(steps=None, seed=0, quick=True, table_out=None, write=False):
+    """Bench-harness entry point: sweep, return rows.  ``write=False`` by
+    default so ``benchmarks.run`` never dirties the checked-in table; use
+    ``main`` (or write=True) to persist."""
+    table = autotune.TuningTable()
+    r1, ok1 = sweep_gcl(GCL_SHAPES_QUICK if quick else GCL_SHAPES,
+                        GCL_CANDIDATES_QUICK if quick else GCL_CANDIDATES,
+                        table, seed)
+    r2, ok2 = sweep_mha(MHA_SHAPES_QUICK if quick else MHA_SHAPES,
+                        MHA_CANDIDATES_QUICK if quick else MHA_CANDIDATES,
+                        table, seed)
+    rows = r1 + r2
+    if write:
+        path = table.save(table_out)
+        autotune.reset_cache()
+        rows.append(("autotune/table", 0.0,
+                     f"entries={len(table.entries)};path={path}"))
+    rows.append(("autotune/parity", 0.0,
+                 "OK" if (ok1 and ok2) else "ERROR:parity-failures"))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes/candidate sets (CI smoke)")
+    ap.add_argument("--table-out", default=None,
+                    help="tuning-table path (default: the checked-in "
+                         "src/repro/kernels/tuning_table.json)")
+    ap.add_argument("--no-write", action="store_true",
+                    help="sweep + parity only; do not persist the table")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows = run(seed=args.seed, quick=args.quick,
+               table_out=args.table_out, write=not args.no_write)
+    failed = False
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+        failed |= "ERROR" in str(derived)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,7 +55,7 @@ _SCRIPT = textwrap.dedent("""
     out = {}
     for red in ("fastclip", "allgather_ad"):
         comp = jax.jit(make(red)).lower(*args).compile()
-        cs = collective_stats(comp.as_text())
+        cs = collective_stats(comp.as_text(), default_group=K)
         out[red] = {"bytes": cs.total_bytes, "counts": cs.counts}
     print(json.dumps(out))
 """)

@@ -1,5 +1,13 @@
 """Deliverable (g): the roofline table from the dry-run JSONs
-(experiments/dryrun/*.json).  One row per (arch x shape), single-pod.
+(``experiments/dryrun/*.json``, written by ``experiments/run_dryruns.py``).
+One row per dry-run artifact — every arch (including the paper's own CLIP
+towers under the contrastive objective), every mesh that was swept.
+
+A missing or empty ``experiments/dryrun/`` directory is an ERROR, never an
+empty table: ``run()`` raises (the ``benchmarks.run`` harness surfaces it
+as an ERROR row) and the CLI exits nonzero with the command to fix it.
+Historically this bench globbed a single LLM mesh and filtered to LM-only
+shapes, so a fresh checkout silently produced zero roofline rows.
 
 Also reports the loss-layer HBM-traffic model behind the ``loss_impl``
 knob: the dense path moves the (B, B) f32 pair matrix through HBM ~8x
@@ -9,8 +17,10 @@ benchmarks/kernel_bench.py and repro/kernels/gcl_loss.py."""
 import glob
 import json
 import os
+import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(ROOT, "experiments", "dryrun")
 
 # global batch sizes the paper's limited-resource setting cares about;
 # the single-device dense traffic 8*B^2*4 reported below scales as
@@ -18,39 +28,59 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 LOSS_TRAFFIC_B = (512, 1024, 2048, 4096)
 
 
-def model_flops(d, shape_kind):
-    """6*N*D (dense) / 6*N_active*D (MoE) per device, for the ratio column."""
+def model_flops(d):
+    """Analytic useful-flops estimate per device, for the ratio column.
+
+    Train: ~6*N_active*tokens (fwd+bwd), contrastive or LM alike — the
+    CLIP pair loss is O(B^2*d), negligible next to the towers at dry-run
+    scale.  Prefill: 2*N*tokens.  Decode: 2*N per generated token."""
+    from repro.configs.base import INPUT_SHAPES
     n = d["active_params"]
     chips = d["chips"]
-    if shape_kind == "train":
-        tokens = 256 * 4096
-        return 6 * n * tokens / chips
-    if shape_kind == "prefill":
-        return 2 * n * 32 * 32768 / chips
-    # decode: one token
-    bsz = 128 if "decode_32k" in d["shape"] else 1
-    return 2 * n * bsz / chips
+    shape = INPUT_SHAPES[d["shape"]]
+    if shape.kind == "train":
+        return 6 * n * shape.global_batch * shape.seq_len / chips
+    if shape.kind == "prefill":
+        return 2 * n * shape.global_batch * shape.seq_len / chips
+    return 2 * n * shape.global_batch / chips
 
 
-def run(steps=None, seed=None):
+def dryrun_rows():
+    """One (name, 0.0, derived) row per dry-run artifact, any mesh.
+
+    Raises FileNotFoundError when the sweep has not been run — callers
+    must surface that, not render an empty table."""
+    paths = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not paths:
+        raise FileNotFoundError(
+            f"no dry-run artifacts under {DRYRUN_DIR} — run "
+            f"`python experiments/run_dryruns.py` (optionally --only rx) "
+            f"to generate them; refusing to emit an empty roofline table")
     rows = []
-    for fp in sorted(glob.glob(os.path.join(ROOT, "experiments", "dryrun",
-                                            "*16x16.json"))):
-        d = json.load(open(fp))
-        if d["mesh"] != "16x16":
+    for fp in paths:
+        try:
+            d = json.load(open(fp))
+        except ValueError as e:
+            rows.append((f"roofline/{os.path.basename(fp)}", 0.0,
+                         f"ERROR:unreadable:{e}"))
             continue
-        kind = ("train" if "train" in d["shape"]
-                else "prefill" if "prefill" in d["shape"] else "decode")
-        mf = model_flops(d, kind)
+        mf = model_flops(d)
         ratio = mf / max(d["flops_per_device"], 1)
         r = d["roofline"]
+        obj = d.get("objective", "lm")
+        tag = f"/{obj}-{d['reduction']}" if obj != "lm" else ""
         rows.append((
-            f"roofline/{d['arch']}/{d['shape']}", 0.0,
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}{tag}", 0.0,
             f"bottleneck={r['bottleneck']};compute_s={r['compute_s']:.4f};"
             f"memory_s={r['memory_s']:.4f};"
             f"collective_s={r['collective_s']:.4f};"
             f"useful_flops_ratio={ratio:.3f}"))
+    return rows
+
+
+def loss_traffic_rows():
     from benchmarks.kernel_bench import pair_matrix_bytes
+    rows = []
     for B in LOSS_TRAFFIC_B:
         dense = pair_matrix_bytes(B, "dense")
         rows.append((
@@ -58,3 +88,22 @@ def run(steps=None, seed=None):
             f"dense_hbm_bytes={dense};fused_hbm_bytes=0;"
             f"model=8*B^2*4_single_device_vs_vmem_tiles"))
     return rows
+
+
+def run(steps=None, seed=None):
+    return dryrun_rows() + loss_traffic_rows()
+
+
+def main():
+    try:
+        rows = run()
+    except FileNotFoundError as e:
+        print(f"ERROR: {e}", file=sys.stderr)
+        sys.exit(1)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,15 @@
                          emits BENCH_serve.json via
                          ``python -m benchmarks.serve_bench``)
     roofline_table    -> deliverable (g) table from the dry-run sweep
+                         (errors loudly when experiments/dryrun/ is
+                         empty — never an empty table)
+    autotune_bench    -> kernel tile/chunk sweep w/ oracle parity gates
+                         (``python -m benchmarks.autotune_bench`` also
+                         persists the tuning table the kernels consult)
+    modeled_cost      -> HLOCostModel columns for the lowered step/eval/
+                         serve/fsdp modules (``python -m
+                         benchmarks.modeled_cost --check`` gates them
+                         against benchmarks/goldens/modeled_cost.json)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--only rx]
 """
@@ -35,9 +44,10 @@ def main() -> None:
     args = ap.parse_args()
     steps = 40 if args.quick else 120
 
-    from benchmarks import (data_bench, fig3_comm, kernel_bench,
-                            retrieval_bench, roofline_table, scaling_model,
-                            serve_bench, step_bench, table3_inner_lr,
+    from benchmarks import (autotune_bench, data_bench, fig3_comm,
+                            kernel_bench, modeled_cost, retrieval_bench,
+                            roofline_table, scaling_model, serve_bench,
+                            step_bench, table3_inner_lr,
                             table4_temperature, table5_optimizer)
     benches = [
         ("table3_inner_lr", lambda: table3_inner_lr.run(steps=steps)),
@@ -53,6 +63,8 @@ def main() -> None:
                                               else 32)),
         ("serve_bench", lambda: serve_bench.run(quick=args.quick)),
         ("roofline_table", roofline_table.run),
+        ("autotune_bench", lambda: autotune_bench.run(quick=True)),
+        ("modeled_cost", modeled_cost.run),
     ]
     print("name,us_per_call,derived")
     for name, fn in benches:

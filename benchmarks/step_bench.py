@@ -20,6 +20,13 @@ column are the durable part (the ``delta_loss_vs_f32`` field bounds the
 bf16 policy drift after ``steps`` real optimizer steps; it is null for the
 sharded row, whose 4-shard loader draws differently-ordered batches).
 
+Every row also carries modeled-cost columns from ``HLOCostModel`` over the
+step's post-optimization HLO: ``modeled_flops``, ``modeled_hbm_bytes``,
+``modeled_collective_bytes``, ``modeled_collective_counts``.  These are
+machine-independent (a property of the lowered module, not the host), so
+they regress meaningfully on CPU CI — ``benchmarks/modeled_cost.py``
+snapshots them as goldens and the perf-model-smoke CI job fails on drift.
+
 Run: PYTHONPATH=src python -m benchmarks.step_bench [--quick] [--steps N]
      [--out BENCH_step.json]
 """
@@ -80,24 +87,41 @@ def _build(precision, impl, loss_impl, steps, seed=0, n_shards=1,
 
 def _time_steps(name, tc, loader, state, steps):
     """The shared compile/step timing loop + row assembly (identical
-    protocol for the local variants and the sharded worker)."""
-    step_fn = donated_jit(TS.make_train_step(tc))
+    protocol for the local variants and the sharded worker).
+
+    The step is compiled ahead-of-time (``.lower().compile()``) so the
+    same executable serves both the timing loop and the modeled-cost
+    columns: its post-optimization HLO goes through ``HLOCostModel``
+    (trip-count-aware flops / HBM bytes / collective counts — the numbers
+    ``benchmarks.modeled_cost`` snapshots as goldens and CI gates on)."""
+    from repro.roofline.hlo_cost import HLOCostModel
+
+    jit_fn = donated_jit(TS.make_train_step(tc))
+    compiled = None
     t_compile = t_steps = 0.0
     n_timed = 0
     losses = []
     for epoch, step, idx, batch in loader.steps(steps):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        idx = jnp.asarray(idx)
+        if compiled is None:
+            t0 = time.perf_counter()
+            compiled = jit_fn.lower(state, batch, idx).compile()
+            t_compile = time.perf_counter() - t0
+            hlo_text = compiled.as_text()
         t0 = time.perf_counter()
-        state, m = step_fn(state, batch, jnp.asarray(idx))
+        state, m = compiled(state, batch, idx)
         jax.block_until_ready(m["loss"])
         dt = time.perf_counter() - t0
-        if step == 0:
-            t_compile = dt
-        else:
+        if step > 0:          # step 0 is the warmup call
             t_steps += dt
             n_timed += 1
         losses.append(float(m["loss"]))
     TS.check_state_dtypes(state)  # f32 masters under any policy
+    # fallback group size for collectives with no parseable replica_groups
+    # (both SHARDED_MESH axes have size 2; unused on the 1-device variants)
+    cm = HLOCostModel(hlo_text, default_group=2)
+    mflops, mbytes, mcoll = cm.totals()
     s_per_step = t_steps / max(n_timed, 1)
     row = {
         "name": name,
@@ -111,6 +135,11 @@ def _time_steps(name, tc, loader, state, steps):
         "loss_first": round(losses[0], 6),
         "loss_final": round(losses[-1], 6),
         "sat_rate": float(m["sat_rate"]),
+        "modeled_flops": mflops,
+        "modeled_hbm_bytes": mbytes,
+        "modeled_collective_bytes": mcoll,
+        "modeled_collective_counts": {
+            k: int(v) for k, v in sorted(cm.collective_counts().items())},
     }
     return row, state
 

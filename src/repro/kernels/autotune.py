@@ -1,0 +1,223 @@
+"""Kernel tuning table: produced by ``benchmarks/autotune_bench.py``,
+consulted by the Pallas kernels at call time.
+
+The kernels ship with untuned defaults (``gcl_loss.BR/BC = 128``,
+``D_BLOCK_MAX = 2048``, ``flash_mha`` chunk sizes 512/1024).  The autotune
+bench sweeps candidate tile/chunk configs, proves parity of every candidate
+against the dense oracle (bitwise on the exact-arithmetic planted batch,
+tight tolerance on random batches), times the survivors (interpret mode
+off-TPU — compile/correctness surface; real timing on-device), and
+persists the fastest per key into a JSON table:
+
+    key = "<kernel>|<shape bucket>|<dtype>|<backend>"
+    val = {config kwargs...}  e.g. {"br": 128, "bc": 256, "d_block": null}
+
+Shape buckets round every dim up to the next power of two, so one sweep
+covers a neighborhood of shapes.  Keys carry the backend (``cpu``,
+``tpu``, with ``-interpret`` appended off-TPU), so a table tuned on one
+backend never leaks onto another.
+
+Consumption contract (the "fallback verified" part of the ROADMAP item):
+``kernel_config(kernel, dims, dtype)`` returns the table entry for the
+current backend when one exists, else the kernel's shipped defaults —
+kernels behave identically to the pre-table code on a fresh checkout with
+no table file.  Lookup order for the table path:
+
+    1. ``$REPRO_TUNING_TABLE`` (explicit file)
+    2. ``src/repro/kernels/tuning_table.json`` (checked-in, next to this
+       module)
+
+``load_table(path)`` / ``TuningTable.save(path)`` are the bench-side API.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+import jax
+
+# shipped defaults, mirrored from the kernel modules (import cycle keeps
+# them literal here; asserted in tests against the kernel constants)
+DEFAULTS = {
+    "gcl_stats": {"br": 128, "bc": 128, "d_block": None},
+    "gcl_grads": {"br": 128, "bc": 128, "d_block": None},
+    "flash_mha": {"q_chunk": 512, "kv_chunk": 1024},
+}
+
+_ENV_VAR = "REPRO_TUNING_TABLE"
+_DEFAULT_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "tuning_table.json")
+
+
+def _pow2_bucket(n: int) -> int:
+    """Round up to the next power of two (>= 1)."""
+    n = max(int(n), 1)
+    b = 1
+    while b < n:
+        b <<= 1
+    return b
+
+
+def shape_bucket(**dims: int) -> str:
+    """Canonical bucket string: sorted dims, each rounded up to a power of
+    two — ``shape_bucket(b=100, d=512) == 'b=128,d=512'``."""
+    return ",".join(f"{k}={_pow2_bucket(v)}"
+                    for k, v in sorted(dims.items()))
+
+
+def backend_key(interpret: bool = False) -> str:
+    be = jax.default_backend()
+    return f"{be}-interpret" if interpret else be
+
+
+def table_key(kernel: str, bucket: str, dtype, backend: str) -> str:
+    return f"{kernel}|{bucket}|{jax.numpy.dtype(dtype).name}|{backend}"
+
+
+class TuningTable:
+    """In-memory view of the JSON table.  ``entries`` maps table_key ->
+    config dict (plus optional ``us`` timing metadata, stripped on
+    lookup)."""
+
+    def __init__(self, entries: Optional[Dict[str, dict]] = None,
+                 path: Optional[str] = None):
+        self.entries = dict(entries or {})
+        self.path = path
+
+    # -- lookup ------------------------------------------------------------
+
+    def lookup(self, kernel: str, bucket: str, dtype,
+               backend: str) -> Optional[dict]:
+        e = self.entries.get(table_key(kernel, bucket, dtype, backend))
+        if e is None:
+            return None
+        return {k: v for k, v in e.items() if k in DEFAULTS[kernel]}
+
+    # -- bench-side mutation ----------------------------------------------
+
+    def record(self, kernel: str, bucket: str, dtype, backend: str,
+               config: dict, us: Optional[float] = None):
+        e = dict(config)
+        if us is not None:
+            e["us"] = round(float(us), 2)
+        self.entries[table_key(kernel, bucket, dtype, backend)] = e
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path or _DEFAULT_PATH
+        doc = {"version": 1, "entries": self.entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+
+def load_table(path: Optional[str] = None) -> TuningTable:
+    """Load a table file; a missing/corrupt file yields an EMPTY table
+    (the kernels then run on their shipped defaults — never an error on a
+    fresh checkout)."""
+    path = path or os.environ.get(_ENV_VAR) or _DEFAULT_PATH
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            entries = {}
+    except (OSError, ValueError):
+        entries = {}
+    return TuningTable(entries, path=path)
+
+
+_cached: Optional[TuningTable] = None
+_cached_path: Optional[str] = None
+_lock = threading.Lock()
+
+
+def get_table() -> TuningTable:
+    """Process-wide cached table (re-read when $REPRO_TUNING_TABLE moves)."""
+    global _cached, _cached_path
+    path = os.environ.get(_ENV_VAR) or _DEFAULT_PATH
+    with _lock:
+        if _cached is None or _cached_path != path:
+            _cached = load_table(path)
+            _cached_path = path
+        return _cached
+
+
+def reset_cache():
+    """Drop the cached table (tests; after a bench writes a new file)."""
+    global _cached, _cached_path
+    with _lock:
+        _cached = None
+        _cached_path = None
+
+
+# -- planted exact-arithmetic parity cases ---------------------------------
+#
+# Bit-level parity between a tiled kernel and the dense oracle is not
+# attainable on arbitrary inputs (different summation orders round
+# differently).  These builders construct inputs where equality is a
+# *theorem* in f32: all values are small integers, every exponent
+# evaluates to exp(0) = 1, and every partial sum is an exact integer
+# below 2^24 — so any tiling/any order produces the identical floats.
+# A candidate config that is not BITWISE equal to the oracle on a planted
+# case has a real indexing/masking bug.  (Random-input checks with tight
+# tolerance complement these in the bench.)
+
+def planted_gcl_case(b: int, d: int, seed: int = 0):
+    """(e1, e2, lwt, tau): e1/e2 rows are each one shared small-integer
+    vector, so every off-diagonal z = (s_ij - s_ii)/tau is exactly 0 and
+    the stats/grads reduce to exact integer counts."""
+    import numpy as np
+    rng = np.random.RandomState(seed)
+    u = rng.randint(0, 3, size=(d,)).astype(np.float32)
+    w = rng.randint(0, 3, size=(d,)).astype(np.float32)
+    jnp = jax.numpy
+    e1 = jnp.tile(u, (b, 1))
+    e2 = jnp.tile(w, (b, 1))
+    return e1, e2, jnp.zeros((b,)), jnp.full((b,), 0.25)
+
+
+def planted_attention_case(batch: int, seq: int, heads: int, hd: int,
+                           seed: int = 0):
+    """(q, k, v, ct) for non-causal attention: k rows share one integer
+    vector (scores constant per row -> uniform weights), seq a power of
+    two (1/seq is a power of two), hd a power of four (1/sqrt(hd) is a
+    power of two), q/v/ct small integers — forward and backward are exact
+    for every chunking."""
+    import numpy as np
+    assert seq & (seq - 1) == 0 and hd & (hd - 1) == 0
+    rng = np.random.RandomState(seed)
+    jnp = jax.numpy
+    kc = rng.randint(0, 3, size=(hd,)).astype(np.float32)
+    q = jnp.asarray(rng.randint(0, 3, size=(batch, seq, heads, hd))
+                    .astype(np.float32))
+    k = jnp.tile(kc, (batch, seq, heads, 1))
+    v = jnp.asarray(rng.randint(0, 3, size=(batch, seq, heads, hd))
+                    .astype(np.float32))
+    ct = jnp.asarray(rng.randint(0, 2, size=(batch, seq, heads, hd))
+                     .astype(np.float32))
+    return q, k, v, ct
+
+
+def kernel_config(kernel: str, dtype=None, interpret: bool = False,
+                  **dims: int) -> dict:
+    """The config the kernel should run with: table entry for the current
+    (shape bucket, dtype, backend) when present, else the shipped
+    defaults.  Explicit caller overrides are applied by the kernels
+    themselves (an explicit ``br=``/``q_chunk=`` argument always wins —
+    this function is only consulted for unspecified knobs)."""
+    if kernel not in DEFAULTS:
+        raise KeyError(f"unknown kernel {kernel!r}; "
+                       f"known: {sorted(DEFAULTS)}")
+    cfg = dict(DEFAULTS[kernel])
+    hit = get_table().lookup(kernel, shape_bucket(**dims),
+                             dtype if dtype is not None else jax.numpy.float32,
+                             backend_key(interpret))
+    if hit:
+        cfg.update(hit)
+    return cfg

@@ -149,13 +149,24 @@ _flash_mha.defvjp(_flash_mha_fwd, _flash_mha_bwd)
 
 
 def flash_mha(q, k, v, *, causal=True, window=0, interpret=None,
-              q_chunk=512, kv_chunk=1024):
+              q_chunk=None, kv_chunk=None):
     """Training flash attention.  q: (B, Sq, H, hd), k/v: (B, Sk, H, hd)
     (GQA heads already repeated), any Sq/Sk.  Returns (B, Sq, H, hd) in the
     q dtype.  ``interpret=None`` auto-selects interpret mode off-TPU;
-    ``q_chunk``/``kv_chunk`` bound the remat backward's block sizes (the
-    AttnSpec tiles, honored like the chunked path honors them)."""
+    ``q_chunk``/``kv_chunk`` bound the remat backward's block sizes —
+    unset values come from the autotune table (see repro.kernels.autotune;
+    produced by ``benchmarks/autotune_bench.py``) with the shipped 512/1024
+    as fallback."""
     if interpret is None:
         interpret = default_interpret()
+    if q_chunk is None or kv_chunk is None:
+        from repro.kernels import autotune
+        cfg = autotune.kernel_config("flash_mha", dtype=q.dtype,
+                                     interpret=interpret, sq=q.shape[1],
+                                     sk=k.shape[1], hd=q.shape[3])
+        if q_chunk is None:
+            q_chunk = cfg["q_chunk"]
+        if kv_chunk is None:
+            kv_chunk = cfg["kv_chunk"]
     return _flash_mha(q, k, v, bool(causal), int(window), bool(interpret),
                       int(q_chunk), int(kv_chunk))

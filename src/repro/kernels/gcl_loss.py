@@ -64,10 +64,30 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.losses import EXP_CLAMP, MASK_NEG
+from repro.kernels import autotune
 
+# Shipped tile defaults.  Call sites that leave ``br``/``bc``/``d_block``
+# unset consult the autotune table (repro.kernels.autotune, produced by
+# ``benchmarks/autotune_bench.py``) first and fall back to these.
 BR = 128          # row tile
 BC = 128          # col tile
 D_BLOCK_MAX = 2048   # above this, the stats kernel blocks the feature dim
+
+
+def _resolve_tiles(kernel, dtype, interpret, br, bc, d_block, **dims):
+    """Fill unset tile knobs from the tuning table; explicit caller
+    arguments always win, and with no table entry the shipped defaults
+    above apply unchanged."""
+    if br is None or bc is None or d_block is None:
+        cfg = autotune.kernel_config(kernel, dtype=dtype,
+                                     interpret=interpret, **dims)
+        if br is None:
+            br = cfg["br"]
+        if bc is None:
+            bc = cfg["bc"]
+        if d_block is None:
+            d_block = cfg["d_block"]
+    return int(br), int(bc), d_block
 
 
 def _pad_rows(x, m, value=0.0):
@@ -96,7 +116,8 @@ def _pad_vec(x, n, m, value=0.0):
 
 def _stats_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
                   t1_ref, t2_ref, g1_ref, g2_ref, dg1_ref, dg2_ref,
-                  m1_ref, m2_ref, s1_acc, s2_acc, *, n_cols, n_d_blocks):
+                  m1_ref, m2_ref, s1_acc, s2_acc, *, n_cols, n_d_blocks,
+                  br, bc):
     c = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -124,9 +145,9 @@ def _stats_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
 
     @pl.when(k == n_d_blocks - 1)
     def _online_update():
-        sd = sdr_ref[...].astype(jnp.float32)            # (BR,)
-        rows = rid_ref[...][:, None]                     # (BR, 1) global
-        cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+        sd = sdr_ref[...].astype(jnp.float32)            # (br,)
+        rows = rid_ref[...][:, None]                     # (br, 1) global
+        cols = c * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
         mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
         for s, t_ref, g_ref, dg_ref, m_ref in (
                 (s1_acc[...], t1_ref, g1_ref, dg1_ref, m1_ref),
@@ -146,14 +167,17 @@ def _stats_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
 
 
 def gcl_pair_stats(e1, e2, tau1, tau2, *, e1_all=None, e2_all=None,
-                   row_offset=0, interpret=False, d_block=None):
+                   row_offset=0, interpret=False, d_block=None,
+                   br=None, bc=None):
     """e1/e2: (b, d) normalized anchor rows (f32 or bf16); tau1/tau2:
     scalar or (b,).
 
     Square case (default): columns are the rows themselves.  Rectangular
     sharded case: ``e1_all``/``e2_all`` are the (B, d) gathered batch and
     ``row_offset`` (may be traced) is the global index of local row 0.
-    ``d_block``: feature-dim block (None = whole d, auto-blocked above
+    ``br``/``bc``/``d_block``: tile sizes — unset knobs come from the
+    autotune table when it has an entry for this shape/dtype/backend, else
+    the shipped defaults (BR, BC, and d_block = whole d, auto-blocked above
     D_BLOCK_MAX).  Returns the shift-decomposed stats
     (g1, g2, dg1, dg2, m1, m2), each (b,) f32, in losses.RowStats order:
     true g = exp(m) * g (sums already divided by B-1)."""
@@ -161,34 +185,37 @@ def gcl_pair_stats(e1, e2, tau1, tau2, *, e1_all=None, e2_all=None,
     if e1_all is None:
         e1_all, e2_all = e1, e2
     B = e1_all.shape[0]
+    br, bc, d_block = _resolve_tiles("gcl_stats", e1.dtype, interpret,
+                                     br, bc, d_block, b=b, cols=B, d=d)
     if d_block is None:
         d_block = d if d <= D_BLOCK_MAX else D_BLOCK_MAX
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
     rid = row_offset + jnp.arange(b, dtype=jnp.int32)
-    ridp = _pad_rows(rid, BR, value=-1)
-    e1p = _pad_cols(_pad_rows(e1, BR), d_block)
-    e2p = _pad_cols(_pad_rows(e2, BR), d_block)
-    e1cp = _pad_cols(_pad_rows(e1_all, BC), d_block)
-    e2cp = _pad_cols(_pad_rows(e2_all, BC), d_block)
-    sdp = _pad_vec(sd, b, BR)
-    t1p = _pad_vec(tau1, b, BR, 1.0)
-    t2p = _pad_vec(tau2, b, BR, 1.0)
+    ridp = _pad_rows(rid, br, value=-1)
+    e1p = _pad_cols(_pad_rows(e1, br), d_block)
+    e2p = _pad_cols(_pad_rows(e2, br), d_block)
+    e1cp = _pad_cols(_pad_rows(e1_all, bc), d_block)
+    e2cp = _pad_cols(_pad_rows(e2_all, bc), d_block)
+    sdp = _pad_vec(sd, b, br)
+    t1p = _pad_vec(tau1, b, br, 1.0)
+    t2p = _pad_vec(tau2, b, br, 1.0)
     bp, Bp, dp = e1p.shape[0], e1cp.shape[0], e1p.shape[1]
     nk = dp // d_block
-    grid = (bp // BR, Bp // BC, nk)
+    grid = (bp // br, Bp // bc, nk)
 
-    row_spec = pl.BlockSpec((BR, d_block), lambda r, c, k: (r, k))
-    col_spec = pl.BlockSpec((BC, d_block), lambda r, c, k: (c, k))
-    vec_row = pl.BlockSpec((BR,), lambda r, c, k: (r,))
+    row_spec = pl.BlockSpec((br, d_block), lambda r, c, k: (r, k))
+    col_spec = pl.BlockSpec((bc, d_block), lambda r, c, k: (c, k))
+    vec_row = pl.BlockSpec((br,), lambda r, c, k: (r,))
 
     out = pl.pallas_call(
-        functools.partial(_stats_kernel, n_cols=B, n_d_blocks=nk),
+        functools.partial(_stats_kernel, n_cols=B, n_d_blocks=nk,
+                          br=br, bc=bc),
         grid=grid,
         in_specs=[vec_row, row_spec, row_spec, col_spec, col_spec,
                   vec_row, vec_row, vec_row],
         out_specs=[vec_row] * 6,
         out_shape=[jax.ShapeDtypeStruct((bp,), jnp.float32)] * 6,
-        scratch_shapes=[pltpu.VMEM((BR, BC), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((br, bc), jnp.float32)] * 2,
         interpret=interpret,
     )(ridp, e1p, e2p, e1cp, e2cp, sdp, t1p, t2p)
     denom = float(max(B - 1, 1))
@@ -203,7 +230,7 @@ def gcl_pair_stats(e1, e2, tau1, tau2, *, e1_all=None, e2_all=None,
 def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
                   sdc_ref, lwt1r_ref, lwt2r_ref, lwt1c_ref, lwt2c_ref,
                   t1r_ref, t2r_ref, t1c_ref, t2c_ref, de1_ref, de2_ref,
-                  r1_ref, r2_ref, *, n_cols):
+                  r1_ref, r2_ref, *, n_cols, br, bc):
     c = pl.program_id(1)
 
     @pl.when(c == 0)
@@ -218,8 +245,8 @@ def _grads_kernel(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref, sdr_ref,
     sdr = sdr_ref[...].astype(jnp.float32)
     sdc = sdc_ref[...].astype(jnp.float32)
 
-    rows = rid_ref[...][:, None]                     # (BR, 1) global ids
-    cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+    rows = rid_ref[...][:, None]                     # (br, 1) global ids
+    cols = c * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
     mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
 
     s1 = jax.lax.dot_general(e1r_ref[...], e2c, (((1,), (1,)), ((), ())),
@@ -258,8 +285,9 @@ def _grads_kernel_dblocked(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref,
                            sdr_ref, sdc_ref, lwt1r_ref, lwt2r_ref,
                            lwt1c_ref, lwt2c_ref, t1r_ref, t2r_ref, t1c_ref,
                            t2c_ref, de1_ref, de2_ref, r1_ref, r2_ref,
-                           s1_acc, s2_acc, p1_acc, p2_acc, *, n_cols):
-    """d-blocked backward: phase 0 accumulates the (BR, BC) similarity
+                           s1_acc, s2_acc, p1_acc, p2_acc, *, n_cols,
+                           br, bc):
+    """d-blocked backward: phase 0 accumulates the (br, bc) similarity
     tiles over d chunks; phase 1 forms the combined pair-weight tiles
     P1 = A1 + M2 and P2 = A2 + M1 once per (row, col) tile and streams
     the (BR, d_block) gradient chunks.  See the module docstring for the
@@ -300,7 +328,7 @@ def _grads_kernel_dblocked(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref,
         sdr = sdr_ref[...].astype(jnp.float32)
         sdc = sdc_ref[...].astype(jnp.float32)
         rows = rid_ref[...][:, None]
-        cols = c * BC + jax.lax.broadcasted_iota(jnp.int32, (BR, BC), 1)
+        cols = c * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
         mask = (rows != cols) & (cols < n_cols) & (rows >= 0)
 
         def a(z):
@@ -334,7 +362,7 @@ def _grads_kernel_dblocked(rid_ref, e1r_ref, e2r_ref, e1c_ref, e2c_ref,
 def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
                    e2_all=None, sd_all=None, lwt1_all=None, lwt2_all=None,
                    tau1_all=None, tau2_all=None, row_offset=0,
-                   interpret=False, d_block=None):
+                   interpret=False, d_block=None, br=None, bc=None):
     """Closed-form (de1, de2) for L = (1/B) sum_i w1_i g1_i + w2_i g2_i
     with log-domain weights: ``lwt* = log(w*) - log(tau*)`` so that
     A[i, j] = exp(z_ij + lwt_i) — exact unclamped gradients at any tau.
@@ -344,10 +372,11 @@ def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
     gathered (B,)-shaped batch quantities (features, s_ii, log-weights,
     taus) needed for the transpose terms; the returned (b, d) grads are the
     *local* rows — no collective is required on them.  Inputs may be bf16
-    (f32 accumulation).  ``d_block``: feature-dim block for the two-phase
-    grid — **opt-in** (None = whole d; unlike the stats kernel there is
-    no auto threshold, since the blocked path's output-revisit pattern is
-    interpret-validated only, see module docstring)."""
+    (f32 accumulation).  ``br``/``bc``: row/col tiles (None = table entry,
+    else BR/BC).  ``d_block``: feature-dim block for the two-phase grid —
+    **opt-in** (None = table entry, else whole d; unlike the stats kernel
+    there is no auto threshold, since the blocked path's output-revisit
+    pattern is interpret-validated only, see module docstring)."""
     b, d = e1.shape
     sd = jnp.sum(e1.astype(jnp.float32) * e2.astype(jnp.float32), axis=-1)
     if e1_all is None:
@@ -355,48 +384,51 @@ def gcl_pair_grads(e1, e2, lwt1, lwt2, tau1, tau2, *, e1_all=None,
         sd_all, lwt1_all, lwt2_all = sd, lwt1, lwt2
         tau1_all, tau2_all = tau1, tau2
     B = e1_all.shape[0]
+    br, bc, d_block = _resolve_tiles("gcl_grads", e1.dtype, interpret,
+                                     br, bc, d_block, b=b, cols=B, d=d)
     rid = row_offset + jnp.arange(b, dtype=jnp.int32)
     if d_block is None:
         d_block = d
     blocked = d_block < d
 
-    e1p, e2p = _pad_rows(e1, BR), _pad_rows(e2, BR)
-    e1cp, e2cp = _pad_rows(e1_all, BC), _pad_rows(e2_all, BC)
+    e1p, e2p = _pad_rows(e1, br), _pad_rows(e2, br)
+    e1cp, e2cp = _pad_rows(e1_all, bc), _pad_rows(e2_all, bc)
     if blocked:
         e1p, e2p = _pad_cols(e1p, d_block), _pad_cols(e2p, d_block)
         e1cp, e2cp = _pad_cols(e1cp, d_block), _pad_cols(e2cp, d_block)
-    ridp = _pad_rows(rid, BR, value=-1)
-    sdp = _pad_vec(sd, b, BR)
-    sdcp = _pad_vec(sd_all, B, BC)
+    ridp = _pad_rows(rid, br, value=-1)
+    sdp = _pad_vec(sd, b, br)
+    sdcp = _pad_vec(sd_all, B, bc)
     # padded rows/cols are masked out via rid/n_cols; MASK_NEG keeps their
     # exponents at -inf rather than trusting the mask alone
-    lw1p = _pad_vec(lwt1, b, BR, MASK_NEG)
-    lw2p = _pad_vec(lwt2, b, BR, MASK_NEG)
-    lw1cp = _pad_vec(lwt1_all, B, BC, MASK_NEG)
-    lw2cp = _pad_vec(lwt2_all, B, BC, MASK_NEG)
-    t1p, t2p = _pad_vec(tau1, b, BR, 1.0), _pad_vec(tau2, b, BR, 1.0)
-    t1cp = _pad_vec(tau1_all, B, BC, 1.0)
-    t2cp = _pad_vec(tau2_all, B, BC, 1.0)
+    lw1p = _pad_vec(lwt1, b, br, MASK_NEG)
+    lw2p = _pad_vec(lwt2, b, br, MASK_NEG)
+    lw1cp = _pad_vec(lwt1_all, B, bc, MASK_NEG)
+    lw2cp = _pad_vec(lwt2_all, B, bc, MASK_NEG)
+    t1p, t2p = _pad_vec(tau1, b, br, 1.0), _pad_vec(tau2, b, br, 1.0)
+    t1cp = _pad_vec(tau1_all, B, bc, 1.0)
+    t2cp = _pad_vec(tau2_all, B, bc, 1.0)
     bp, Bp, dp = e1p.shape[0], e1cp.shape[0], e1p.shape[1]
 
     if blocked:
         nk = dp // d_block
-        grid = (bp // BR, Bp // BC, 2, nk)
-        row_spec = pl.BlockSpec((BR, d_block), lambda r, c, p, k: (r, k))
-        col_spec = pl.BlockSpec((BC, d_block), lambda r, c, p, k: (c, k))
-        vrow = pl.BlockSpec((BR,), lambda r, c, p, k: (r,))
-        vcol = pl.BlockSpec((BC,), lambda r, c, p, k: (c,))
-        de_spec = pl.BlockSpec((BR, d_block), lambda r, c, p, k: (r, k))
-        kernel = functools.partial(_grads_kernel_dblocked, n_cols=B)
-        scratch = [pltpu.VMEM((BR, BC), jnp.float32)] * 4
+        grid = (bp // br, Bp // bc, 2, nk)
+        row_spec = pl.BlockSpec((br, d_block), lambda r, c, p, k: (r, k))
+        col_spec = pl.BlockSpec((bc, d_block), lambda r, c, p, k: (c, k))
+        vrow = pl.BlockSpec((br,), lambda r, c, p, k: (r,))
+        vcol = pl.BlockSpec((bc,), lambda r, c, p, k: (c,))
+        de_spec = pl.BlockSpec((br, d_block), lambda r, c, p, k: (r, k))
+        kernel = functools.partial(_grads_kernel_dblocked, n_cols=B,
+                                   br=br, bc=bc)
+        scratch = [pltpu.VMEM((br, bc), jnp.float32)] * 4
     else:
-        grid = (bp // BR, Bp // BC)
-        row_spec = pl.BlockSpec((BR, dp), lambda r, c: (r, 0))
-        col_spec = pl.BlockSpec((BC, dp), lambda r, c: (c, 0))
-        vrow = pl.BlockSpec((BR,), lambda r, c: (r,))
-        vcol = pl.BlockSpec((BC,), lambda r, c: (c,))
-        de_spec = pl.BlockSpec((BR, dp), lambda r, c: (r, 0))
-        kernel = functools.partial(_grads_kernel, n_cols=B)
+        grid = (bp // br, Bp // bc)
+        row_spec = pl.BlockSpec((br, dp), lambda r, c: (r, 0))
+        col_spec = pl.BlockSpec((bc, dp), lambda r, c: (c, 0))
+        vrow = pl.BlockSpec((br,), lambda r, c: (r,))
+        vcol = pl.BlockSpec((bc,), lambda r, c: (c,))
+        de_spec = pl.BlockSpec((br, dp), lambda r, c: (r, 0))
+        kernel = functools.partial(_grads_kernel, n_cols=B, br=br, bc=bc)
         scratch = []
 
     de1, de2, r1, r2 = pl.pallas_call(

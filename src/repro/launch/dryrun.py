@@ -151,7 +151,7 @@ def run_dryrun(arch, shape_name, multi_pod=False, objective="lm",
     ca = compiled.cost_analysis()
     if isinstance(ca, list):
         ca = ca[0]
-    cm = HLOCostModel(hlo_text)
+    cm = HLOCostModel(hlo_text, default_group=chips)
     flops, hbm_bytes, coll_bytes = cm.totals()
     coll_counts = {k: int(v) for k, v in cm.collective_counts().items()}
     n_params = BB.count_params_analytic(cfg)

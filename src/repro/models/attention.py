@@ -33,8 +33,10 @@ class AttnSpec:
     rope_theta: float = 1e6
     causal: bool = True
     sliding_window: int = 0     # 0 = full
-    q_chunk: int = 512
-    kv_chunk: int = 1024
+    # None = defer to the kernel autotune table (flash impl) / the 512 and
+    # 1024 defaults (chunked impl); set explicitly to pin the block sizes.
+    q_chunk: Optional[int] = None
+    kv_chunk: Optional[int] = None
 
 
 def init_attention(rng, spec: AttnSpec, kv_dim: Optional[int] = None):
@@ -204,7 +206,8 @@ def attention(params, spec: AttnSpec, x, *, positions=None, kv_x=None,
     window = spec.sliding_window if not cross else 0
     if impl == "chunked":
         out = chunked_attention(q, k, v, causal=causal, window=window,
-                                q_chunk=spec.q_chunk, kv_chunk=spec.kv_chunk)
+                                q_chunk=spec.q_chunk or 512,
+                                kv_chunk=spec.kv_chunk or 1024)
     elif impl == "flash":
         from repro.kernels.flash_attention import flash_mha
         out = flash_mha(q, k, v, causal=causal, window=window,

@@ -1,0 +1,18 @@
+"""Perf-model layer: HLO-derived cost modeling with no real hardware.
+
+    hlo_shapes   the ONE shared HLO shape/type parser (dtype table, tuple
+                 heads, async-start result slicing, replica-group sizes)
+    analysis     roofline terms + ``collective_stats`` over compiled HLO
+    hlo_cost     trip-count-aware ``HLOCostModel`` (while bodies multiply)
+
+Consumers: ``repro.launch.dryrun`` (per-(arch, shape) artifacts under
+``experiments/dryrun/`` read by ``benchmarks/roofline_table.py``),
+``benchmarks/step_bench.py`` (modeled flops / HBM-bytes / collective-count
+columns on ``BENCH_step.json`` rows), and ``benchmarks/modeled_cost.py``
+(the golden-gated modeled-cost regression CI check).
+"""
+from repro.roofline import hlo_shapes  # noqa: F401
+from repro.roofline.analysis import (  # noqa: F401
+    CollectiveStats, Roofline, collective_stats, memory_per_device,
+    roofline_from_compiled)
+from repro.roofline.hlo_cost import HLOCostModel  # noqa: F401

@@ -7,8 +7,13 @@ Terms per (arch, mesh), from the dry-run artifact:
 
 ``cost_analysis`` provides flops/bytes (post-SPMD, per-device module —
 multiply by chips for the global numbers).  Collective bytes are parsed
-from the compiled HLO text: sum of operand sizes of all-gather /
-all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+from the compiled HLO text (ring cost model per op kind, see
+``hlo_shapes.collective_moved_bytes``).  All shape/type parsing lives in
+``repro.roofline.hlo_shapes`` — the shared module ``hlo_cost`` uses too.
+
+``default_group`` on every entry point is the fallback collective group
+size when an op carries no parseable ``replica_groups`` — pass the real
+mesh size (devices participating), not the historical hardcoded 2.
 
 Hardware constants (TPU v5e target):
     197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -19,47 +24,33 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
+from repro.roofline.hlo_shapes import (COLLECTIVE_KINDS,
+                                       collective_moved_bytes, group_size,
+                                       line_output_bytes)
+
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16,
-}
+# Back-compat aliases: these names used to be private copies here and are
+# imported by older call sites/tests; they now point at the shared parser.
+from repro.roofline.hlo_shapes import DTYPE_BYTES as _DTYPE_BYTES  # noqa: E402,F401
+from repro.roofline.hlo_shapes import SHAPE_RE as _SHAPE_RE  # noqa: E402,F401
 
-# e.g. "bf16[256,4096]{1,0}" or "f32[128]"
-_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64"
-                       r"|f64|c64|c128)\[([0-9,]*)\]")
-
-_COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
-                     "all-to-all", "collective-permute")
+_COLLECTIVE_KINDS = COLLECTIVE_KINDS
 
 
 def _shape_bytes(m: re.Match) -> int:
-    dt, dims = m.group(1), m.group(2)
-    n = 1
-    if dims:
-        for d in dims.split(","):
-            n *= int(d)
-    return n * _DTYPE_BYTES[dt]
+    from repro.roofline.hlo_shapes import shape_bytes
+    return shape_bytes(m)
 
 
 def _line_output_bytes(line: str) -> int:
-    """Bytes of the op's output shape(s): the text left of ' = '."""
-    lhs = line.split(" = ", 1)
-    region = lhs[1] if len(lhs) == 2 else line
-    # output shape(s) come first in the RHS before the op name's operands;
-    # take the first tuple/shape group
-    m = _SHAPE_RE.search(region)
-    if not m:
-        return 0
-    # handle tuples "(f32[..], f32[..])" — sum shapes up to the op name
-    paren = region.find("(", 0, region.find(")") + 1)
-    head_end = region.find(")") if region.startswith("(") else m.end()
-    head = region[:head_end + 1] if region.startswith("(") else region[:m.end()]
-    return sum(_shape_bytes(mm) for mm in _SHAPE_RE.finditer(head))
+    return line_output_bytes(line)
+
+
+def _group_size(line: str, default: int) -> int:
+    return group_size(line, default)
 
 
 @dataclasses.dataclass
@@ -72,54 +63,28 @@ class CollectiveStats:
         return sum(self.bytes_by_kind.values())
 
 
-_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
-_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _group_size(line: str, default: int) -> int:
-    m = _GROUPS_RE.search(line)
-    if m:
-        return len(m.group(1).split(","))
-    m = _GROUPS_IOTA_RE.search(line)
-    if m:  # iota format [n_groups, group_size]<=...
-        return int(m.group(2))
-    return default
-
-
 def collective_stats(hlo_text: str, default_group: int = 2) -> CollectiveStats:
-    """Per-device bytes moved by every collective, ring cost model:
-
-        all-gather       (G-1)/G * output_bytes
-        reduce-scatter   (G-1)/G * G * output_bytes  (= input bytes)
-        all-reduce       2 (G-1)/G * output_bytes
-        all-to-all       (G-1)/G * output_bytes
-        collective-permute  output_bytes
-    """
-    counts = {k: 0 for k in _COLLECTIVE_KINDS}
-    bbytes = {k: 0 for k in _COLLECTIVE_KINDS}
+    """Per-device bytes moved by every collective in the HLO text, ring
+    cost model (``hlo_shapes.collective_moved_bytes``).  Async pairs count
+    once: the ``*-start`` line carries the cost (its tuple output is
+    sliced to the result element only), the ``*-done`` line carries none.
+    ``default_group``: real mesh group size fallback when an op has no
+    parseable ``replica_groups``."""
+    counts = {k: 0 for k in COLLECTIVE_KINDS}
+    bbytes = {k: 0 for k in COLLECTIVE_KINDS}
     for line in hlo_text.splitlines():
         ls = line.strip()
         if " = " not in ls:
             continue
         rhs = ls.split(" = ", 1)[1]
-        for kind in _COLLECTIVE_KINDS:
-            # op name appears as e.g. "all-gather(", "all-reduce-start("
+        for kind in COLLECTIVE_KINDS:
+            # op name appears as e.g. "all-gather(", "all-gather-start(";
+            # "-done(" consumes the started op and moves nothing new
             if re.search(rf"\b{kind}(-start)?\(", rhs):
-                out_b = _line_output_bytes(ls)
-                G = _group_size(ls, default_group)
-                ring = (G - 1) / max(G, 1)
-                if kind == "all-gather":
-                    moved = ring * out_b
-                elif kind == "reduce-scatter":
-                    moved = ring * G * out_b
-                elif kind == "all-reduce":
-                    moved = 2 * ring * out_b
-                elif kind == "all-to-all":
-                    moved = ring * out_b
-                else:
-                    moved = out_b
+                out_b = line_output_bytes(ls)
+                G = group_size(ls, default_group)
                 counts[kind] += 1
-                bbytes[kind] += int(moved)
+                bbytes[kind] += int(collective_moved_bytes(kind, out_b, G))
                 break
     return CollectiveStats(counts, bbytes)
 
@@ -146,14 +111,15 @@ class Roofline:
 
 
 def roofline_from_compiled(compiled, chips: int,
-                           hlo_text: Optional[str] = None) -> Roofline:
+                           hlo_text: Optional[str] = None,
+                           default_group: Optional[int] = None) -> Roofline:
     ca = compiled.cost_analysis()
     if isinstance(ca, list):
         ca = ca[0]
     flops = float(ca.get("flops", 0.0))
     hbm = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()
-    coll = collective_stats(text)
+    coll = collective_stats(text, default_group=default_group or chips)
     return Roofline(flops=flops, hbm_bytes=hbm,
                     collective_bytes=float(coll.total_bytes),
                     chips=chips).finish()

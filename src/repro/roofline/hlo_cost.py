@@ -11,9 +11,16 @@ from the condition regions, and accumulates:
     bytes       sum of (output + operand) bytes of every materialized op
                 (post-fusion HLO: one line = one buffer) — an explicit
                 HBM-traffic model
-    collectives ring cost model per op (see analysis.collective_stats)
+    collectives ring cost model per op (see hlo_shapes.collective_moved_
+                bytes); async ``*-start`` tuple outputs are sliced to the
+                result element so the echoed input buffer is not counted
+                twice
 
 All numbers are per-device (the HLO is the SPMD-partitioned module).
+Shape/type parsing is shared with ``analysis.py`` via
+``repro.roofline.hlo_shapes``.  ``default_group`` is the fallback
+collective group size when an op has no parseable ``replica_groups`` —
+pass the real mesh size (e.g. ``chips`` from the dry-run mesh).
 """
 from __future__ import annotations
 
@@ -21,15 +28,13 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
-    "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1,
-}
+from repro.roofline.hlo_shapes import (COLLECTIVE_KINDS,
+                                       collective_moved_bytes, group_size,
+                                       op_name, result_bytes,
+                                       result_segment, shapes_bytes_elems)
+from repro.roofline.hlo_shapes import DTYPE_BYTES as _DTYPE_BYTES  # noqa: F401
+from repro.roofline.hlo_shapes import SHAPE_RE as _SHAPE_RE
 
-_SHAPE_RE = re.compile(
-    r"\b(pred|s4|u4|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)"
-    r"\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT )?%([\w.\-]+) = ")
 _OPND_RE = re.compile(r"%([\w.\-]+)")
 _COMP_HDR = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\(")
@@ -45,19 +50,6 @@ _SKIP_BYTES_OPS = (
     "parameter(", "constant(", "tuple(", "get-tuple-element(", "bitcast(",
     "after-all(", "partition-id(", "replica-id(",
 )
-
-
-def _shapes_bytes_elems(segment: str) -> Tuple[int, int]:
-    """Total (bytes, elems) of all shapes in a type segment."""
-    total_b = total_e = 0
-    for m in _SHAPE_RE.finditer(segment):
-        n = 1
-        if m.group(2):
-            for d in m.group(2).split(","):
-                n *= int(d)
-        total_b += n * _DTYPE_BYTES[m.group(1)]
-        total_e += n
-    return total_b, total_e
 
 
 @dataclasses.dataclass
@@ -102,21 +94,24 @@ class HLOCostModel:
             self.comps[cur].append(s)
             dm = _DEF_RE.match(s)
             if dm and " = " in s:
-                typ = s.split(" = ", 1)[1]
-                # type segment = up to the op name's '('
-                self.sym[dm.group(1)] = typ
+                # output type segment only (tuple heads sliced correctly)
+                self.sym[dm.group(1)] = result_segment(s)
 
     def _out_segment(self, line: str) -> str:
-        rhs = line.split(" = ", 1)[1]
-        # type part ends at the first op-name token: find ` opname(`
-        m = re.match(r"^(\([^)]*\)|[\w\[\]{},:*\s]+?)\s+[\w\-]+\(", rhs)
-        return m.group(1) if m else rhs
+        return result_segment(line)
 
     def _operand_shapes(self, line: str) -> List[str]:
-        """Type segments of the operands referenced on the line."""
+        """Type segments of the operands referenced on the line.  The
+        operand list starts after the op name, NOT at the first ``(`` of
+        the line (which is the tuple head for tuple-typed outputs)."""
+        if " = " not in line:
+            return []
         rhs = line.split(" = ", 1)[1]
-        paren = rhs.find("(")
-        args = rhs[paren + 1:]
+        tail = rhs[len(result_segment(line)):]
+        paren = tail.find("(")
+        if paren < 0:
+            return []
+        args = tail[paren + 1:]
         out = []
         for m in _OPND_RE.finditer(args.split(")", 1)[0]):
             seg = self.sym.get(m.group(1))
@@ -126,7 +121,7 @@ class HLOCostModel:
 
     def _dot_flops(self, line: str) -> float:
         seg = self._out_segment(line)
-        out_b, out_e = _shapes_bytes_elems(seg)
+        out_b, out_e = shapes_bytes_elems(seg)
         lc = _LHS_C_RE.search(line)
         dims = [int(x) for x in lc.group(1).split(",")] if lc and lc.group(1) \
             else []
@@ -145,7 +140,7 @@ class HLOCostModel:
 
     def _conv_flops(self, line: str) -> float:
         seg = self._out_segment(line)
-        _, out_e = _shapes_bytes_elems(seg)
+        _, out_e = shapes_bytes_elems(seg)
         w = _WINDOW_RE.search(line)
         ksize = 1
         if w:
@@ -160,43 +155,6 @@ class HLOCostModel:
                 cin = rhs_dims[-2] if len(rhs_dims) >= 2 else 1
         return 2.0 * out_e * ksize * cin
 
-    def _fusion_param_reads(self, child: str):
-        """param_index -> bytes actually read, for fusion params that are
-        only consumed by slicing ops inside the fusion."""
-        if not hasattr(self, "_fusion_clamp_cache"):
-            self._fusion_clamp_cache = {}
-        if child in self._fusion_clamp_cache:
-            return self._fusion_clamp_cache[child]
-        lines = self.comps.get(child, ())
-        param_of = {}      # %name -> param index
-        reads = {}
-        uses = {}          # param index -> list of (op, out_bytes)
-        for s in lines:
-            dm = _DEF_RE.match(s)
-            if not dm:
-                continue
-            name = dm.group(1)
-            rhs = s.split(" = ", 1)[1]
-            pm = re.search(r"parameter\((\d+)\)", rhs)
-            if pm:
-                param_of[name] = int(pm.group(1))
-                continue
-            opm = re.search(r"\b([\w\-]+)\(", rhs)
-            op = opm.group(1) if opm else ""
-            seg = self._out_segment(s)
-            out_b, _ = _shapes_bytes_elems(seg)
-            for om in _OPND_RE.finditer(rhs[rhs.find("("):]):
-                if om.group(1) in param_of:
-                    idx = param_of[om.group(1)]
-                    uses.setdefault(idx, []).append((op, out_b))
-        for idx, us in uses.items():
-            if us and all(o in ("dynamic-slice", "slice", "gather",
-                                "dynamic-update-slice", "bitcast")
-                          for o, _ in us):
-                reads[idx] = sum(b for _, b in us)
-        self._fusion_clamp_cache[child] = reads
-        return reads
-
     def _trip_count(self, cond_comp: str) -> int:
         best = 1
         for line in self.comps.get(cond_comp, ()):
@@ -207,14 +165,11 @@ class HLOCostModel:
     # -- per-computation direct stats ----------------------------------------
 
     def _direct(self, name: str) -> CompStats:
-        from repro.roofline.analysis import (_COLLECTIVE_KINDS, _group_size)
         st = CompStats()
         for line in self.comps.get(name, ()):
             if " = " not in line:
                 continue
-            rhs = line.split(" = ", 1)[1]
-            opm = re.search(r"\b([\w\-]+)\(", rhs)
-            op = opm.group(1) if opm else ""
+            op = op_name(line)
             # call graph
             if op == "while":
                 b = _BODY_RE.search(line)
@@ -236,21 +191,13 @@ class HLOCostModel:
                 st.flops += self._dot_flops(line)
             elif op == "convolution":
                 st.flops += self._conv_flops(line)
-            # collectives
+            # collectives: -start carries the cost once, -done is free
             matched_coll = False
-            for kind in _COLLECTIVE_KINDS:
+            for kind in COLLECTIVE_KINDS:
                 if re.match(rf"{kind}(-start)?$", op or ""):
-                    seg = self._out_segment(line)
-                    out_b, _ = _shapes_bytes_elems(seg)
-                    G = _group_size(line, self.default_group)
-                    ring = (G - 1) / max(G, 1)
-                    if kind == "reduce-scatter":
-                        moved = ring * G * out_b
-                    elif kind == "all-reduce":
-                        moved = 2 * ring * out_b
-                    else:
-                        moved = ring * out_b
-                    st.coll_bytes += moved
+                    out_b = result_bytes(line)
+                    G = group_size(line, self.default_group)
+                    st.coll_bytes += collective_moved_bytes(kind, out_b, G)
                     st.coll_counts[kind] = st.coll_counts.get(kind, 0) + 1
                     matched_coll = True
                     break
@@ -266,7 +213,7 @@ class HLOCostModel:
             lhs_name = line.split(" = ", 1)[0]
             if op == "dynamic-update-slice" or (
                     op == "fusion" and "dynamic-update-slice" in lhs_name):
-                opnds = sorted((_shapes_bytes_elems(oseg)[0]
+                opnds = sorted((shapes_bytes_elems(oseg)[0]
                                 for oseg in self._operand_shapes(line)),
                                reverse=True)
                 upd = opnds[1] if len(opnds) >= 2 else (
@@ -276,9 +223,7 @@ class HLOCostModel:
                         "dynamic-slice", "gather", "scatter", "reduce",
                         "concatenate", "pad", "sort", "transpose",
                         "reshape") or matched_coll:
-                seg = self._out_segment(line)
-                out_b, _ = _shapes_bytes_elems(seg)
-                st.bytes += 2 * out_b
+                st.bytes += 2 * result_bytes(line)
         return st
 
     # -- recursive totals -----------------------------------------------------

@@ -1,0 +1,203 @@
+"""The ONE HLO shape/type parser shared by the perf-model layer.
+
+``analysis.py`` and ``hlo_cost.py`` used to carry private copies of the
+dtype table and shape regex that had drifted apart (``analysis`` lacked
+``s4``/``u4``/``token``; its tuple-head slicing was wrong for async
+collectives and kept a dead ``paren`` variable).  Everything that reads
+shapes out of post-optimization HLO text now goes through this module:
+
+    DTYPE_BYTES / SHAPE_RE        dtype table + ``f32[2,3]{1,0}`` matcher
+    shapes_bytes_elems(segment)   total (bytes, elems) of every shape in a
+                                  type segment
+    result_segment(line)          the *output* type segment of one HLO
+                                  instruction line (tuple heads sliced at
+                                  the matching paren, not the first ``)``)
+    tuple_elements(segment)       split a ``(f32[..], u32[])`` tuple head
+    line_output_bytes(line)       bytes of the op's logical result.  For
+                                  async ``*-start`` ops whose tuple output
+                                  aliases the input buffer(s) — e.g.
+                                  ``(f32[b], f32[B]) all-gather-start`` —
+                                  only the RESULT element is counted, not
+                                  the echoed input (the old double count).
+    group_size(line, default)     collective group size from
+                                  ``replica_groups={{...}}`` or the iota
+                                  ``[n_groups,group_size]<=[...]`` form;
+                                  ``default`` is the caller's real mesh
+                                  group size, not a hardcoded 2.
+
+All byte counts treat sub-byte dtypes (``s4``/``u4``) as one byte per
+element (an upper bound; XLA packs two per byte) and ``token``/opaque as 0.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+# e.g. "bf16[256,4096]{1,0}" or "f32[128]" or "token[]"
+SHAPE_RE = re.compile(
+    r"\b(" + "|".join(sorted(DTYPE_BYTES, key=len, reverse=True)) +
+    r")\[([0-9,]*)\]")
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# replica_groups={{0,1},{2,3}} -> first group; [n_groups,group_size]<=[...]
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# op-name token right before the operand list, e.g. " all-gather-start(".
+# The leading whitespace/anchor matters: TPU layouts like {1,0:T(8,128)}
+# embed "T(" with no preceding space and must not match.
+_OP_RE = re.compile(r"(?:^|\s)([\w\-]+)\(")
+
+
+def shape_bytes(m: re.Match) -> int:
+    """Bytes of one SHAPE_RE match."""
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dt]
+
+
+def shapes_bytes_elems(segment: str) -> Tuple[int, int]:
+    """Total (bytes, elems) over every shape in a type segment."""
+    total_b = total_e = 0
+    for m in SHAPE_RE.finditer(segment):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total_b += n * DTYPE_BYTES[m.group(1)]
+        total_e += n
+    return total_b, total_e
+
+
+def op_name(line: str) -> str:
+    """The HLO opcode of one instruction line ('' if unparsable)."""
+    if " = " not in line:
+        return ""
+    rhs = line.split(" = ", 1)[1]
+    seg = result_segment(line)
+    m = _OP_RE.search(rhs[len(seg):])
+    return m.group(1) if m else ""
+
+
+def result_segment(line: str) -> str:
+    """The output type segment of an HLO instruction line: the text between
+    `` = `` and the op name.  Tuple heads are sliced at the *matching*
+    close paren (``(f32[2]{0}, u32[])`` has an inner ``{0}``, so the first
+    ``)`` heuristic the old parser used mis-sliced them)."""
+    if " = " not in line:
+        return ""
+    rhs = line.split(" = ", 1)[1]
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[:i + 1]
+        return rhs
+    m = _OP_RE.search(rhs)
+    if m:
+        return rhs[:m.start()]
+    m2 = SHAPE_RE.search(rhs)
+    return rhs[:m2.end()] if m2 else rhs
+
+
+def tuple_elements(segment: str) -> List[str]:
+    """Split a tuple type segment into element segments.  A non-tuple
+    segment comes back as a single element."""
+    seg = segment.strip()
+    if not seg.startswith("("):
+        return [seg]
+    inner = seg[1:-1] if seg.endswith(")") else seg[1:]
+    parts, depth, cur = [], 0, []
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts]
+
+
+def _is_async_start(op: str) -> bool:
+    return op.endswith("-start")
+
+
+def result_bytes(line: str) -> int:
+    """Bytes of the op's logical result.
+
+    Async ``*-start`` collectives return a tuple whose leading element is
+    the *input* buffer (``(f32[b], f32[B]) all-gather-start`` — the payload
+    the matching ``*-done`` yields is element 1).  Counting the whole tuple
+    double-counts the transfer; only the result element is counted here.
+    Other tuple outputs (variadic reduces, fusions) sum every element."""
+    seg = result_segment(line)
+    if not seg:
+        return 0
+    op = op_name(line)
+    elems = tuple_elements(seg)
+    if _is_async_start(op) and len(elems) >= 2:
+        # (input, result, [sync scalars...]) — take the result element
+        return shapes_bytes_elems(elems[1])[0]
+    return sum(shapes_bytes_elems(e)[0] for e in elems)
+
+
+def line_output_bytes(line: str) -> int:
+    """Back-compat name used by analysis.collective_stats."""
+    return result_bytes(line)
+
+
+def group_size(line: str, default: int) -> int:
+    """Collective group size from the instruction's ``replica_groups``
+    attribute.  ``default`` must be the caller's real mesh group size (the
+    number of participants when the HLO omits explicit groups) — the old
+    hardcoded ``default_group=2`` under-modeled every >2-way mesh."""
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [n_groups, group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    return max(int(default), 1)
+
+
+def collective_moved_bytes(kind: str, out_bytes: float, G: int) -> float:
+    """Ring cost model: per-device bytes moved by one collective.
+
+        all-gather          (G-1)/G * output_bytes
+        reduce-scatter      (G-1)/G * G * output_bytes  (= input bytes)
+        all-reduce          2 (G-1)/G * output_bytes
+        all-to-all          (G-1)/G * output_bytes
+        collective-permute  output_bytes
+    """
+    G = max(G, 1)
+    ring = (G - 1) / G
+    if kind == "reduce-scatter":
+        return ring * G * out_bytes
+    if kind == "all-reduce":
+        return 2 * ring * out_bytes
+    if kind == "collective-permute":
+        return float(out_bytes)
+    return ring * out_bytes

@@ -176,7 +176,7 @@ def check_comm_reduction():
     stats = {}
     for red in ("fastclip", "allgather_ad"):
         comp = jax.jit(make(red)).lower(*args).compile()
-        stats[red] = collective_stats(comp.as_text())
+        stats[red] = collective_stats(comp.as_text(), default_group=8)
         print(red, stats[red].total_bytes, stats[red].counts)
     ok = (stats["fastclip"].total_bytes < 0.6
           * stats["allgather_ad"].total_bytes)

@@ -1,0 +1,227 @@
+"""The kernel autotune layer (repro.kernels.autotune).
+
+Three contracts:
+  table     JSON round-trip; missing/corrupt files yield an EMPTY table
+            (fresh checkout == shipped defaults, never an error).
+  consult   kernels ask ``kernel_config`` only for knobs the caller left
+            unset; a table hit for the (bucket, dtype, backend) is used,
+            a miss falls back to the shipped defaults — which must equal
+            the kernel-module constants they mirror.
+  planted   on the exact-arithmetic planted cases every candidate tile
+            config must match the dense oracle BITWISE (the parity gate
+            benchmarks/autotune_bench.py applies to the full sweep).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as AT
+from repro.kernels import gcl_loss as GL
+from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_mha
+from repro.kernels.gcl_loss import gcl_pair_grads, gcl_pair_stats
+from repro.models.attention import naive_attention
+
+
+@pytest.fixture
+def clean_cache():
+    AT.reset_cache()
+    yield
+    AT.reset_cache()
+
+
+# -- table format ------------------------------------------------------------
+
+def test_defaults_mirror_kernel_constants():
+    """autotune.DEFAULTS are literal copies of the kernel-module shipped
+    constants (import cycle keeps them duplicated; this pins the mirror)."""
+    assert AT.DEFAULTS["gcl_stats"] == {"br": GL.BR, "bc": GL.BC,
+                                        "d_block": None}
+    assert AT.DEFAULTS["gcl_grads"] == {"br": GL.BR, "bc": GL.BC,
+                                        "d_block": None}
+    # models/attention.py chunked fallback: q_chunk or 512, kv_chunk or 1024
+    assert AT.DEFAULTS["flash_mha"] == {"q_chunk": 512, "kv_chunk": 1024}
+
+
+def test_shape_bucket_pow2_and_sorted():
+    assert AT.shape_bucket(b=100, d=512) == "b=128,d=512"
+    assert AT.shape_bucket(d=3, b=1) == "b=1,d=4"
+    assert AT.shape_bucket(sq=129) == "sq=256"
+
+
+def test_table_roundtrip(tmp_path):
+    t = AT.TuningTable()
+    t.record("gcl_stats", "b=128,cols=128,d=512", jnp.float32,
+             "cpu-interpret", {"br": 256, "bc": 128, "d_block": None},
+             us=123.456)
+    p = str(tmp_path / "tab.json")
+    t.save(p)
+    t2 = AT.load_table(p)
+    hit = t2.lookup("gcl_stats", "b=128,cols=128,d=512", jnp.float32,
+                    "cpu-interpret")
+    # timing metadata is stripped; only config knobs come back
+    assert hit == {"br": 256, "bc": 128, "d_block": None}
+    doc = json.load(open(p))
+    assert doc["version"] == 1
+    key = "gcl_stats|b=128,cols=128,d=512|float32|cpu-interpret"
+    assert doc["entries"][key]["us"] == 123.46
+
+
+def test_missing_and_corrupt_files_yield_empty_table(tmp_path):
+    assert AT.load_table(str(tmp_path / "nope.json")).entries == {}
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert AT.load_table(str(bad)).entries == {}
+    nolist = tmp_path / "nolist.json"
+    nolist.write_text(json.dumps({"version": 1, "entries": [1, 2]}))
+    assert AT.load_table(str(nolist)).entries == {}
+
+
+def test_lookup_miss_on_other_backend():
+    t = AT.TuningTable()
+    t.record("flash_mha", "hd=64,sk=512,sq=512", jnp.float32, "tpu",
+             {"q_chunk": 1024, "kv_chunk": 1024})
+    assert t.lookup("flash_mha", "hd=64,sk=512,sq=512", jnp.float32,
+                    "cpu-interpret") is None
+
+
+# -- consult + fallback ------------------------------------------------------
+
+def test_kernel_config_hit_and_fallback(tmp_path, monkeypatch, clean_cache):
+    t = AT.TuningTable()
+    t.record("gcl_stats", AT.shape_bucket(b=100, cols=100, d=512),
+             jnp.float32, AT.backend_key(True),
+             {"br": 256, "bc": 64, "d_block": None})
+    p = str(tmp_path / "tab.json")
+    t.save(p)
+    monkeypatch.setenv("REPRO_TUNING_TABLE", p)
+    AT.reset_cache()
+    hit = AT.kernel_config("gcl_stats", interpret=True, b=100, cols=100,
+                           d=512)
+    assert hit == {"br": 256, "bc": 64, "d_block": None}
+    # bucket miss -> shipped defaults
+    miss = AT.kernel_config("gcl_stats", interpret=True, b=100, cols=100,
+                            d=4096)
+    assert miss == AT.DEFAULTS["gcl_stats"]
+    with pytest.raises(KeyError):
+        AT.kernel_config("no_such_kernel")
+
+
+def test_kernel_config_fresh_checkout_defaults(tmp_path, monkeypatch,
+                                               clean_cache):
+    """No table file at all: every kernel gets its shipped defaults."""
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(tmp_path / "absent.json"))
+    AT.reset_cache()
+    for kernel in AT.DEFAULTS:
+        assert AT.kernel_config(kernel, interpret=True, b=64, cols=64,
+                                d=64) == AT.DEFAULTS[kernel]
+
+
+def test_gcl_kernel_consults_table(tmp_path, monkeypatch, clean_cache):
+    """gcl_pair_stats with no explicit tiles asks the table and runs the
+    recorded config; the result stays bitwise-equal to the oracle (the
+    planted case makes equality exact for ANY tiling)."""
+    b, d = 128, 256
+    t = AT.TuningTable()
+    t.record("gcl_stats", AT.shape_bucket(b=b, cols=b, d=d), jnp.float32,
+             AT.backend_key(True), {"br": 256, "bc": 256, "d_block": None})
+    p = str(tmp_path / "tab.json")
+    t.save(p)
+    monkeypatch.setenv("REPRO_TUNING_TABLE", p)
+    AT.reset_cache()
+
+    calls = []
+    real = AT.kernel_config
+
+    def spy(kernel, **kw):
+        cfg = real(kernel, **kw)
+        calls.append((kernel, dict(cfg)))
+        return cfg
+
+    monkeypatch.setattr(AT, "kernel_config", spy)
+    e1, e2, _, tau = AT.planted_gcl_case(b, d)
+    out_k = gcl_pair_stats(e1, e2, tau, tau, interpret=True)
+    out_r = R.gcl_pair_stats_ref(e1, e2, tau, tau)
+    assert calls and calls[0][0] == "gcl_stats"
+    assert calls[0][1]["br"] == 256       # the table entry, not the default
+    for a, b_ in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_explicit_tiles_bypass_table(tmp_path, monkeypatch, clean_cache):
+    """An explicit br=/bc= argument wins: kernel_config is not consulted."""
+    monkeypatch.setenv("REPRO_TUNING_TABLE", str(tmp_path / "absent.json"))
+    AT.reset_cache()
+    calls = []
+    real = AT.kernel_config
+
+    def spy(kernel, **kw):
+        calls.append(kernel)
+        return real(kernel, **kw)
+
+    monkeypatch.setattr(AT, "kernel_config", spy)
+    e1, e2, _, tau = AT.planted_gcl_case(64, 128)
+    gcl_pair_stats(e1, e2, tau, tau, interpret=True, br=128, bc=128,
+                   d_block=128)
+    assert calls == []
+
+
+# -- planted exact-arithmetic parity ----------------------------------------
+
+@pytest.mark.parametrize("br,bc,d_block", [(128, 128, None),
+                                           (128, 256, None),
+                                           (256, 128, 128)])
+def test_planted_gcl_bitwise_parity(br, bc, d_block):
+    """Stats AND grads bitwise vs the dense oracle on the planted batch for
+    several tilings — the gate every sweep candidate must pass."""
+    b, d = 128, 256
+    e1, e2, lwt, tau = AT.planted_gcl_case(b, d)
+    out_k = gcl_pair_stats(e1, e2, tau, tau, interpret=True, br=br, bc=bc,
+                           d_block=d_block)
+    out_r = R.gcl_pair_stats_ref(e1, e2, tau, tau)
+    for a, b_ in zip(out_k, out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+    # kernel takes lwt = log w - log tau; oracle takes lw = log w
+    lw = lwt + jnp.log(tau)
+    g_k = gcl_pair_grads(e1, e2, lwt, lwt, tau, tau, interpret=True,
+                         br=br, bc=bc, d_block=d_block)
+    g_r = R.gcl_pair_grads_ref(e1, e2, lw, lw, tau, tau)
+    for a, b_ in zip(g_k, g_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("qc,kvc", [(64, 128), (128, 64), (256, 256)])
+def test_planted_attention_bitwise_parity(qc, kvc):
+    """flash_mha forward and every grad (dq, dk, dv) bitwise vs the naive
+    oracle on the planted non-causal batch, across chunkings."""
+    batch, seq, heads, hd = 2, 256, 2, 64
+    q, k, v, ct = AT.planted_attention_case(batch, seq, heads, hd)
+
+    def fwd_bwd(f):
+        out, vjp = jax.vjp(f, q, k, v)
+        return (out,) + vjp(ct)
+
+    got = fwd_bwd(lambda a, b, c: flash_mha(
+        a, b, c, causal=False, interpret=True, q_chunk=qc, kv_chunk=kvc))
+    want = fwd_bwd(lambda a, b, c: naive_attention(a, b, c, causal=False))
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_checked_in_table_is_well_formed():
+    """The committed tuning table parses, and every entry's knobs are a
+    subset of its kernel's defaults (so lookup always yields a complete,
+    runnable config)."""
+    t = AT.load_table(AT._DEFAULT_PATH)
+    if not os.path.exists(AT._DEFAULT_PATH):
+        pytest.skip("no checked-in table")
+    assert t.entries, "checked-in table exists but parsed empty"
+    for key, e in t.entries.items():
+        kernel = key.split("|", 1)[0]
+        assert kernel in AT.DEFAULTS
+        knobs = {k for k in e if k != "us"}
+        assert knobs == set(AT.DEFAULTS[kernel])

@@ -1,0 +1,301 @@
+"""The perf-model layer: shared HLO shape parser, HLOCostModel /
+collective_stats on hand-written HLO fixtures, roofline_table behavior,
+and (subprocess) the model vs the real lowered fsdp step.
+
+The fixtures make every expected number computable by hand: a while loop
+whose dot must be trip-multiplied, a fusion whose internals contribute
+flops but whose bytes are counted once at the fusion line, one instance
+of every collective kind under the ring cost model, and the async
+``*-start`` tuple whose echoed input buffer must NOT be double-counted.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.roofline import hlo_shapes as HS
+from repro.roofline.analysis import collective_stats
+from repro.roofline.hlo_cost import HLOCostModel
+
+HELPER = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "helpers", "roofline_check.py")
+
+
+# -- shared parser units -----------------------------------------------------
+
+def test_dtype_table_covers_subbyte_and_token():
+    assert HS.DTYPE_BYTES["s4"] == 1 and HS.DTYPE_BYTES["u4"] == 1
+    assert HS.DTYPE_BYTES["token"] == 0
+    assert HS.DTYPE_BYTES["bf16"] == 2
+
+
+def test_shapes_bytes_elems():
+    assert HS.shapes_bytes_elems("bf16[256,4096]{1,0}") == (2 * 256 * 4096,
+                                                            256 * 4096)
+    assert HS.shapes_bytes_elems("f32[]") == (4, 1)
+    b, e = HS.shapes_bytes_elems("(f32[8], u32[2])")
+    assert (b, e) == (32 + 8, 10)
+
+
+def test_op_name_ignores_tpu_layout_T():
+    """TPU layouts embed ``T(`` with no preceding space; the op-name regex
+    must not match it."""
+    line = "%x = f32[8,128]{1,0:T(8,128)} copy(%y)"
+    assert HS.op_name(line) == "copy"
+    assert HS.result_segment(line).strip() == "f32[8,128]{1,0:T(8,128)}"
+
+
+def test_result_segment_tuple_matching_paren():
+    line = ("%ags = (f32[2]{0}, f32[8]{0}) all-gather-start(%p), "
+            "replica_groups={{0,1,2,3}}, dimensions={0}")
+    assert HS.result_segment(line) == "(f32[2]{0}, f32[8]{0})"
+    assert HS.op_name(line) == "all-gather-start"
+    assert HS.tuple_elements("(f32[2]{0}, f32[8]{0})") == ["f32[2]{0}",
+                                                          "f32[8]{0}"]
+
+
+def test_async_start_result_bytes_counts_payload_once():
+    """(input, result) tuple of ``*-start``: only the RESULT element is the
+    transfer; counting the echoed input double-counted every async
+    collective."""
+    line = ("%ags = (f32[1024]{0}, f32[4096]{0}) all-gather-start(%p0), "
+            "replica_groups={{0,1,2,3}}, dimensions={0}")
+    assert HS.result_bytes(line) == 4096 * 4
+    # non-async tuples sum every element
+    line2 = "%t = (f32[8], f32[8]) custom-call(%a)"
+    assert HS.result_bytes(line2) == 64
+
+
+def test_group_size_formats():
+    assert HS.group_size("... replica_groups={{0,1},{2,3}} ...", 7) == 2
+    assert HS.group_size("... replica_groups={{0,1,2,3}} ...", 7) == 4
+    # iota form: [n_groups, group_size]<=[...]
+    assert HS.group_size("... replica_groups=[2,4]<=[8] ...", 7) == 4
+    # absent -> the caller's real mesh group size, not a hardcoded 2
+    assert HS.group_size("%ar = f32[4] all-reduce(%x)", 7) == 7
+
+
+def test_collective_moved_bytes_ring_model():
+    assert HS.collective_moved_bytes("all-gather", 1024, 4) == 768
+    assert HS.collective_moved_bytes("reduce-scatter", 1024, 4) == 3072
+    assert HS.collective_moved_bytes("all-reduce", 1024, 4) == 1536
+    assert HS.collective_moved_bytes("all-to-all", 1024, 4) == 768
+    assert HS.collective_moved_bytes("collective-permute", 1024, 4) == 1024
+    # degenerate single-participant group moves nothing (except permute)
+    assert HS.collective_moved_bytes("all-gather", 1024, 1) == 0
+
+
+# -- HLOCostModel on fixtures ------------------------------------------------
+
+FIX_WHILE = """\
+HloModule while_fixture
+
+%cond (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %t = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %t), direction=LT
+}
+
+%bodyc (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64] get-tuple-element(%p), index=1
+  %d = f32[64,64] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %r = (s32[], f32[64,64]) tuple(%ip, %d)
+}
+
+ENTRY %main (a: f32[64,64]) -> (s32[], f32[64,64]) {
+  %a = f32[64,64] parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[64,64]) tuple(%z, %a)
+  ROOT %w = (s32[], f32[64,64]) while(%init), condition=%cond, body=%bodyc
+}
+"""
+
+
+def test_while_trip_count_multiplies_body():
+    """The loop dot runs 5x (trip count from the cond constant): flops and
+    bytes are 5x the single-iteration numbers — the exact under-reporting
+    ``compiled.cost_analysis()`` suffers for scan-over-layers models."""
+    cm = HLOCostModel(FIX_WHILE, default_group=2)
+    flops, hbm, coll = cm.totals()
+    per_iter_flops = 2 * 64 * 64 * 64      # out elems * contraction
+    per_iter_bytes = 2 * 64 * 64 * 4       # write + downstream read
+    assert flops == 5 * per_iter_flops
+    assert hbm == 5 * per_iter_bytes
+    assert coll == 0 and cm.collective_counts() == {}
+
+
+FIX_FUSION = """\
+HloModule fusion_fixture
+
+%fcomp (pa: f32[128,64], pb: f32[64,128]) -> f32[128,128] {
+  %pa = f32[128,64] parameter(0)
+  %pb = f32[64,128] parameter(1)
+  ROOT %d = f32[128,128] dot(%pa, %pb), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+ENTRY %main (x: f32[128,64], y: f32[64,128]) -> f32[128,128] {
+  %x = f32[128,64] parameter(0)
+  %y = f32[64,128] parameter(1)
+  ROOT %f = f32[128,128] fusion(%x, %y), kind=kOutput, calls=%fcomp
+}
+"""
+
+
+def test_fusion_bytes_counted_once_flops_from_internals():
+    """Fusion internals are one buffer on TPU: the dot inside contributes
+    its flops, but HBM bytes come only from the fusion line itself."""
+    cm = HLOCostModel(FIX_FUSION, default_group=2)
+    flops, hbm, _ = cm.totals()
+    assert flops == 2 * 128 * 128 * 64
+    assert hbm == 2 * 128 * 128 * 4        # fusion output only, 2x
+
+
+FIX_COLLECTIVES = """\
+HloModule coll_fixture
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %ar = f32[1024] all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096] all-gather(%ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[1024] reduce-scatter(%ag), replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add
+  %aa = f32[1024] all-to-all(%rs), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %cp = f32[1024] collective-permute(%aa), source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+}
+"""
+
+# hand-computed ring-model bytes at G=4 (permute has no replica_groups ->
+# default_group=4 must be threaded, not a hardcoded 2)
+_EXPECT_COLL = {
+    "all-reduce": 2 * (3 / 4) * 4096,
+    "all-gather": (3 / 4) * 16384,
+    "reduce-scatter": (3 / 4) * 4 * 4096,
+    "all-to-all": (3 / 4) * 4096,
+    "collective-permute": 4096,
+}
+
+
+def test_every_collective_kind_counted_and_ring_modeled():
+    cm = HLOCostModel(FIX_COLLECTIVES, default_group=4)
+    _, _, coll = cm.totals()
+    assert coll == sum(_EXPECT_COLL.values())
+    assert cm.collective_counts() == {k: 1 for k in _EXPECT_COLL}
+
+    st = collective_stats(FIX_COLLECTIVES, default_group=4)
+    assert st.counts == {k: 1 for k in _EXPECT_COLL}
+    for kind, want in _EXPECT_COLL.items():
+        assert st.bytes_by_kind[kind] == int(want)
+    assert st.total_bytes == sum(int(v) for v in _EXPECT_COLL.values())
+
+
+FIX_ASYNC = """\
+HloModule async_fixture
+
+ENTRY %main (p0: f32[1024]) -> f32[4096] {
+  %p0 = f32[1024] parameter(0)
+  %ags = (f32[1024], f32[4096]) all-gather-start(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  ROOT %agd = f32[4096] all-gather-done(%ags)
+}
+"""
+
+
+def test_async_pair_counted_once_payload_not_doubled():
+    """-start carries the cost (result element only), -done carries none:
+    one all-gather, (G-1)/G * 16 KiB moved — not 2x, not counted twice."""
+    for model_bytes, counts in (
+            (HLOCostModel(FIX_ASYNC, default_group=4).totals()[2],
+             HLOCostModel(FIX_ASYNC, default_group=4).collective_counts()),
+            (collective_stats(FIX_ASYNC, default_group=4).total_bytes,
+             collective_stats(FIX_ASYNC, default_group=4).counts)):
+        assert model_bytes == (3 / 4) * 16384
+        assert counts.get("all-gather") == 1
+        assert not any(v for k, v in counts.items() if k != "all-gather")
+
+
+def test_default_group_threads_through():
+    """No replica_groups anywhere: the caller's mesh size drives the ring
+    factor (the old hardcoded default_group=2 under-modeled every mesh)."""
+    hlo = """\
+HloModule g
+
+ENTRY %main (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  ROOT %ar = f32[1024] all-reduce(%p0), to_apply=%add
+}
+"""
+    b2 = HLOCostModel(hlo, default_group=2).totals()[2]
+    b8 = HLOCostModel(hlo, default_group=8).totals()[2]
+    assert b2 == 2 * (1 / 2) * 4096
+    assert b8 == 2 * (7 / 8) * 4096
+
+
+# -- roofline_table behavior -------------------------------------------------
+
+def test_roofline_table_errors_on_missing_dir(tmp_path, monkeypatch):
+    """A fresh checkout without dry-run artifacts is an explicit error,
+    never an empty table."""
+    from benchmarks import roofline_table as RT
+    monkeypatch.setattr(RT, "DRYRUN_DIR", str(tmp_path / "nope"))
+    with pytest.raises(FileNotFoundError, match="run_dryruns"):
+        RT.run()
+    monkeypatch.setattr(RT, "DRYRUN_DIR", str(tmp_path))  # exists, empty
+    with pytest.raises(FileNotFoundError):
+        RT.run()
+
+
+def test_roofline_table_reports_clip_contrastive_any_mesh(tmp_path,
+                                                          monkeypatch):
+    """A CLIP/contrastive artifact on a non-16x16 mesh produces a row (the
+    old bench filtered to mesh=='16x16' LM shapes and dropped everything)."""
+    from benchmarks import roofline_table as RT
+    art = {
+        "arch": "clip-vitb16-laion", "shape": "train_4k", "mesh": "2x2",
+        "chips": 4, "objective": "contrastive", "reduction": "fastclip",
+        "active_params": 10_000_000, "flops_per_device": 1e12,
+        "roofline": {"bottleneck": "collective", "compute_s": 0.01,
+                     "memory_s": 0.02, "collective_s": 0.03},
+    }
+    (tmp_path / "clip__train_4k__2x2.json").write_text(json.dumps(art))
+    monkeypatch.setattr(RT, "DRYRUN_DIR", str(tmp_path))
+    rows = RT.run()
+    names = [r[0] for r in rows]
+    assert ("roofline/clip-vitb16-laion/train_4k/2x2/contrastive-fastclip"
+            in names)
+    row = rows[names.index(
+        "roofline/clip-vitb16-laion/train_4k/2x2/contrastive-fastclip")]
+    assert "bottleneck=collective" in row[2]
+    # the loss-traffic model rows ride along
+    assert any("loss_pair_traffic" in n for n in names)
+
+
+def test_roofline_table_checked_in_artifacts_parse():
+    """Whatever experiments/dryrun/ ships must produce real rows."""
+    from benchmarks import roofline_table as RT
+    if not os.path.isdir(RT.DRYRUN_DIR):
+        pytest.skip("no dry-run artifacts checked in")
+    rows = RT.dryrun_rows()
+    assert rows and not any("ERROR" in r[2] for r in rows)
+
+
+# -- the model vs a real lowered fsdp step (subprocess, 4 devices) -----------
+
+def test_modeled_counts_match_real_fsdp_step():
+    """PR 5's HLO-tested sharding contract expressed through the cost
+    model: reduce-scatters present and per-kind counts consistent with
+    the raw instruction lines on the real lowered (data=2, fsdp=2) step."""
+    p = subprocess.run([sys.executable, HELPER], capture_output=True,
+                       text=True, timeout=600)
+    assert p.returncode == 0, (p.stdout[-3000:], p.stderr[-3000:])
+    assert "PASS" in p.stdout
