@@ -12,6 +12,11 @@ Modules covered (all on the reduced ViT-B/32-family CLIP):
                    subprocess with 4 forced host devices; its collective
                    counts are the PR 5 sharding contract (reduce-scatters
                    present, bounded all-reduces) expressed as numbers
+    step-fsdp-microbatch : the same step with the PR 10 comm/compute-
+                   overlap pipeline (TrainStepConfig.microbatch=2); the
+                   extra per-micro-step reduce-scatters and the
+                   still-bounded all-reduces are the overlap contract
+                   expressed as numbers
 
 Per module the row records modeled flops, HBM bytes, collective bytes and
 per-kind collective counts — machine-independent properties of the lowered
@@ -115,9 +120,11 @@ def _serve_encode_row(max_batch=8):
 
 
 def fsdp_worker():
-    """Runs in the 4-forced-host-device subprocess (see ``_fsdp_row``):
-    shard the train state on the (data=2, fsdp=2) mesh, lower the step,
-    model its HLO, print the row."""
+    """Runs in the 4-forced-host-device subprocess (see ``_fsdp_rows``):
+    shard the train state on the (data=2, fsdp=2) mesh, lower the step
+    unpipelined and with microbatch=2, model both HLOs, print the rows."""
+    import dataclasses
+
     from benchmarks.step_bench import SHARDED_MESH, _build
     from repro.core import shard_state as SS
     from repro.core import train_step as TS
@@ -131,14 +138,17 @@ def fsdp_worker():
     state, _ = SS.shard_train_state(state, mesh)
     _, _, idx, batch = next(iter(loader.steps(1)))
     batch = {k: jnp.asarray(v) for k, v in batch.items()}
-    compiled = donated_jit(TS.make_train_step(tc)).lower(
-        state, batch, jnp.asarray(idx)).compile()
-    row = _model_row(f"step-fsdp-d{data_sz}f{fsdp_sz}", compiled.as_text(),
-                     default_group=fsdp_sz)
-    print(_ROW_MARK + json.dumps(row))
+    idx = jnp.asarray(idx)
+    for module, cfg in (
+            (f"step-fsdp-d{data_sz}f{fsdp_sz}", tc),
+            ("step-fsdp-microbatch", dataclasses.replace(tc, microbatch=2))):
+        compiled = donated_jit(TS.make_train_step(cfg)).lower(
+            state, batch, idx).compile()
+        row = _model_row(module, compiled.as_text(), default_group=fsdp_sz)
+        print(_ROW_MARK + json.dumps(row))
 
 
-def _fsdp_row():
+def _fsdp_rows():
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -148,11 +158,12 @@ def _fsdp_row():
     p = subprocess.run(
         [sys.executable, "-m", "benchmarks.modeled_cost", "--fsdp-worker"],
         capture_output=True, text=True, env=env, cwd=root, timeout=900)
-    for line in p.stdout.splitlines():
-        if line.startswith(_ROW_MARK):
-            return json.loads(line[len(_ROW_MARK):])
-    raise RuntimeError(f"fsdp modeled-cost worker failed "
-                       f"(rc={p.returncode}): {p.stderr[-2000:]}")
+    rows = [json.loads(line[len(_ROW_MARK):])
+            for line in p.stdout.splitlines() if line.startswith(_ROW_MARK)]
+    if not rows:
+        raise RuntimeError(f"fsdp modeled-cost worker failed "
+                           f"(rc={p.returncode}): {p.stderr[-2000:]}")
+    return rows
 
 
 def collect(skip_fsdp=False):
@@ -163,7 +174,7 @@ def collect(skip_fsdp=False):
         _serve_encode_row(),
     ]
     if not skip_fsdp:
-        rows.append(_fsdp_row())
+        rows.extend(_fsdp_rows())
     return rows
 
 

@@ -42,6 +42,24 @@ Durability contract (PR 6 — the fault-tolerance layer):
     ``sidecar``/``latest``/``done``) — the chaos battery
     (``repro.resilience.chaos``) SIGKILLs at these points to prove the
     invariants above.
+
+Multi-process checkpoints (PR 10 — ``jax.distributed`` runs): leaves
+sample-sharded over ``("data", "fsdp")`` (FCCO log-u buffers) are only
+partly addressable per process, so every rank writes its contiguous
+local block to a rank-tagged file (``ckpt_XXXXXXXX.rank00of02.npz``)
+followed by an atomic per-rank commit meta carrying the block's digest
+and global start offset.  Rank 0 — whose local shards cover every
+fsdp-sharded and replicated leaf on the node-aware mesh — writes the
+usual shard files, then waits on a **filesystem-polling barrier** for
+all rank metas (deliberately not a jax collective: saves may run on the
+async writer thread, which must never interleave device collectives
+with the main thread's step), folds the rank digests into the sidecar
+(``meta["ranks"]``), and only then writes ``latest`` — so ``latest``
+can never name a step whose cross-process files are incomplete.
+Non-primary ranks poll for that sidecar before returning, keeping all
+ranks' notion of the newest step in agreement.  Restore concatenates
+the rank blocks along the recorded dim in start order; single-process
+behavior is byte-identical to the pre-PR-10 format.
 """
 from __future__ import annotations
 
@@ -50,6 +68,7 @@ import os
 import queue
 import re
 import threading
+import time
 import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -58,6 +77,7 @@ import numpy as np
 
 _CKPT_RE = re.compile(r"^ckpt_(\d{8})\.(npz|json)$")
 _FSDP_AXIS = "fsdp"
+_DATA_AXIS = "data"
 
 # ---------------------------------------------------------------------------
 # Fault hook (chaos injection points; no-op in production)
@@ -148,21 +168,68 @@ def _leaf_fsdp_pieces(leaf):
     return dim, [by_start[k] for k in sorted(by_start)]
 
 
-def _snapshot(tree: Any, sharded: bool, copy: bool = False):
+def _leaf_axis_names(leaf) -> set:
+    """All mesh axis names in a leaf's PartitionSpec (empty for host
+    arrays / replicated leaves)."""
+    sharding = getattr(leaf, "sharding", None)
+    spec = getattr(sharding, "spec", None)
+    if spec is None:
+        return set()
+    names = set()
+    for entry in spec:
+        for n in (entry if isinstance(entry, tuple) else (entry,)):
+            if n:
+                names.add(n)
+    return names
+
+
+def _leaf_local_block(leaf, conv):
+    """(global_start, block) — this process's rows of a sample-sharded
+    leaf, merged from its addressable shards in global order.  The
+    node-aware mesh + shard-concatenated loader order make each
+    process's rows one contiguous block; raises if they are not."""
+    by_start = {}
+    for s in leaf.addressable_shards:
+        st = int(s.index[0].start or 0)
+        if st not in by_start:
+            by_start[st] = conv(s.data)
+    starts = sorted(by_start)
+    rows = sum(by_start[st].shape[0] for st in starts)
+    if starts and (starts[-1] + by_start[starts[-1]].shape[0]
+                   - starts[0]) != rows:
+        raise ValueError(
+            "sample-sharded leaf's local shards are not contiguous "
+            f"(starts {starts}); the rank-block checkpoint format "
+            "requires the node-aware (data, fsdp) device layout")
+    block = np.concatenate([by_start[st] for st in starts], axis=0)
+    return (starts[0] if starts else 0), block
+
+
+def _snapshot(tree: Any, sharded: bool, copy: bool = False,
+              multiprocess: bool = False):
     """Synchronously pull every leaf to host memory.  Returns
     (pieces: {key: [np.ndarray per shard piece]}, dims: {key: concat
-    dim}, order: [key]).  ``sharded=False`` forces whole-leaf gathers
-    (one piece per key).  ``copy=True`` forces owned host buffers —
-    required for async writes: ``np.asarray`` may alias the live (soon
-    donated/mutated) buffer on the CPU backend."""
+    dim}, order: [key], local: {key: (start, block)}).  ``sharded=False``
+    forces whole-leaf gathers (one piece per key).  ``copy=True`` forces
+    owned host buffers — required for async writes: ``np.asarray`` may
+    alias the live (soon donated/mutated) buffer on the CPU backend.
+    ``multiprocess=True`` routes sample-sharded leaves (spec touches the
+    ``data`` axis — only partly addressable per process) into ``local``
+    as this rank's contiguous block; fsdp-sharded and replicated leaves
+    stay process-locally recoverable on the node-aware mesh and land in
+    ``pieces`` as usual."""
     conv = (lambda a: np.array(a, copy=True)) if copy else np.asarray
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     pieces: Dict[str, List[np.ndarray]] = {}
     dims: Dict[str, int] = {}
     order = []
+    local: Dict[str, Tuple[int, np.ndarray]] = {}
     for path, leaf in flat:
         key = _path_str(path)
         order.append(key)
+        if multiprocess and _DATA_AXIS in _leaf_axis_names(leaf):
+            local[key] = _leaf_local_block(leaf, conv)
+            continue
         got = _leaf_fsdp_pieces(leaf) if sharded else None
         if got is None:
             pieces[key] = [conv(leaf)]
@@ -170,12 +237,66 @@ def _snapshot(tree: Any, sharded: bool, copy: bool = False):
             dim, parts = got
             dims[key] = dim
             pieces[key] = [conv(p) for p in parts]
-    return pieces, dims, order
+    return pieces, dims, order, local
 
 
 def _shard_file(directory: str, step: int, k: int, n: int) -> str:
     return os.path.join(directory,
                         f"ckpt_{step:08d}.shard{k:02d}of{n:02d}.npz")
+
+
+def _rank_file(directory: str, step: int, r: int, p: int) -> str:
+    return os.path.join(directory,
+                        f"ckpt_{step:08d}.rank{r:02d}of{p:02d}.npz")
+
+
+def _rank_meta_file(directory: str, step: int, r: int, p: int) -> str:
+    return os.path.join(directory,
+                        f"ckpt_{step:08d}.rank{r:02d}of{p:02d}.meta.json")
+
+
+def _read_json(path: str) -> Optional[Dict]:
+    if not os.path.exists(path):
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (ValueError, OSError):
+        return None
+
+
+def _wait_for(pred, timeout: float, what: str):
+    """Filesystem-polling barrier: spin on ``pred()`` (truthy result is
+    returned) until ``timeout`` seconds, then raise.  Used instead of a
+    jax collective so the async writer thread can synchronize ranks
+    without ever touching the devices."""
+    deadline = time.monotonic() + timeout
+    while True:
+        got = pred()
+        if got:
+            return got
+        if time.monotonic() > deadline:
+            raise RuntimeError(
+                f"multi-process checkpoint barrier timed out after "
+                f"{timeout:.0f}s waiting for {what} (a peer rank died "
+                "or fell behind)")
+        time.sleep(0.05)
+
+
+def _collect_rank_metas(directory: str, step: int, p: int):
+    metas = []
+    for r in range(p):
+        m = _read_json(_rank_meta_file(directory, step, r, p))
+        if m is None or m.get("step") != step or m.get("count") != p:
+            return None
+        metas.append(m)
+    return metas
+
+
+def _sidecar_committed(directory: str, step: int, p: int) -> bool:
+    meta = _read_meta(directory, step)
+    return bool(meta and meta.get("step") == step
+                and int(meta.get("ranks", {}).get("count", 0)) == p)
 
 
 def _step_files(directory: str, step: int, nshards: int) -> List[str]:
@@ -187,16 +308,52 @@ def _step_files(directory: str, step: int, nshards: int) -> List[str]:
 
 def _write_step(directory: str, step: int, pieces, dims, order,
                 metadata: Optional[Dict], keep_last: int = 0,
-                keep_every: int = 0) -> List[str]:
+                keep_every: int = 0, local=None, process_index: int = 0,
+                process_count: int = 1,
+                barrier_timeout: float = 120.0) -> List[str]:
     """The single durable-write path under both sync and async saves:
     atomic array file(s), then the digest-carrying sidecar, then the
-    ``latest`` marker, then retention."""
+    ``latest`` marker, then retention.  With ``process_count > 1`` every
+    rank writes its ``local`` sample-sharded blocks to a rank file plus
+    a commit meta; rank 0 additionally writes the shard files and — only
+    after the filesystem barrier has seen every rank's commit meta — the
+    sidecar and ``latest``, so the marker can never name a step some
+    rank has not finished.  Non-primary ranks return once the sidecar
+    is committed."""
     os.makedirs(directory, exist_ok=True)
-    nshards = max(len(v) for v in pieces.values())
-    digests = {key: [_digest(p) for p in parts]
+    local = local or {}
+    mp = process_count > 1
+    _fault("pre_npz")
+    if mp:
+        r, p = process_index, process_count
+        rank_arrays = {key: blk for key, (start, blk) in local.items()}
+
+        def write_rank_npz(tmp, a=rank_arrays):
+            with open(tmp, "wb") as f:
+                np.savez_compressed(f, **a)
+
+        _atomic_replace(_rank_file(directory, step, r, p),
+                        write_rank_npz, "npz")
+        rank_meta = {"step": step, "rank": r, "count": p,
+                     "arrays": {key: {"start": int(start),
+                                      "digest": _digest(blk)}
+                                for key, (start, blk) in local.items()}}
+
+        def write_rank_meta(tmp):
+            with open(tmp, "w") as f:
+                json.dump(rank_meta, f)
+
+        _atomic_replace(_rank_meta_file(directory, step, r, p),
+                        write_rank_meta, "rank_meta")
+        if r != 0:
+            _wait_for(lambda: _sidecar_committed(directory, step, p),
+                      barrier_timeout, f"sidecar commit of step {step}")
+            _fault("done")
+            return [_rank_file(directory, step, r, p)]
+    nshards = max((len(v) for v in pieces.values()), default=1)
+    digests = {key: [_digest(piece) for piece in parts]
                for key, parts in pieces.items()}
     paths = _step_files(directory, step, nshards)
-    _fault("pre_npz")
     for k, path_npz in enumerate(paths):
         arrays = {key: parts[k] for key, parts in pieces.items()
                   if k < len(parts)}
@@ -210,6 +367,21 @@ def _write_step(directory: str, step: int, pieces, dims, order,
             "digests": digests}
     if nshards > 1:
         meta["shards"] = {"count": nshards, "dims": dims}
+    if mp:
+        metas = _wait_for(
+            lambda: _collect_rank_metas(directory, step, process_count),
+            barrier_timeout, f"all {process_count} rank metas of step "
+            f"{step}")
+        meta["ranks"] = {
+            "count": process_count,
+            "arrays": {key: {"dim": 0,
+                             "parts": sorted(
+                                 [{"rank": m["rank"],
+                                   "start": m["arrays"][key]["start"],
+                                   "digest": m["arrays"][key]["digest"]}
+                                  for m in metas],
+                                 key=lambda d: d["start"])}
+                       for key in metas[0]["arrays"]}}
 
     def write_json(tmp):
         with open(tmp, "w") as f:
@@ -235,20 +407,32 @@ def save(directory: str, tree: Any, step: int,
          metadata: Optional[Dict] = None) -> str:
     """Single-file save.  Sharded leaves are gathered to host first
     (merge-at-save); use ``save_sharded`` to keep shards separate."""
-    pieces, dims, order = _snapshot(tree, sharded=False)
+    pieces, dims, order, _ = _snapshot(tree, sharded=False)
     return _write_step(directory, step, pieces, dims, order, metadata)[0]
 
 
 def save_sharded(directory: str, tree: Any, step: int,
-                 metadata: Optional[Dict] = None) -> List[str]:
+                 metadata: Optional[Dict] = None, process_index: int = 0,
+                 process_count: int = 1,
+                 barrier_timeout: float = 120.0) -> List[str]:
     """Per-shard save for a (data, fsdp)-sharded train state: shard file
     ``k`` holds every fsdp-sharded leaf's k-th piece; replicated and
     sample-sharded leaves go (whole) into shard 0.  The per-leaf concat
     dim is recorded in the sidecar so ``restore`` can merge on any mesh
     shape.  Degenerates to the plain single-npz format when nothing is
-    fsdp-sharded (fsdp=1)."""
-    pieces, dims, order = _snapshot(tree, sharded=True)
-    return _write_step(directory, step, pieces, dims, order, metadata)
+    fsdp-sharded (fsdp=1).
+
+    With ``process_count > 1`` (``jax.distributed``): every rank must
+    call this for the same step — sample-sharded leaves go to per-rank
+    files and the sidecar/``latest`` commit happens once, on rank 0,
+    after the cross-rank filesystem barrier (see module docstring)."""
+    mp = process_count > 1
+    pieces, dims, order, local = _snapshot(tree, sharded=True,
+                                           multiprocess=mp)
+    return _write_step(directory, step, pieces, dims, order, metadata,
+                       local=local, process_index=process_index,
+                       process_count=process_count,
+                       barrier_timeout=barrier_timeout)
 
 
 # ---------------------------------------------------------------------------
@@ -268,10 +452,14 @@ class AsyncCheckpointer:
     and at shutdown); ``close()`` waits and stops the worker."""
 
     def __init__(self, directory: str, keep_last: int = 0,
-                 keep_every: int = 0):
+                 keep_every: int = 0, process_index: int = 0,
+                 process_count: int = 1, barrier_timeout: float = 120.0):
         self.directory = directory
         self.keep_last = int(keep_last)
         self.keep_every = int(keep_every)
+        self.process_index = int(process_index)
+        self.process_count = int(process_count)
+        self.barrier_timeout = float(barrier_timeout)
         self._q: "queue.Queue" = queue.Queue()
         self._error: Optional[BaseException] = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -283,9 +471,13 @@ class AsyncCheckpointer:
             try:
                 if job is None:
                     return
-                _write_step(self.directory, *job,
-                            keep_last=self.keep_last,
-                            keep_every=self.keep_every)
+                step, pieces, dims, order, metadata, local = job
+                _write_step(self.directory, step, pieces, dims, order,
+                            metadata, keep_last=self.keep_last,
+                            keep_every=self.keep_every, local=local,
+                            process_index=self.process_index,
+                            process_count=self.process_count,
+                            barrier_timeout=self.barrier_timeout)
             except BaseException as e:   # latched; surfaced on the host
                 self._error = e
             finally:
@@ -301,8 +493,10 @@ class AsyncCheckpointer:
     def save(self, tree: Any, step: int, metadata: Optional[Dict] = None,
              sharded: bool = False) -> None:
         self._raise_pending()
-        pieces, dims, order = _snapshot(tree, sharded=sharded, copy=True)
-        self._q.put((step, pieces, dims, order, metadata))
+        pieces, dims, order, local = _snapshot(
+            tree, sharded=sharded, copy=True,
+            multiprocess=self.process_count > 1)
+        self._q.put((step, pieces, dims, order, metadata, local))
 
     def wait(self) -> None:
         self._q.join()
@@ -341,6 +535,12 @@ def prune_checkpoints(directory: str, keep_last: int,
         for p in _step_files(directory, s, n):
             if os.path.exists(p):
                 os.remove(p)
+        nranks = int(meta.get("ranks", {}).get("count", 0))
+        for r in range(nranks):
+            for p in (_rank_file(directory, s, r, nranks),
+                      _rank_meta_file(directory, s, r, nranks)):
+                if os.path.exists(p):
+                    os.remove(p)
         sidecar = os.path.join(directory, f"ckpt_{s:08d}.json")
         if os.path.exists(sidecar):
             os.remove(sidecar)
@@ -353,20 +553,19 @@ def prune_checkpoints(directory: str, keep_last: int,
 # ---------------------------------------------------------------------------
 
 def _read_meta(directory: str, step: int) -> Optional[Dict]:
-    p = os.path.join(directory, f"ckpt_{step:08d}.json")
-    if not os.path.exists(p):
-        return None
-    try:
-        with open(p) as f:
-            return json.load(f)
-    except (ValueError, OSError):
-        return None
+    return _read_json(os.path.join(directory, f"ckpt_{step:08d}.json"))
 
 
 def _is_complete(directory: str, step: int) -> bool:
     meta = _read_meta(directory, step)
     if meta is None:
         return False
+    ranks = meta.get("ranks")
+    if ranks:
+        p = int(ranks["count"])
+        if not all(os.path.exists(_rank_file(directory, step, r, p))
+                   for r in range(p)):
+            return False
     shards = meta.get("shards")
     if shards:
         n = int(shards["count"])
@@ -471,17 +670,45 @@ def _load_verified(directory: str, step: int):
                         f"{os.path.basename(path)}")
         parts.append(shard)
     if n == 1:
-        return parts[0], meta
-    # process-0 merge of a per-shard checkpoint: concatenate each
-    # fsdp-sharded leaf's pieces along its recorded dim — the merged
-    # global arrays are bit-identical regardless of the saving mesh shape
-    data = {}
-    for key in parts[0]:
-        if key in dims:
-            data[key] = np.concatenate(
-                [p[key] for p in parts if key in p], axis=int(dims[key]))
-        else:
-            data[key] = parts[0][key]
+        data = dict(parts[0])
+    else:
+        # process-0 merge of a per-shard checkpoint: concatenate each
+        # fsdp-sharded leaf's pieces along its recorded dim — the merged
+        # global arrays are bit-identical regardless of the saving mesh
+        # shape
+        data = {}
+        for key in parts[0]:
+            if key in dims:
+                data[key] = np.concatenate(
+                    [p[key] for p in parts if key in p],
+                    axis=int(dims[key]))
+            else:
+                data[key] = parts[0][key]
+    ranks = meta.get("ranks")
+    if ranks:
+        # multi-process step: sample-sharded leaves live only in the
+        # rank files — digest-verify every block and merge along the
+        # recorded dim in global (start) order
+        p = int(ranks["count"])
+        per_rank = []
+        for r in range(p):
+            with np.load(_rank_file(directory, step, r, p)) as f:
+                per_rank.append({key: f[key] for key in f.files})
+        for key, info in ranks["arrays"].items():
+            blocks = []
+            for part in info["parts"]:
+                arr = per_rank[int(part["rank"])].get(key)
+                if arr is None:
+                    raise ValueError(
+                        f"step {step}: array {key!r} missing from rank "
+                        f"{part['rank']} file")
+                if _digest(arr) != int(part["digest"]):
+                    raise ValueError(
+                        f"step {step}: digest mismatch for {key!r} in "
+                        f"rank {part['rank']} file")
+                blocks.append(arr)
+            data[key] = (np.concatenate(blocks, axis=int(info["dim"]))
+                         if len(blocks) > 1 else blocks[0])
     return data, meta
 
 

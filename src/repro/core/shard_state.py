@@ -36,7 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import (TRAIN_AXES, _path_str,  # noqa: F401
                                fsdp_leaf_dim, make_train_mesh,
-                               parse_mesh_arg)
+                               mesh_layout, parse_mesh_arg)
 
 # The per-sample (u-buffer / batch-dim) spec: sample ownership over both
 # mesh axes, in flattened row-major (data-major) order.
@@ -131,11 +131,64 @@ def train_state_shardings(mesh: Mesh, state_like, param_dims=None):
                                          param_dims=param_dims))
 
 
+def is_multiprocess(mesh: Mesh) -> bool:
+    return len({d.process_index for d in mesh.devices.flat}) > 1
+
+
+def put_global(tree, shardings):
+    """``jax.device_put`` that also works when a sharding spans
+    processes: every process holds the same full host value (same-seed
+    init / merged checkpoint restore) and contributes its addressable
+    shards via ``jax.make_array_from_callback``.  Single-process
+    shardings take the plain device_put fast path."""
+    here = jax.process_index()
+
+    def one(x, sh):
+        if all(d.process_index == here for d in sh.device_set):
+            return jax.device_put(x, sh)
+        a = np.asarray(jax.device_get(x))
+        return jax.make_array_from_callback(
+            a.shape, sh, lambda idx, a=a: a[idx])
+    return jax.tree.map(one, tree, shardings)
+
+
 def shard_train_state(state, mesh: Mesh, param_dims=None):
     """Lay a (host or replicated) train state out on the mesh.  Returns
-    (sharded_state, shardings)."""
+    (sharded_state, shardings).  On a multi-process mesh every process
+    must call this with the SAME host state (deterministic same-seed
+    init or a merged checkpoint restore)."""
     shardings = train_state_shardings(mesh, state, param_dims=param_dims)
+    if is_multiprocess(mesh):
+        state = jax.device_get(state)
+        return put_global(state, shardings), shardings
     return jax.device_put(state, shardings), shardings
+
+
+def host_local_value(leaf) -> np.ndarray:
+    """Merge one array to a full host value from *this process's*
+    addressable shards only — works across processes for replicated and
+    fsdp-sharded leaves (params/moments: fsdp is intra-process on a
+    node-aware mesh, data-replicated), where ``np.asarray`` would raise
+    because remote devices make the array not fully addressable.
+    Raises when the local shards do not cover the value (sample-sharded
+    leaves: use the rank-tagged checkpoint path instead)."""
+    if not hasattr(leaf, "addressable_shards"):
+        return np.asarray(leaf)
+    if getattr(leaf, "is_fully_replicated", False):
+        return np.asarray(leaf.addressable_shards[0].data)
+    out = np.empty(leaf.shape, leaf.dtype)
+    seen = {}
+    for s in leaf.addressable_shards:
+        key = tuple((sl.start, sl.stop) for sl in s.index)
+        if key not in seen:
+            seen[key] = int(np.prod(np.asarray(s.data).shape))
+            out[s.index] = np.asarray(s.data)
+    if sum(seen.values()) != int(np.prod(leaf.shape)):
+        raise ValueError(
+            f"local shards cover {sum(seen.values())} of "
+            f"{int(np.prod(leaf.shape))} elements; value is not "
+            "process-locally recoverable")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -158,15 +211,28 @@ def gather_params(param_shards, dims, *, remat_name: Optional[str] = None):
     return jax.tree.map(one, param_shards, dims)
 
 
+def staged_psum(x):
+    """Hierarchical all-reduce: psum over ``fsdp`` first, then over
+    ``data`` — on a node-aware mesh (``launch.mesh``: fsdp rows
+    intra-process) the first stage never leaves the node and the second
+    crosses nodes once per value.  The staging is 2-wide per stage at
+    the test mesh shapes, so it is bitwise-equal to a flat psum over
+    both axes on exact (integer-valued) inputs — the hypothesis
+    property in the fsdp battery pins that."""
+    return jax.lax.psum(jax.lax.psum(x, ("fsdp",)), ("data",))
+
+
 def reduce_grads(grads, dims):
     """Finish the gradient reduction for the local shard: leaves whose
-    gather transpose already psum_scattered over ``fsdp`` only need the
-    (shard-sized) psum over ``data``; replicated leaves psum over both
-    axes, staged ``fsdp`` first so the reduction tree matches the
-    scattered path exactly (bitwise at axis size 2)."""
+    gather transpose already psum_scattered over ``fsdp`` (intra-node on
+    a node-aware mesh) only need the shard-sized psum over ``data`` —
+    the inter-node stage never moves more than 1/fsdp of a leaf;
+    replicated leaves take the hierarchical ``staged_psum`` (fsdp first,
+    then data) so the reduction tree matches the scattered path exactly
+    (bitwise at axis size 2)."""
     def one(g, dim):
         if dim is None:
-            g = jax.lax.psum(g, ("fsdp",))
+            return staged_psum(g)
         return jax.lax.psum(g, ("data",))
     return jax.tree.map(one, grads, dims)
 

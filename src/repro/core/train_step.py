@@ -204,6 +204,17 @@ class TrainStepConfig:
     # gradient reduction.  Requires mesh_axes == ("data", "fsdp") (or
     # None, which defaults to it) and set_mesh() with a matching mesh.
     fsdp: bool = False
+    # comm/compute overlap (fsdp mode only): split each device's local
+    # rows into `microbatch` micro-steps, each with its own weight
+    # gather + tower forward/backward — autodiff then emits one
+    # psum_scatter per (micro-step, sharded leaf), so micro-step i's
+    # grad reduce-scatter (and its backward re-gather under inner_remat)
+    # can overlap micro-step i±1's tower compute in the latency-hiding
+    # scheduler.  Grads accumulate shard-locally; the FCCO loss and its
+    # log-u update run ONCE per global step over the concatenated
+    # embeddings (the per-sample u contract is untouched).  microbatch=1
+    # is the unpipelined step, bit-identical to PR 5 behavior.
+    microbatch: int = 1
     # non-finite step guard (repro.resilience.guard): an in-jit
     # all-finite check over the loss and the global grad norm turns a
     # bad step into a bitwise no-op update (params/moments/log-u and all
@@ -227,8 +238,15 @@ def init_train_state(rng, tc: TrainStepConfig):
 
 
 def make_train_step(tc: TrainStepConfig):
+    if tc.microbatch < 1:
+        raise ValueError(f"microbatch must be >= 1, got {tc.microbatch}")
     if tc.fsdp:
         return make_fsdp_train_step(tc)
+    if tc.microbatch > 1:
+        raise ValueError(
+            "microbatch pipelining overlaps the fsdp weight gathers / "
+            "grad reduce-scatters with tower compute; it requires the "
+            "sharded-state step (fsdp=True / --mesh data:N,fsdp:M)")
     fc = tc.fc
     prec = tc.resolved_precision
     gamma_fn = fc.gamma_fn()
@@ -363,6 +381,14 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
       * the optimizer updates only the local shard (requires
         ``Optimizer.shard_safe``; LAMB's whole-leaf trust ratio is not).
 
+    ``tc.microbatch > 1`` pipelines the local rows: each micro-step
+    gathers the weights and runs its tower slice, so the backward holds
+    one shard-sized psum_scatter per (micro-step, sharded leaf) —
+    overlappable with adjacent micro-steps' compute — while grads
+    accumulate shard-locally and the FCCO loss + log-u update still run
+    once per global step over the concatenated embeddings (per-sample u
+    contract preserved; microbatch=1 is bitwise the unpipelined step).
+
     With fsdp=1 every leaf replicates and the same code path is plain
     data parallelism (gathers become identity).  ``param_dims`` overrides
     the ZeRO layout (``shard_state.param_fsdp_dims`` shape; all-None =
@@ -415,7 +441,11 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
     state_specs = SS.train_state_specs(state_like, fsdp, param_dims=p_dims)
 
     def pmean(x):
-        return jax.lax.pmean(x, axes)
+        # hierarchical mean (staged_psum: fsdp first, then data) so
+        # single- and multi-process runs sum in the same 2-wide stages —
+        # a flat psum over both axes may reorder the f32 sum across
+        # process boundaries, and the tau update feeds state
+        return SS.staged_psum(x) / jax.lax.psum(1, axes)
 
     def step_local(state, batch, idx):
         fcs = state["fc"]
@@ -430,12 +460,42 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
         else:
             rel = None
 
+        def encode_towers(p_shards):
+            """Local tower forward.  microbatch=1: one gather + one
+            forward (the unpipelined PR 5 step, bit-identical).
+            microbatch=N: N (gather, forward-on-a-slice) micro-steps —
+            each gather call transposes to its own psum_scatter in the
+            backward, giving the scheduler N independent shard-sized
+            reduce-scatters to overlap with the neighboring micro-steps'
+            tower compute (identical forward gathers CSE away; the
+            backward's scatters cannot, their operands differ)."""
+            remat = "fsdp_gather" if SH.inner_remat() else None
+            if tc.microbatch == 1:
+                params = SS.gather_params(p_shards, p_dims,
+                                          remat_name=remat)
+                return BB.encode_pair(params, tc.arch, batch,
+                                      impl=tc.impl, precision=prec)
+            b = next(iter(batch.values())).shape[0]
+            if b % tc.microbatch != 0:
+                raise ValueError(
+                    f"microbatch={tc.microbatch} does not divide the "
+                    f"per-device batch of {b} rows (global batch / "
+                    "data*fsdp); pick a divisor")
+            mb = b // tc.microbatch
+            outs = []
+            for j in range(tc.microbatch):
+                params = SS.gather_params(p_shards, p_dims,
+                                          remat_name=remat)
+                bj = {k: jax.lax.slice_in_dim(v, j * mb, (j + 1) * mb,
+                                              axis=0)
+                      for k, v in batch.items()}
+                outs.append(BB.encode_pair(params, tc.arch, bj,
+                                           impl=tc.impl, precision=prec))
+            return (jnp.concatenate([o[0] for o in outs]),
+                    jnp.concatenate([o[1] for o in outs]))
+
         def loss_fn(p_shards, tau_diff):
-            params = SS.gather_params(
-                p_shards, p_dims,
-                remat_name="fsdp_gather" if SH.inner_remat() else None)
-            e1, e2 = BB.encode_pair(params, tc.arch, batch, impl=tc.impl,
-                                    precision=prec)
+            e1, e2 = encode_towers(p_shards)
             e1n = LS.l2_normalize(e1)
             e2n = LS.l2_normalize(e2)
             if fc.version == "openclip":
@@ -461,7 +521,7 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
         (local, aux), (grads, gtau) = jax.value_and_grad(
             loss_fn, argnums=(0, 1), has_aux=True)(
                 state["params"], tau1 if not fc.individual_tau else 0.0)
-        loss = D._psum(local, axes)      # local is the /B contribution
+        loss = SS.staged_psum(local)     # local is the /B contribution
         grads = SS.reduce_grads(grads, p_dims)
 
         if tc.grad_clip:
@@ -482,7 +542,7 @@ def make_fsdp_train_step(tc: TrainStepConfig, param_dims=None):
                    "grad_norm": gnorm}
         if fc.version == "openclip":
             if fc.learnable_tau:
-                new_fc = FC.tau_update(fc, new_fc, D._psum(gtau, axes))
+                new_fc = FC.tau_update(fc, new_fc, SS.staged_psum(gtau))
             metrics["tau"] = new_fc.get("tau", tau1)
         else:
             new_fc["u1"] = aux["u1_new"]

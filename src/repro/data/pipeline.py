@@ -27,6 +27,13 @@ class ShardedLoader:
     n_shards: int = 1
     seed: int = 0
     drop_last: bool = True
+    # Multi-process ownership (PR 10): when set, only these shard ids'
+    # rows of each global batch are assembled on this host (``steps`` /
+    # ``epoch`` batches hold len(owned_shards)*local_batch rows).  The
+    # yielded ``idx`` stays GLOBAL — every process sees the same index
+    # plan, and the launcher maps its local rows into the global batch
+    # array via their shard positions.
+    owned_shards: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         self.n = self.dataset.n
@@ -45,6 +52,11 @@ class ShardedLoader:
                 f"{self.n} / {self.n_shards}): steps_per_epoch would be "
                 "0 and the loader could never yield a full batch.  "
                 "Lower --global-batch or raise --n-samples.")
+        if self.owned_shards is not None:
+            bad = [s for s in self.owned_shards
+                   if not 0 <= s < self.n_shards]
+            assert not bad, (
+                f"owned_shards {bad} outside [0, {self.n_shards})")
 
     @property
     def steps_per_epoch(self) -> int:
@@ -71,6 +83,18 @@ class ShardedLoader:
             p[step * self.local_batch:(step + 1) * self.local_batch]
             for p in per_shard])
 
+    def _owned_rows(self, idx: np.ndarray) -> np.ndarray:
+        """The rows of a global index batch this host assembles: shard s
+        owns rows [s*local_batch, (s+1)*local_batch) of the
+        shard-concatenated global batch (all rows when ``owned_shards``
+        is unset)."""
+        if self.owned_shards is None:
+            return idx
+        L = self.local_batch
+        idx = np.asarray(idx)
+        return np.concatenate([idx[s * L:(s + 1) * L]
+                               for s in self.owned_shards])
+
     def epoch(self, epoch: int) -> Iterator[Tuple[np.ndarray, dict]]:
         """Yields (global_indices (global_batch,), batch dict) with the
         per-shard sub-batches concatenated in shard order, so that
@@ -78,7 +102,7 @@ class ShardedLoader:
         per_shard = self._epoch_perms(epoch)
         for step in range(self.steps_per_epoch):
             idx = self._step_idx(per_shard, step)
-            yield idx, self.dataset.batch(idx)
+            yield idx, self.dataset.batch(self._owned_rows(idx))
 
     def _index_steps(self, n_steps: int, start: int = 0):
         """The index-only step plan: yields (epoch, step, idx) for steps
@@ -114,7 +138,7 @@ class ShardedLoader:
         so resuming at step S costs O(1) per skipped step instead of S
         full global-batch gathers."""
         for epoch, step, idx in self._index_steps(n_steps, start):
-            yield epoch, step, idx, self.dataset.batch(idx)
+            yield epoch, step, idx, self.dataset.batch(self._owned_rows(idx))
 
 
 # ---------------------------------------------------------------------------

@@ -338,9 +338,10 @@ class StreamingLoader(ShardedLoader):
         return self.dataset.batch(idx_chunk)
 
     def _submit(self, ex: ThreadPoolExecutor, step: int, idx):
+        rows = self._owned_rows(np.asarray(idx))
         n_chunks = max(1, min(self.workers,
-                              len(idx) // max(1, self.local_batch // 2)))
-        chunks = np.array_split(np.asarray(idx), n_chunks)
+                              len(rows) // max(1, self.local_batch // 2)))
+        chunks = np.array_split(rows, n_chunks)
         return [ex.submit(self._decode_chunk, step, c, j == 0)
                 for j, c in enumerate(chunks)]
 

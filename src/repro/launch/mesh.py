@@ -30,25 +30,94 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 # ---------------------------------------------------------------------------
-# Training mesh: the (data, fsdp) contract (PR 5)
+# Training mesh: the (data, fsdp) contract (PR 5, multi-process PR 10)
 # ---------------------------------------------------------------------------
 # One named mesh shared by train, eval and checkpointing: the batch (and
 # the FCCO u state, by sample ownership) shards over *both* axes, weights
 # and optimizer moments ZeRO-shard one dim over ``fsdp`` only (replicated
 # across ``data``).  ``fsdp=1`` degenerates to plain data parallelism
 # through the same code path.
+#
+# Node-aware layout (PR 10): devices are laid out in ``jax.devices()``
+# order, which is process-grouped, and the mesh reshape is C-order with
+# ``fsdp`` innermost — so whenever ``fsdp`` divides the per-process
+# device count, every fsdp row lives inside ONE process.  That makes the
+# staged gradient reduction hierarchical on real hardware: the
+# psum_scatter over ``fsdp`` is an intra-node reduce-scatter, and the
+# following psum over ``data`` crosses nodes with shard-sized messages
+# only.  Multi-process meshes enforce this invariant (see
+# ``validate_mesh_devices``); single-process meshes keep the historical
+# take-a-prefix behavior.
 
 TRAIN_AXES = ("data", "fsdp")
 
 
-def make_train_mesh(data: int, fsdp: int = 1, *, devices=None) -> Mesh:
-    """(data, fsdp) mesh over the first data*fsdp devices."""
-    devices = list(jax.devices()) if devices is None else list(devices)
+def validate_mesh_devices(data: int, fsdp: int, devices) -> None:
+    """Validate (data, fsdp) against the *global* device set with a
+    clear error (a bad product otherwise surfaces as an opaque
+    shard_map/sharding failure deep in the first jit).
+
+    Single-process: the mesh may use a prefix of the devices (the
+    historical contract; the fsdp test batteries build sub-meshes on a
+    4-forced-device host).  Multi-process: the mesh must cover every
+    global device exactly (a process whose devices sit outside the mesh
+    could never feed its addressable shards), and ``fsdp`` must divide
+    the per-process device count so each fsdp row — the weight
+    all-gather / grad reduce-scatter group — stays intra-process."""
+    devices = list(devices)
     n = data * fsdp
+    procs = sorted({d.process_index for d in devices})
+    n_proc = len(procs)
+    local = len(devices) // max(n_proc, 1)
+    where = (f"{len(devices)} global device(s)"
+             + (f" = {n_proc} process(es) x {local} local"
+                if n_proc > 1 else ""))
     if len(devices) < n:
-        raise ValueError(f"mesh data:{data},fsdp:{fsdp} needs {n} devices, "
-                         f"have {len(devices)}")
+        raise ValueError(
+            f"--mesh data:{data},fsdp:{fsdp} needs {n} devices but only "
+            f"{where} exist.  Shrink the mesh, add hosts, or (CPU "
+            f"harness) force more local devices via --local-devices N / "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=N.")
+    if n_proc > 1:
+        if n != len(devices):
+            raise ValueError(
+                f"--mesh data:{data},fsdp:{fsdp} covers {n} devices but "
+                f"{where} are in this multi-process run; a multi-process "
+                f"mesh must use every global device exactly (idle "
+                f"processes could not feed their array shards).")
+        if local % fsdp != 0:
+            raise ValueError(
+                f"--mesh data:{data},fsdp:{fsdp}: fsdp={fsdp} does not "
+                f"divide the per-process device count {local}, so the "
+                f"fsdp axis (the weight all-gather / reduce-scatter "
+                f"group) would span processes and the hierarchical "
+                f"intra-node reduction contract breaks.  Pick fsdp from "
+                f"the divisors of {local}.")
+
+
+def make_train_mesh(data: int, fsdp: int = 1, *, devices=None) -> Mesh:
+    """(data, fsdp) mesh over the first data*fsdp devices, node-aware:
+    process-grouped device order with ``fsdp`` innermost keeps every
+    fsdp group intra-process (validated for multi-process runs)."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    validate_mesh_devices(data, fsdp, devices)
+    n = data * fsdp
     return Mesh(np.array(devices[:n]).reshape(data, fsdp), TRAIN_AXES)
+
+
+def mesh_layout(mesh: Mesh) -> dict:
+    """Node-layout introspection for a (data, fsdp) mesh: process count
+    and whether every fsdp row (all-gather group) is intra-process —
+    the precondition for the staged reduction being hierarchical
+    (intra-node reduce-scatter, shard-sized inter-node psum)."""
+    grid = mesh.devices
+    rows = grid.reshape(-1, grid.shape[-1])
+    procs = {d.process_index for d in grid.flat}
+    return {
+        "processes": len(procs),
+        "fsdp_intra_process": all(
+            len({d.process_index for d in row}) == 1 for row in rows),
+    }
 
 
 def parse_mesh_arg(spec: str):

@@ -1,0 +1,161 @@
+"""Multi-process runtime: ``jax.distributed`` init + the CPU harness.
+
+The launcher side (``repro.launch.train --coordinator HOST:PORT
+--num-processes N --process-id K``) calls :func:`initialize` before any
+device use; every process then sees the same global device list
+(process-grouped, so the node-aware (data, fsdp) mesh of
+``launch.mesh`` puts the fsdp axis intra-process) and participates in
+the same jitted step over global arrays.  On CPU the gloo collectives
+backend is selected so the whole contract runs on test/CI machines:
+``--local-devices L`` forces L host devices per process
+(``--xla_force_host_platform_device_count``), giving N×L global
+devices.
+
+The harness side (:func:`run_train_multiprocess`, also ``python -m
+repro.launch.multiprocess --nproc 2 --local-devices 2 -- <train
+args>``) spawns N launcher subprocesses sharing a fresh coordinator
+port and collects their outputs — the multihost test battery
+(``tests/helpers/multihost_check.py``) and the ``multihost-smoke`` CI
+job drive everything through it.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import subprocess
+import sys
+import time
+from types import SimpleNamespace
+from typing import List, Optional, Sequence
+
+_SRC = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def force_local_devices(n: int) -> None:
+    """Force ``n`` host (CPU) devices for this process.  Must run before
+    the jax backend initializes (the harness also sets the env var for
+    subprocesses, which is always safe)."""
+    flag = f"--xla_force_host_platform_device_count={int(n)}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if flag not in cur:
+        os.environ["XLA_FLAGS"] = f"{cur} {flag}".strip()
+
+
+def initialize(coordinator: Optional[str], num_processes: int = 1,
+               process_id: int = 0,
+               local_devices: Optional[int] = None) -> None:
+    """Join the ``jax.distributed`` process group (no-op for
+    single-process runs with no coordinator).  Call before any jax
+    device/array use."""
+    if local_devices:
+        force_local_devices(local_devices)
+    if num_processes <= 1 and not coordinator:
+        return
+    if not coordinator:
+        raise ValueError("--num-processes > 1 requires --coordinator "
+                         "HOST:PORT (the process-0 rendezvous address)")
+    import jax
+    # CPU collectives need an explicit cross-process implementation;
+    # harmless to set when running on real accelerators.
+    jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    jax.distributed.initialize(coordinator_address=coordinator,
+                               num_processes=int(num_processes),
+                               process_id=int(process_id))
+
+
+def is_primary() -> bool:
+    import jax
+    return jax.process_index() == 0
+
+
+def free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_train_multiprocess(train_args: Sequence[str],
+                           num_processes: int = 2, local_devices: int = 2,
+                           timeout: float = 600.0,
+                           env_extra: Optional[dict] = None) -> List:
+    """Spawn ``num_processes`` copies of ``repro.launch.train`` with the
+    coordinator/rank flags appended, each forced to ``local_devices``
+    CPU devices, and wait for all of them.  Returns one
+    ``SimpleNamespace(returncode, stdout, stderr)`` per rank (rank
+    order); nonzero/killed exits are reported, not raised — the chaos
+    battery SIGKILLs ranks on purpose.  On timeout every surviving rank
+    is killed and collected."""
+    coord = f"127.0.0.1:{free_port()}"
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={local_devices}"
+    ).strip()
+    env["PYTHONPATH"] = _SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    if env_extra:
+        env.update(env_extra)
+    procs = []
+    for rank in range(num_processes):
+        cmd = [sys.executable, "-m", "repro.launch.train",
+               *train_args,
+               "--coordinator", coord,
+               "--num-processes", str(num_processes),
+               "--process-id", str(rank),
+               "--local-devices", str(local_devices)]
+        procs.append(subprocess.Popen(
+            cmd, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True, env=env))
+    deadline = time.monotonic() + timeout
+    results: List[Optional[SimpleNamespace]] = [None] * num_processes
+    try:
+        for rank, p in enumerate(procs):
+            left = max(0.1, deadline - time.monotonic())
+            try:
+                out, err = p.communicate(timeout=left)
+            except subprocess.TimeoutExpired:
+                for q in procs:     # one wedged rank hangs the others'
+                    q.kill()        # collectives: kill the whole group
+                out, err = p.communicate()
+                err += f"\n[harness] killed after {timeout:.0f}s timeout"
+            results[rank] = SimpleNamespace(
+                returncode=p.returncode, stdout=out, stderr=err)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="spawn an N-process CPU training run "
+                    "(repro.launch.train) behind one coordinator")
+    ap.add_argument("--nproc", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=600.0)
+    ap.add_argument("train_args", nargs=argparse.REMAINDER,
+                    help="arguments forwarded to repro.launch.train "
+                         "(prefix with --)")
+    args = ap.parse_args(argv)
+    train_args = args.train_args
+    if train_args and train_args[0] == "--":
+        train_args = train_args[1:]
+    results = run_train_multiprocess(
+        train_args, num_processes=args.nproc,
+        local_devices=args.local_devices, timeout=args.timeout)
+    rc = 0
+    for rank, r in enumerate(results):
+        print(f"--- rank {rank} (exit {r.returncode}) ---")
+        print(r.stdout, end="")
+        if r.returncode != 0:
+            print(r.stderr[-4000:], file=sys.stderr)
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

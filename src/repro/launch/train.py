@@ -14,6 +14,38 @@ moments ZeRO-sharded over fsdp with reduce-scatter gradient reduction,
 per-shard checkpoints (restorable at any other mesh shape), and the
 periodic eval consuming the sharded params in place.
 
+Multi-host (PR 10): ``--coordinator HOST:PORT --num-processes N
+--process-id K`` joins the launcher to a ``jax.distributed`` process
+group before any device use — the mesh then covers every *global*
+device (node-aware: the ``fsdp`` axis never spans processes, so the
+weight all-gathers and gradient reduce-scatters stay intra-node and
+only shard-sized data-axis psums cross nodes — the hierarchical
+reduction).  Each process assembles only its own rows of the global
+batch (``ShardedLoader.owned_shards``), checkpoints go through the
+rank-tagged multi-process format (every rank writes its sample-sharded
+blocks; rank 0 commits the sidecar + ``latest`` after a cross-rank
+barrier), and only process 0 writes the heartbeat file.  On CPU,
+``--local-devices L`` forces L host devices per process — ``python -m
+repro.launch.multiprocess --nproc 2 --local-devices 2 -- <train args>``
+spawns the whole group locally, and a 2-process x 2-device run tracks
+the single-process ``--mesh data:2,fsdp:2`` run to 5e-3 in
+loss/params/log-u over the test horizon (not bitwise: batch assembly,
+init, placement and the all-gathers are proven bit-identical across
+topologies, but XLA:CPU compiles a topology-dependent executable and
+the gloo collective runtime combines chunked reductions in completion
+order — see tests/helpers/multihost_check.py).  Leaving the flags
+unset is the single-process fallback — bit-identical to pre-PR-10
+behavior.
+
+``--microbatch N`` splits each device batch into N micro-steps inside
+the fsdp train step so that micro-step i's weight all-gather and
+gradient reduce-scatter overlap micro-step i±1's tower compute
+(comm/compute overlap); gradients accumulate shard-locally and the
+FCCO log-u state still updates exactly once per global step from the
+full batch's embeddings, so the per-sample contract is unchanged.
+``--microbatch 1`` (default) is the unpipelined step, bit-identical to
+pre-PR-10; N > 1 matches it within accumulation-order rounding.
+
 Training resilience (PR 6, ``repro.resilience``) — the limited-resource
 contract: runs on preemptible/shared machines survive kills, corrupt
 disks and numerically bad steps.
@@ -107,6 +139,7 @@ from repro.data import (ContrastiveDataset, DevicePrefetcher, LMDataset,
                         PairedEmbeddingDataset, ShardedLoader,
                         StreamingDataset, StreamingLoader)
 from repro.data import curriculum as CU
+from repro.launch import multiprocess as MP
 from repro.launch.steps import donated_jit
 from repro.models import backbones as BB
 from repro.models.precision import POLICIES
@@ -207,6 +240,25 @@ def main(argv=None):
                          "over all N*M devices, params+moments ZeRO-"
                          "sharded over fsdp (reduce-scatter grads, "
                          "sharded checkpoints); unset = single-device")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="split each device batch into N micro-steps in "
+                         "the fsdp step so the next micro-step's weight "
+                         "all-gather / grad reduce-scatter overlaps the "
+                         "current one's compute; 1 = unpipelined "
+                         "(bit-identical baseline)")
+    ap.add_argument("--coordinator", default=None,
+                    help="HOST:PORT of process 0: join a jax.distributed "
+                         "process group before any device use "
+                         "(repro.launch.multiprocess spawns CPU groups)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total processes in the jax.distributed group")
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this process's rank in [0, --num-processes)")
+    ap.add_argument("--local-devices", type=int, default=None,
+                    help="force this many host (CPU) devices per process "
+                         "(--xla_force_host_platform_device_count) — the "
+                         "CPU multi-process harness and test batteries "
+                         "set this")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--ckpt-async", action="store_true",
@@ -251,6 +303,21 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    multiproc = args.num_processes > 1 or bool(args.coordinator)
+    if multiproc:
+        if not args.mesh:
+            raise SystemExit(
+                "--num-processes > 1 requires --mesh data:N[,fsdp:M]: "
+                "the multi-host trainer is the sharded contrastive step")
+        if args.eval_every:
+            raise SystemExit(
+                "--eval-every is not supported under multi-process runs "
+                "yet; run the eval launcher against the saved "
+                "checkpoints instead")
+    # must happen before any jax device use (backend init is lazy)
+    MP.initialize(args.coordinator, args.num_processes, args.process_id,
+                  args.local_devices)
+
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -277,15 +344,27 @@ def main(argv=None):
         mesh = SS.make_train_mesh(data_sz, fsdp_sz)
         TS.set_mesh(mesh)
     n_shards = data_sz * fsdp_sz if mesh is not None else 1
+    mp_mesh = mesh is not None and SS.is_multiprocess(mesh)
+    pidx = jax.process_index() if mp_mesh else 0
+    pcnt = jax.process_count() if mp_mesh else 1
+    owned = None
+    if mp_mesh:
+        # global shard s lives on jax.devices()[s] (the mesh covers every
+        # global device, process-grouped): this process owns one
+        # contiguous run of shards — and so of global batch rows
+        lcl = jax.local_device_count()
+        owned = tuple(range(pidx * lcl, (pidx + 1) * lcl))
     if streaming:
         loader = StreamingLoader(
             ds, global_batch=args.global_batch, n_shards=n_shards,
-            seed=args.seed, workers=args.decode_workers,
+            seed=args.seed, owned_shards=owned,
+            workers=args.decode_workers,
             decode_ahead=args.decode_ahead,
             fault_hook=chaos.on_decode if chaos is not None else None)
     else:
         loader = ShardedLoader(ds, global_batch=args.global_batch,
-                               n_shards=n_shards, seed=args.seed)
+                               n_shards=n_shards, seed=args.seed,
+                               owned_shards=owned)
 
     if args.objective == "lm" and cfg.family != "clip":
         from repro.launch.steps import make_lm_train_step
@@ -317,7 +396,8 @@ def main(argv=None):
             loss_impl=args.loss_impl, impl=args.impl,
             precision=args.precision,
             mesh_axes=SS.TRAIN_AXES if mesh is not None else None,
-            fsdp=mesh is not None, guard=guard)
+            fsdp=mesh is not None, microbatch=args.microbatch,
+            guard=guard)
         state = TS.init_train_state(jax.random.PRNGKey(args.seed), tc)
         if mesh is not None:
             from jax.sharding import NamedSharding
@@ -336,9 +416,12 @@ def main(argv=None):
 
     def relayout(host_state):
         """Host-restored state back onto this run's devices/mesh (the
-        reshard round-trip: any saving mesh shape restores bit-exactly)."""
+        reshard round-trip: any saving mesh shape restores bit-exactly).
+        ``put_global`` handles cross-process shardings (every rank reads
+        the same merged checkpoint from the shared filesystem) and is a
+        plain per-leaf device_put on a single-process mesh."""
         if mesh is not None:
-            return jax.device_put(host_state, shardings)
+            return SS.put_global(host_state, shardings)
         return jax.tree.map(jnp.asarray, host_state)
 
     start = 0
@@ -371,6 +454,19 @@ def main(argv=None):
 
     def to_device(item):
         epoch, step, idx, batch = item
+        if mp_mesh:
+            # every process holds the full (global) index plan but only
+            # its own rows of the batch: assemble global device arrays
+            # from the process-local pieces
+            idx_np = np.asarray(idx)
+            idx_dev = jax.make_array_from_callback(
+                idx_np.shape, sample_sh, lambda i, a=idx_np: a[i])
+            dev_batch = {
+                k: jax.make_array_from_process_local_data(
+                    sample_sh, np.asarray(v),
+                    (len(idx_np),) + v.shape[1:])
+                for k, v in batch.items()}
+            return epoch, step, idx_dev, dev_batch
         # jnp.asarray dispatches the async H2D copy on the producer thread
         return (epoch, step, jnp.asarray(idx),
                 {k: jnp.asarray(v) for k, v in batch.items()})
@@ -399,7 +495,8 @@ def main(argv=None):
     # -- resilience plumbing ------------------------------------------------
     meta = {"arch": args.arch, "version": args.version}
     saver = (CK.AsyncCheckpointer(args.ckpt_dir, keep_last=args.ckpt_keep,
-                                  keep_every=args.ckpt_keep_every)
+                                  keep_every=args.ckpt_keep_every,
+                                  process_index=pidx, process_count=pcnt)
              if args.ckpt_dir and args.ckpt_async else None)
     if chaos is not None:
         CK.set_fault_hook(chaos.checkpoint_event)
@@ -413,18 +510,21 @@ def main(argv=None):
                 saver.wait()
             if mesh is not None:
                 CK.save_sharded(args.ckpt_dir, state, step_no,
-                                metadata=meta)
+                                metadata=meta, process_index=pidx,
+                                process_count=pcnt)
             else:
                 CK.save(args.ckpt_dir, jax.device_get(state), step_no,
                         metadata=meta)
-            if args.ckpt_keep > 0:
+            if args.ckpt_keep > 0 and pidx == 0:
                 CK.prune_checkpoints(args.ckpt_dir,
                                      keep_last=args.ckpt_keep,
                                      keep_every=args.ckpt_keep_every)
 
     hb_path = args.heartbeat_file or (
         f"{args.ckpt_dir}/heartbeat.json" if args.ckpt_dir else None)
-    hb = RS.Heartbeat(hb_path) if hb_path else None
+    # only the primary writes the heartbeat: ranks sharing a filesystem
+    # would otherwise clobber each other's {step, time, pid} records
+    hb = RS.Heartbeat(hb_path) if hb_path and pidx == 0 else None
     wd = (RS.StepWatchdog(args.hang_timeout)
           if args.hang_timeout > 0 else None)
     detector = RS.SpikeDetector(rollback_after=args.rollback_after)
@@ -531,8 +631,11 @@ def main(argv=None):
                       for k, v in ds.batch(np.arange(
                           min(128, args.n_samples))).items()}
         # the ad-hoc metric runs eagerly on one device; merge the shards
-        params = (jax.device_get(state["params"]) if mesh is not None
-                  else state["params"])
+        # from this process's addressable pieces (params are fsdp-sharded
+        # + data-replicated, so every rank can recover them locally —
+        # jax.device_get would raise on a multi-process mesh)
+        params = (jax.tree.map(SS.host_local_value, state["params"])
+                  if mesh is not None else state["params"])
         acc = float(TS.retrieval_accuracy(params, cfg, eval_batch))
         print(f"retrieval accuracy: {acc:.4f}")
     if evaluator is not None and args.steps % args.eval_every != 0:

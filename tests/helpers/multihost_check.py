@@ -1,0 +1,241 @@
+"""Subprocess helper: multi-process (2 ranks x 2 devices) launcher
+battery over the gloo-backed CPU collectives runtime.  Run:
+python tests/helpers/multihost_check.py <name>
+Prints PASS/FAIL lines; exit code 0 on success.
+
+Checks:
+  smoke        a clean 2-proc x 2-dev run on --mesh data:2,fsdp:2: both
+               ranks exit 0, the two ranks log bit-identical step lines
+               (every rank computes the same replicated metrics), and
+               the rank-tagged checkpoint verifies and loads.
+  parity       2-proc x 2-dev vs single-process (4 forced host devices)
+               on the same --mesh data:2,fsdp:2 over 3 steps: logged
+               per-step metrics agree to 1e-3 and every final-checkpoint
+               array (params / opt moments / FCCO log-u / tau) agrees to
+               5e-3.  Tolerance rationale: XLA:CPU compiles a different
+               executable when the 4 devices span 2 processes than when
+               they share one, and the tower forward alone differs at
+               f32 epsilon (~2e-6) before any reduction runs.  Adam
+               amplifies epsilon-level grad diffs to ~2*lr per element
+               (sign flips in m/sqrt(v) at small v), so after 3 steps at
+               lr=1e-3 honest parity is ~2e-3.  Real reduction bugs are
+               O(0.1) in the step-0 log line (see the flat-psum
+               regression this battery caught during development), so
+               5e-3 keeps full bug-catching power.
+  kill_resume  SIGKILL both ranks mid-run (--chaos kill@5), then a
+               2-proc --resume: the rank-tagged checkpoint at the kill
+               point digest-verifies, the resume restarts from exactly
+               that step, and the resumed run's final checkpoint
+               matches an uninterrupted 2-proc run's — integer leaves
+               (step counters) bitwise, float leaves to 1e-2 (8 steps
+               of runtime-level f32 drift; see below).
+
+Why the float comparisons are tolerances and not bitwise: the
+gloo-backed CPU collective runtime is not run-to-run deterministic.
+Probes (see PR 10) show every controllable layer is exact — batch
+assembly, init, placement, the param all-gather, and each collective
+(psum / staged_psum / psum_scatter, up to 2M elements) replayed in
+isolation returns identical bits across runs — but the full compiled
+train step re-executed on identical inputs inside one process can
+differ at f32 epsilon on the largest gradient leaves: concurrent
+chunked reductions combine in completion order.  Single-process runs
+(all devices in one process, no gloo) are bit-reproducible across
+invocations, and all single-process bitwise gates (chaos battery,
+fsdp_check parity) keep that guarantee.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.launch.multiprocess import run_train_multiprocess  # noqa: E402
+
+MESH = ["--mesh", "data:2,fsdp:2"]
+
+
+def _args(steps, *extra):
+    return ["--arch", "clip-vitb32-cc12m", "--reduced",
+            "--global-batch", "16", "--n-samples", "64",
+            "--steps", str(steps), "--log-every", "1",
+            "--ckpt-every", "2"] + list(extra)
+
+
+def _mp(train_args, timeout=560.0):
+    return run_train_multiprocess(train_args, num_processes=2,
+                                  local_devices=2, timeout=timeout)
+
+
+def _sp(train_args, timeout=560.0):
+    """Single-process launcher run with 4 forced host devices (the
+    same 4-device mesh, all devices in one process)."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.train"] + train_args,
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+def _step_lines(stdout):
+    return [ln for ln in stdout.splitlines() if ln.startswith("step ")]
+
+
+def _step_metrics(stdout):
+    out = []
+    for ln in _step_lines(stdout):
+        out.append(json.loads(ln[ln.index("{"):]))
+    return out
+
+
+def _load_ck(directory, step=None):
+    from repro.checkpoint import checkpoint as CK
+    data, at, _meta = CK._load(directory, step)
+    return {k: np.atleast_1d(np.asarray(v)) for k, v in data.items()}, at
+
+
+def _ck_maxdiff(a, b):
+    """Max elementwise |a-b| over matching finite entries; bitwise-equal
+    entries (incl. matching -inf log-u rows) count as 0."""
+    worst = ("", 0.0)
+    for k in a:
+        x = a[k].astype(np.float64)
+        y = b[k].astype(np.float64)
+        with np.errstate(invalid="ignore"):
+            d = np.abs(x - y)
+        d[~(np.isfinite(x) & np.isfinite(y))] = np.inf
+        d[a[k] == b[k]] = 0.0
+        m = float(np.max(d)) if d.size else 0.0
+        if m > worst[1]:
+            worst = (k, m)
+    return worst
+
+
+def _ck_bitwise(a, b):
+    return set(a) == set(b) and all(
+        a[k].tobytes() == b[k].tobytes() for k in a)
+
+
+def check_smoke():
+    ok = True
+    with tempfile.TemporaryDirectory() as d:
+        res = _mp(_args(3, "--ckpt-dir", d, *MESH))
+        rcs = [r.returncode for r in res]
+        ok &= rcs == [0, 0]
+        if not ok:
+            for i, r in enumerate(res):
+                print(f"rank {i} rc {r.returncode}\n{r.stdout[-1500:]}"
+                      f"\n{r.stderr[-1500:]}")
+        lines = [_step_lines(r.stdout) for r in res]
+        same_logs = lines[0] == lines[1] and len(lines[0]) == 3
+        from repro.checkpoint import checkpoint as CK
+        latest = CK.latest_step(d)
+        verified = latest is not None and CK.verify_step(d, latest)
+        data, at = _load_ck(d)
+        rank_files = [f for f in os.listdir(d)
+                      if f.startswith(f"ckpt_{latest:08d}.rank")
+                      and f.endswith(".npz")]
+        print(f"rcs {rcs}; rank logs identical over 3 steps: {same_logs}; "
+              f"checkpoint at {latest} verified={verified} loads "
+              f"{len(data)} arrays from {len(rank_files)} rank files")
+        ok &= same_logs and verified and at == latest and len(rank_files) == 2
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_parity():
+    ok = True
+    with tempfile.TemporaryDirectory() as d_mp, \
+            tempfile.TemporaryDirectory() as d_sp:
+        res = _mp(_args(3, "--ckpt-dir", d_mp, *MESH))
+        sp = _sp(_args(3, "--ckpt-dir", d_sp, *MESH))
+        rcs = [r.returncode for r in res] + [sp.returncode]
+        ok &= rcs == [0, 0, 0]
+        if not ok:
+            print(res[0].stdout[-1500:], res[0].stderr[-1500:])
+            print(sp.stdout[-1500:], sp.stderr[-1500:])
+            print("FAIL")
+            return False
+
+        m_mp = _step_metrics(res[0].stdout)
+        m_sp = _step_metrics(sp.stdout)
+        dlog = max(abs(a[k] - b[k]) for a, b in zip(m_mp, m_sp)
+                   for k in ("loss", "loss_value", "tau", "u_mean"))
+        print(f"per-step logged metrics (3 steps): max diff {dlog:.2e} "
+              f"(tol 1e-3)")
+        ok &= len(m_mp) == len(m_sp) == 3 and dlog < 1e-3
+
+        ck_mp, at_mp = _load_ck(d_mp)
+        ck_sp, at_sp = _load_ck(d_sp)
+        keys_match = set(ck_mp) == set(ck_sp)
+        key, d = _ck_maxdiff(ck_mp, ck_sp)
+        print(f"final checkpoints (step {at_mp}/{at_sp}): "
+              f"{len(ck_mp)} arrays, key sets match: {keys_match}, "
+              f"max diff {d:.2e} at {key!r} (tol 5e-3)")
+        ok &= keys_match and at_mp == at_sp and d < 5e-3
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+def check_kill_resume():
+    from repro.checkpoint import checkpoint as CK
+    ok = True
+    with tempfile.TemporaryDirectory() as d0, \
+            tempfile.TemporaryDirectory() as d1:
+        oracle = _mp(_args(8, "--ckpt-dir", d0, *MESH))
+        ok &= [r.returncode for r in oracle] == [0, 0]
+
+        killed = _mp(_args(8, "--ckpt-dir", d1, "--chaos", "kill@5",
+                           *MESH))
+        kill_rcs = [r.returncode for r in killed]
+        was_killed = all(rc == -signal.SIGKILL for rc in kill_rcs)
+        latest = CK.latest_step(d1)
+        verified = latest is not None and CK.verify_step(d1, latest)
+        print(f"kill@5: rcs {kill_rcs} (want SIGKILL both ranks); "
+              f"latest {latest} (want 4) verified={verified}")
+        ok &= was_killed and latest == 4 and verified
+
+        resumed = _mp(_args(8, "--ckpt-dir", d1, "--resume", *MESH))
+        rcs = [r.returncode for r in resumed]
+        ok &= rcs == [0, 0]
+        if rcs != [0, 0]:
+            print(resumed[0].stdout[-1500:], resumed[0].stderr[-1500:])
+            print(resumed[1].stdout[-1500:], resumed[1].stderr[-1500:])
+        resumed_from = "resumed from step 4" in resumed[0].stdout
+
+        ck_o, at_o = _load_ck(d0, 8)
+        ck_r, at_r = _load_ck(d1, 8)
+        keys_match = set(ck_o) == set(ck_r)
+        # integer leaves (step counters) must survive the kill/resume
+        # loop bitwise; floats to the collective-runtime tolerance (see
+        # module docstring)
+        int_keys = [k for k in ck_o
+                    if np.issubdtype(ck_o[k].dtype, np.integer)]
+        int_bit = all(ck_o[k].tobytes() == ck_r[k].tobytes()
+                      for k in int_keys)
+        key, d = _ck_maxdiff(ck_o, ck_r)
+        print(f"resume rcs {rcs}, resumed-from-4 logged: {resumed_from}; "
+              f"final step-8 checkpoint vs uninterrupted 2-proc run: "
+              f"{len(int_keys)} integer leaves bitwise: {int_bit}, float "
+              f"max diff {d:.2e} at {key!r} (tol 1e-2)")
+        ok &= resumed_from and at_o == at_r == 8 and keys_match
+        ok &= int_bit and d < 1e-2
+    print("PASS" if ok else "FAIL")
+    return ok
+
+
+CHECKS = {
+    "smoke": check_smoke,
+    "parity": check_parity,
+    "kill_resume": check_kill_resume,
+}
+
+if __name__ == "__main__":
+    sys.exit(0 if CHECKS[sys.argv[1]]() else 1)
